@@ -1,0 +1,34 @@
+"""Shared benchmark utilities.
+
+Measured numbers on this box are CPU wall-times — meaningful for RATIOS
+(GraVF vs GraVF-M, scaling trends, partitioner quality), not absolute
+TEPS. Absolute projections come from the §5 performance model
+(core/perfmodel.py with the paper's platform constants) and from the
+dry-run roofline (experiments/dryrun). Engine benchmarks use the jnp
+backend: interpret-mode Pallas is a correctness vehicle, not a timing one.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_call(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time of fn() in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]

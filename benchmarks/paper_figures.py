@@ -1,0 +1,162 @@
+"""One benchmark per paper table/figure (see DESIGN.md §11 index).
+
+Each function prints CSV rows ``name,us_per_call,derived`` where derived
+carries the figure's headline quantity (speedup, MTEPS ratio, imbalance,
+modeled GTEPS, ...).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import algorithms as ALG
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core import perfmodel as pm
+from repro.core.engine import Engine
+
+from .common import emit, time_call
+
+
+def _run(kernel, pg, mode, **kw):
+    eng = Engine(kernel, pg, mode=mode, backend="ref", **kw)
+    res = eng.run()
+    return eng, res
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — multi-node scaling, GraVF vs GraVF-M
+# ---------------------------------------------------------------------------
+
+def fig7_scaling():
+    g = G.uniform(4096, 16.0, seed=0).symmetrized()
+    for algo_name, kfn in (("bfs", lambda: ALG.bfs(0)),
+                           ("wcc", ALG.wcc),
+                           ("pagerank", lambda: ALG.pagerank(10))):
+        for p in (1, 2, 4):
+            pg = PT.partition_graph(g, p, method="greedy", pad_multiple=32)
+            for mode in ("gravf", "gravfm"):
+                eng, res = _run(kfn(), pg, mode)
+                us = time_call(lambda: eng.run(), warmup=1, iters=3)
+                mteps = res.messages / us  # messages per microsecond
+                emit(f"fig7/{algo_name}/{mode}/p{p}", us,
+                     f"mteps_cpu={mteps:.2f};msgs={res.messages}")
+        # the paper's headline: modeled 4-node speedup GraVF-M/GraVF
+        wl = pm.Workload(g.num_vertices, g.num_edges)
+        a = pm.PAPER_ALGOS.get(algo_name, pm.PAPER_ALGOS["wcc"])
+        m = pm.limits(pm.PAPER_PLATFORM, a, wl, n_nodes=4, mode="gravfm")
+        b = pm.limits(pm.PAPER_PLATFORM, a, wl, n_nodes=4, mode="gravf")
+        emit(f"fig7/{algo_name}/model_speedup_4node", 0.0,
+             f"{m['T_sys'] / b['T_sys']:.2f}x"
+             f";paper_range=2.2-2.8x")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 — single-node GraVF vs GraVF-M
+# ---------------------------------------------------------------------------
+
+def fig8_single_node():
+    g = G.uniform(4096, 16.0, seed=1).symmetrized()
+    pg = PT.partition_graph(g, 1, pad_multiple=32)
+    for algo_name, kfn in (("bfs", lambda: ALG.bfs(0)), ("wcc", ALG.wcc)):
+        rows = {}
+        for mode in ("gravf", "gravfm"):
+            eng, res = _run(kfn(), pg, mode)
+            rows[mode] = time_call(lambda: eng.run(), iters=3)
+        emit(f"fig8/{algo_name}/single_node", rows["gravfm"],
+             f"gravf_us={rows['gravf']:.0f};"
+             f"ratio={rows['gravfm'] / rows['gravf']:.2f}"
+             f";paper=GraVF_faster_on_1node")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 — effect of average degree
+# ---------------------------------------------------------------------------
+
+def fig9_degree():
+    wl_v = 2048
+    for deg in (2, 8, 32, 64):
+        g = G.uniform(wl_v, float(deg), seed=2).symmetrized()
+        pg = PT.partition_graph(g, 4, method="greedy", pad_multiple=32)
+        eng, res = _run(ALG.wcc(), pg, "gravfm")
+        us = time_call(lambda: eng.run(), iters=3)
+        # measured broadcast advantage grows with degree (paper Fig. 9)
+        adv = res.comm["unicast_words"] / max(
+            res.comm["bcast_filtered_words"], 1)
+        wl = pm.Workload(g.num_vertices, g.num_edges)
+        lif = pm.limits(pm.PAPER_PLATFORM, pm.PAPER_ALGOS["wcc"], wl,
+                        n_nodes=4)["L_if"]
+        emit(f"fig9/wcc/deg{deg}", us,
+             f"bcast_advantage={adv:.2f};model_L_if_GTEPS={lif / 1e9:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 10/11 — latency (ladder graphs)
+# ---------------------------------------------------------------------------
+
+def fig11_latency():
+    total_v = 2048
+    for w, d in ((512, 4), (128, 16), (32, 64), (8, 256)):
+        g = G.ladder(w, d, 3, seed=3)
+        pg = PT.partition_graph(g, 4, pad_multiple=16)
+        eng, res = _run(ALG.bfs(0), pg, "gravfm")
+        us = time_call(lambda: eng.run(), iters=2)
+        per_ss = us / max(res.supersteps, 1)
+        emit(f"fig11/bfs/w{w}_d{d}", us,
+             f"supersteps={res.supersteps};us_per_superstep={per_ss:.1f}")
+    # w=1 line graph: pure synchronization latency (paper: 676 cyc/ss)
+    g = G.line(256)
+    pg = PT.partition_graph(g, 4, pad_multiple=16)
+    eng, res = _run(ALG.bfs(0), pg, "gravfm")
+    us = time_call(lambda: eng.run(), iters=2)
+    emit("fig11/bfs/line256", us,
+         f"us_per_superstep={us / max(res.supersteps, 1):.1f}"
+         f";supersteps={res.supersteps}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 12/13 — partitioning strategies
+# ---------------------------------------------------------------------------
+
+def fig12_partitioning():
+    g = G.rmat(12, 8, seed=4)
+    for method in ("round_robin", "greedy", "snake_lpt", "ldg"):
+        pg = PT.partition_graph(g, 8, method=method, pad_multiple=32)
+        bal = PT.edge_balance(pg)
+        eng, res = _run(ALG.wcc(), pg, "gravfm")
+        us = time_call(lambda: eng.run(), iters=2)
+        emit(f"fig12/wcc/{method}", us,
+             f"max_over_mean={bal['max_over_mean']:.3f};"
+             f"cross_frac={bal['cross_frac']:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 2 — platform constants (model echo)
+# ---------------------------------------------------------------------------
+
+def table2_network():
+    p = pm.PAPER_PLATFORM
+    emit("table2/paper_bw_if", 0.0,
+         f"{p.bw_if / 1024 ** 3:.1f}GiB/s;send={p.bw_if / 2 / 1024 ** 3:.2f}"
+         f";paper_4fpga_send=5.85GiB/s")
+    t = pm.TPU_V5E
+    emit("table2/tpu_profile", 0.0,
+         f"hbm={t.bw_mem / 1e9:.0f}GB/s;ici={t.bw_if / 1e9:.0f}GB/s"
+         f";peak_bf16=197TFLOPs")
+
+
+# ---------------------------------------------------------------------------
+# Table 3 — comparison vs ForeGraph (model projection)
+# ---------------------------------------------------------------------------
+
+def table3_comparison():
+    foregraph = {"pagerank": 1856e6, "bfs": 1458e6, "wcc": 1727e6}
+    paper = {"pagerank": 4623e6, "bfs": 5493e6, "wcc": 5791e6}
+    wl = pm.Workload(2 ** 21, 32 * 2 ** 21)
+    for algo in ("pagerank", "bfs", "wcc"):
+        lim = pm.limits(pm.PAPER_PLATFORM, pm.PAPER_ALGOS[algo], wl,
+                        n_nodes=4, mode="gravfm")
+        emit(f"table3/{algo}", 0.0,
+             f"model_T_sys_MTEPS={lim['T_sys'] / 1e6:.0f};"
+             f"paper_MTEPS={paper[algo] / 1e6:.0f};"
+             f"foregraph_MTEPS={foregraph[algo] / 1e6:.0f};"
+             f"paper_vs_model={paper[algo] / lim['T_sys']:.2%}")

@@ -1,0 +1,42 @@
+"""Roofline summary: reads the dry-run artifacts (experiments/dryrun) and
+prints the per-(arch x shape x mesh) table for EXPERIMENTS.md §Roofline.
+
+Run after ``python -m repro.launch.dryrun --all``. Falls back to a note if
+no artifacts exist (the sweep is a separate, longer job)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def roofline_table():
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    files = [f for f in files if not f.endswith("summary.json")]
+    if not files:
+        emit("roofline/missing", 0.0,
+             f"no dry-run artifacts in {DRYRUN_DIR}; run "
+             "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    for f in files:
+        with open(f) as fh:
+            c = json.load(fh)
+        if c.get("status") != "ok":
+            emit(f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}", 0.0,
+                 f"status={c.get('status')};reason={c.get('reason', '')[:60]}")
+            continue
+        r = c["roofline"]
+        extra = (f";teps_bound={c['teps_bound']:.3e}"
+                 if "teps_bound" in c else
+                 f";fits={c.get('fits_hbm', '-')}")
+        emit(f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+             r["roofline_step_s"] * 1e6,
+             f"bound={r['bound_by']};"
+             f"tc={r['t_compute_s']:.4f};tm={r['t_memory_s']:.4f};"
+             f"tn={r['t_collective_s']:.4f};"
+             f"useful={r['useful_flop_ratio']:.3f};"
+             f"mfu_bound={r['mfu_bound']:.4f}" + extra)

@@ -1,0 +1,39 @@
+"""Benchmark harness — one function per paper table/figure plus substrate
+micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig7 fig12 # subset by prefix
+"""
+import sys
+
+from . import paper_figures as PF
+from . import roofline_table as RT
+from . import substrate as SUB
+
+ALL = {
+    "fig7": PF.fig7_scaling,
+    "fig8": PF.fig8_single_node,
+    "fig9": PF.fig9_degree,
+    "fig11": PF.fig11_latency,
+    "fig12": PF.fig12_partitioning,
+    "table2": PF.table2_network,
+    "table3": PF.table3_comparison,
+    "layout": SUB.kernel_layout_overhead,
+    "train": SUB.lm_train_throughput,
+    "compress": SUB.compression_wire,
+    "frontier": SUB.frontier_vs_dense_words,
+    "roofline": RT.roofline_table,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:]
+    print("name,us_per_call,derived")
+    for key, fn in ALL.items():
+        if wanted and not any(key.startswith(w) for w in wanted):
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Substrate micro-benchmarks beyond the paper's tables: kernel layout
+quality, LM train-step throughput on reduced configs, gradient
+compression wire model, exchange-schedule comparison."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import algorithms as ALG
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core.engine import Engine
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.kernels.layout import build_layout
+from repro.models import layers as L
+from repro.models import lm as LM
+from repro.train import compress as CMP
+from repro.train.loop import make_train_step
+from repro.train.optimizer import AdamWConfig, adamw_init
+
+from .common import emit, time_call
+
+
+def kernel_layout_overhead():
+    """Padding overhead of the Pallas tile layout across graph families
+    (the §5.4 granularity term analogue)."""
+    for name, g in (("uniform16", G.uniform(4096, 16.0, seed=0)),
+                    ("rmat8", G.rmat(12, 8, seed=0)),
+                    ("road", G.road(64, seed=0))):
+        pg = PT.partition_graph(g, 4, pad_multiple=32)
+        seg = (np.arange(4)[:, None] * (pg.v_max + 1)
+               + pg.in_dst_local).reshape(-1)
+        lo = build_layout(np.sort(seg), 4 * (pg.v_max + 1),
+                          tile_e=512, tile_r=256)
+        emit(f"layout/{name}", 0.0,
+             f"pad_overhead={lo.pad_overhead:.3f};tiles={lo.n_tiles}")
+
+
+def lm_train_throughput():
+    """Reduced-config train-step wall time for three representative
+    architectures (dense / MoE / recurrent)."""
+    for arch in ("qwen3-4b", "deepseek-moe-16b", "xlstm-350m"):
+        cfg = configs.get(arch, reduced=True)
+        params = L.init_params(jax.random.PRNGKey(0), LM.lm_spec(cfg))
+        opt = adamw_init(params)
+        dc = DataConfig(vocab=cfg.vocab, global_batch=4, seq_len=64)
+        batch = SyntheticTokens(dc).batch(0)
+        if cfg.family == "vlm":
+            continue
+        step = jax.jit(make_train_step(cfg, AdamWConfig()))
+        s = jnp.int32(0)
+        out = step(params, opt, batch, s)  # compile+run
+        jax.block_until_ready(out[2]["loss"])
+
+        def call():
+            r = step(params, opt, batch, s)
+            jax.block_until_ready(r[2]["loss"])
+        us = time_call(call, warmup=1, iters=3)
+        toks = dc.global_batch * dc.seq_len
+        emit(f"substrate/train_step/{arch}", us,
+             f"tokens_per_s_cpu={toks / (us / 1e6):.0f}")
+
+
+def compression_wire():
+    for n in (10 ** 6, 10 ** 8):
+        wb = CMP.wire_bytes(n)
+        emit(f"substrate/grad_compress/n{n}", 0.0,
+             f"f32_bytes={wb['f32_psum']};int8_bytes={wb['int8_allgather']};"
+             f"ratio={wb['ratio']:.2f}x")
+
+
+def frontier_vs_dense_words():
+    """Beyond-paper: frontier-compressed exchange vs dense broadcast on a
+    sparse-frontier BFS (measured words, global engine counters)."""
+    g = G.ladder(16, 128, 2, seed=1)
+    pg = PT.partition_graph(g, 4, pad_multiple=16)
+    eng, = (Engine(ALG.bfs(0), pg, mode="gravfm", backend="ref"),)
+    res = eng.run()
+    dense_words = res.comm["bcast_naive_words"]
+    filt_words = res.comm["bcast_filtered_words"]
+    emit("substrate/frontier_bfs", 0.0,
+         f"naive_words={dense_words:.0f};filtered_words={filt_words:.0f};"
+         f"reduction={dense_words / max(filt_words, 1):.2f}x")

@@ -1,0 +1,25 @@
+"""Serving demo: batched prefill + greedy decode with KV caches for a
+dense arch and O(1)-state decode for a recurrent arch.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+import jax
+
+from repro import configs
+from repro.models import layers as L
+from repro.models import lm as LM
+from repro.serve.engine import greedy_generate
+
+def main():
+    rng = np.random.default_rng(0)
+    for arch in ("qwen3-4b", "xlstm-350m", "gemma3-27b"):
+        cfg = configs.get(arch, reduced=True)
+        params = L.init_params(jax.random.PRNGKey(0), LM.lm_spec(cfg))
+        prompts = rng.integers(1, cfg.vocab, (4, 16)).astype(np.int32)
+        out = greedy_generate(cfg, params, prompts, num_new=12)
+        print(f"{arch:12s} generated {out.shape[1]} tokens/request "
+              f"batch={out.shape[0]}; sample row: {out[0][:8]}")
+
+if __name__ == "__main__":
+    main()

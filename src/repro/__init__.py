@@ -1,0 +1,13 @@
+"""GraVF-M on TPU: distributed vertex-centric graph processing in JAX,
+plus the production LM substrate for the assigned architecture pool.
+
+Layout:
+  core/     the paper's contribution (engine, partitioners, perf model)
+  kernels/  Pallas edge-traversal kernels (+ jnp oracles)
+  models/   assigned LM architectures
+  configs/  --arch registry (10 archs x 4 shapes)
+  train/    optimizer, loop, checkpointing, compression
+  serve/    prefill/decode engine
+  data/     deterministic synthetic pipeline
+  launch/   mesh, multi-pod dry-run, train CLI
+"""

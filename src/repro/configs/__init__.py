@@ -1,0 +1,34 @@
+"""Assigned-architecture registry: ``--arch <id>`` resolves here.
+
+10 LM-family architectures (each with full + reduced configs) plus the
+paper's own graph workloads (graph_workloads.py)."""
+from __future__ import annotations
+
+from importlib import import_module
+from typing import Dict
+
+from .common import SHAPES, Shape, input_specs, shape_applicable
+
+_MODULES = {
+    "xlstm-350m": "xlstm_350m",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen3-4b": "qwen3_4b",
+    "qwen2-72b": "qwen2_72b",
+    "gemma3-27b": "gemma3_27b",
+    "minitron-4b": "minitron_4b",
+    "internvl2-76b": "internvl2_76b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get(name: str, *, reduced: bool = False):
+    mod = import_module(f".{_MODULES[name]}", __package__)
+    return mod.reduced() if reduced else mod.config()
+
+
+def all_configs(reduced: bool = False) -> Dict[str, object]:
+    return {n: get(n, reduced=reduced) for n in ARCH_IDS}

@@ -1,0 +1,20 @@
+"""GraVF-M core: the paper's contribution as a composable JAX module.
+
+- ``graph``      : datasets/generators (paper §6.2).
+- ``partition``  : §4.4 partitioners + Fig. 4 edge layouts.
+- ``gas``        : §3 three-stage programming model.
+- ``algorithms`` : BFS / WCC / PageRank (+ SSSP, degree).
+- ``engine``     : §4 superstep executor (GraVF baseline + GraVF-M).
+- ``perfmodel``  : §5 analytical performance model.
+"""
+from . import algorithms, gas, graph, partition
+from .engine import Engine, EngineResult, collect
+from .gas import GasKernel
+from .graph import Graph
+from .partition import PartitionedGraph, partition_graph
+
+__all__ = [
+    "algorithms", "gas", "graph", "partition",
+    "Engine", "EngineResult", "collect", "GasKernel", "Graph",
+    "PartitionedGraph", "partition_graph",
+]

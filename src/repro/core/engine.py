@@ -1,0 +1,373 @@
+"""The GraVF-M superstep engine.
+
+Executes a :class:`GasKernel` over a :class:`PartitionedGraph` in either of
+the paper's two architectures (§4.1, Fig. 4):
+
+  mode="gravf"   — baseline: scatter runs at the SOURCE shard, per-edge
+                   messages are exchanged shard-to-shard (unicast; the
+                   axis-transpose below lowers to all_to_all when the shard
+                   axis is device-sharded).
+  mode="gravfm"  — the paper's contribution: apply emits ≤1 update per
+                   vertex; the per-shard update arrays are broadcast (the
+                   flat take below lowers to all_gather); scatter runs at
+                   the RECEIVER against its destination-partitioned edge
+                   list, and messages are generated on demand and consumed
+                   immediately (in VMEM, inside the Pallas kernel).
+
+The engine is written as a *global-array* program with an explicit leading
+shard axis: it runs unchanged on one CPU device (this container) and on a
+TPU mesh by sharding the leading axis (`launch/mesh.py` + jit shardings) —
+XLA SPMD then emits the all_gather / all_to_all named above. An explicit
+shard_map variant with a compute/communication-overlapped ring broadcast
+(the floating-barrier analogue) lives in `engine_shardmap.py`.
+
+Superstep loop semantics follow §4.3: apply runs on the initial state first
+("the barrier is injected into the apply modules to begin execution"), and
+distributed termination is the all-reduced "no shard sent updates" bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from .gas import GasKernel
+from .partition import PartitionedGraph
+
+__all__ = ["Engine", "EngineResult", "collect"]
+
+HARD_SUPERSTEP_CAP = 100_000
+
+
+class _GravfmData(NamedTuple):
+    vert_gid: jnp.ndarray       # (P, Vm) int32
+    vert_valid: jnp.ndarray     # (P, Vm) bool
+    out_deg: jnp.ndarray        # (P, Vm) int32
+    flt_cnt: jnp.ndarray        # (P, Vm) int32 remote shards w/ neighbors
+    src_slot: jnp.ndarray       # (L,) int32 lanes
+    src_gid: jnp.ndarray        # (L,) int32
+    src_outdeg: jnp.ndarray     # (L,) int32
+    w: jnp.ndarray              # (L,) f32
+    lane_valid: jnp.ndarray     # (L,) bool
+    lane_remote: jnp.ndarray    # (L,) bool: src shard != dst shard
+    seg: jnp.ndarray            # (L,) int32 clipped segment ids (carry path)
+
+
+class _GravfData(NamedTuple):
+    vert_gid: jnp.ndarray
+    vert_valid: jnp.ndarray
+    out_deg: jnp.ndarray
+    flt_cnt: jnp.ndarray
+    pair_src_local: jnp.ndarray    # (P, P, E2)
+    pair_src_gid: jnp.ndarray
+    pair_src_outdeg: jnp.ndarray
+    pair_w: jnp.ndarray
+    pair_valid: jnp.ndarray
+    recv_dst_local: jnp.ndarray    # (P, P, E2) static swapped dst locals
+
+
+@dataclasses.dataclass
+class EngineResult:
+    state: Dict[str, np.ndarray]   # per-vertex global arrays (V,)
+    supersteps: int
+    messages: int                  # traversed edges (paper's TEPS numerator)
+    comm: Dict[str, float]         # measured network words by scheme
+    raw_state: Any = None          # sharded (P, Vm) state pytree
+
+
+def collect(pg: PartitionedGraph, state) -> Dict[str, np.ndarray]:
+    """(P, Vm) shard layout -> (V,) global arrays."""
+    out = {}
+    for k, v in state.items():
+        v = np.asarray(v)
+        if v.ndim >= 2 and v.shape[:2] == (pg.num_parts, pg.v_max):
+            out[k] = v[pg.part_of, pg.local_of]
+        else:
+            out[k] = v
+    return out
+
+
+class Engine:
+    """Builds and runs the jitted superstep program for one (kernel, graph,
+    mode) triple — the analogue of the paper's RTL elaboration."""
+
+    def __init__(self, kernel: GasKernel, pg: PartitionedGraph, *,
+                 mode: str = "gravfm", backend: str = "pallas",
+                 tile_e: int = 512, tile_r: int = 256,
+                 params: Optional[Dict[str, Any]] = None):
+        assert mode in ("gravf", "gravfm")
+        assert backend in ("pallas", "ref")
+        self.kernel = kernel
+        self.pg = pg
+        self.mode = mode
+        self.backend = backend
+        self.params = dict(params or {})
+        self.params.setdefault("num_vertices", pg.num_vertices)
+
+        P, Vm = pg.num_parts, pg.v_max
+        self._P, self._Vm = P, Vm
+        # remote-shard neighbor count per vertex (paper's filter bitmap)
+        flt = pg.nbr_filter.copy()
+        flt[np.arange(pg.num_vertices), pg.part_of] = False
+        flt_cnt_g = flt.sum(axis=1).astype(np.int32)
+        flt_cnt = np.zeros((P, Vm), np.int32)
+        flt_cnt[pg.part_of, pg.local_of] = flt_cnt_g
+
+        if mode == "gravfm":
+            self._data = self._build_gravfm(flt_cnt, tile_e, tile_r)
+        else:
+            self._data = self._build_gravf(flt_cnt)
+
+        self._step = jax.jit(self._make_loop())
+
+    # ------------------------------------------------------------------
+    def _build_gravfm(self, flt_cnt, tile_e, tile_r) -> _GravfmData:
+        pg, P, Vm = self.pg, self._P, self._Vm
+        S = P * (Vm + 1)
+        seg_flat = (np.arange(P, dtype=np.int64)[:, None] * (Vm + 1)
+                    + pg.in_dst_local).reshape(-1)
+        valid_flat = pg.in_valid.reshape(-1)
+        # Padding edges already carry dst_local == Vm -> their segment is the
+        # shard's discard bin; the array stays sorted.
+        if self.backend == "pallas":
+            layout = kops.build_layout(seg_flat, S, tile_e=tile_e,
+                                       tile_r=tile_r)
+            self._layout = layout
+            place = layout.place
+            src_slot = place(pg.in_src_slot.reshape(-1), 0)
+            src_gid = place(pg.in_src_gid.reshape(-1), 0)
+            src_outdeg = place(pg.in_src_outdeg.reshape(-1), 1)
+            w = place(pg.in_w.reshape(-1), 0.0)
+            lane_valid = place(valid_flat, False) & layout.lane_valid
+            seg = place(seg_flat.astype(np.int32), S)
+        else:
+            self._layout = None
+            src_slot = pg.in_src_slot.reshape(-1)
+            src_gid = pg.in_src_gid.reshape(-1)
+            src_outdeg = pg.in_src_outdeg.reshape(-1)
+            w = pg.in_w.reshape(-1)
+            lane_valid = valid_flat
+            seg = seg_flat.astype(np.int32)
+        self._num_segments = S
+        # src shard of each lane vs owning shard of its segment
+        src_part = src_slot // Vm
+        dst_part = seg // (Vm + 1)
+        lane_remote = (src_part != dst_part) & lane_valid
+        return _GravfmData(
+            vert_gid=jnp.asarray(pg.vert_gid),
+            vert_valid=jnp.asarray(pg.vert_valid),
+            out_deg=jnp.asarray(pg.out_deg),
+            flt_cnt=jnp.asarray(flt_cnt),
+            src_slot=jnp.asarray(src_slot),
+            src_gid=jnp.asarray(src_gid),
+            src_outdeg=jnp.asarray(src_outdeg),
+            w=jnp.asarray(w),
+            lane_valid=jnp.asarray(lane_valid),
+            lane_remote=jnp.asarray(lane_remote),
+            seg=jnp.asarray(np.minimum(seg, S).astype(np.int32)),
+        )
+
+    def _build_gravf(self, flt_cnt) -> _GravfData:
+        pg = self.pg
+        return _GravfData(
+            vert_gid=jnp.asarray(pg.vert_gid),
+            vert_valid=jnp.asarray(pg.vert_valid),
+            out_deg=jnp.asarray(pg.out_deg),
+            flt_cnt=jnp.asarray(flt_cnt),
+            pair_src_local=jnp.asarray(pg.pair_src_local),
+            pair_src_gid=jnp.asarray(pg.pair_src_gid),
+            pair_src_outdeg=jnp.asarray(pg.pair_src_outdeg),
+            pair_w=jnp.asarray(pg.pair_w),
+            pair_valid=jnp.asarray(pg.pair_valid),
+            recv_dst_local=jnp.asarray(pg.pair_dst_local.swapaxes(0, 1)),
+        )
+
+    # ------------------------------------------------------------------
+    def _deliver_gravfm(self, data: _GravfmData, payload, active):
+        """Broadcast updates; receiver-side scatter + gather-combine."""
+        k, P, Vm = self.kernel, self._P, self._Vm
+        payload_flat = payload.reshape(P * Vm)
+        active_flat = active.reshape(P * Vm)
+        # THE broadcast: every shard reads every shard's updates (lowers to
+        # all_gather of the |V|-bounded update array under SPMD sharding).
+        vals = jnp.take(payload_flat, data.src_slot)
+        act = jnp.take(active_flat, data.src_slot) & data.lane_valid
+        msg = k.scatter(vals, data.w, data.src_gid, data.src_outdeg)
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+        masked = jnp.where(act, msg, ident)
+
+        if self.backend == "pallas":
+            acc_full = kops.segment_combine_layout(
+                masked, self._layout, k.combiner)
+        else:
+            acc_full = kref.segment_combine(
+                masked, data.seg, self._num_segments, k.combiner)
+        acc = acc_full.reshape(P, Vm + 1)[:, :Vm]
+
+        if k.got_from_identity:
+            got = acc != ident
+        else:
+            gv = jnp.where(act, 1, 0).astype(jnp.int32)
+            if self.backend == "pallas":
+                got_full = kops.segment_combine_layout(
+                    gv, self._layout, "max")
+            else:
+                got_full = kref.segment_combine(
+                    gv, data.seg, self._num_segments, "max")
+            got = got_full.reshape(P, Vm + 1)[:, :Vm] > 0
+
+        carry = None
+        if k.carry_dtype is not None:
+            cident = kops.identity_for("min", k.carry_dtype)
+            cvals = k.scatter_carry(vals, data.w, data.src_gid,
+                                    data.src_outdeg)
+            acc_at_lane = jnp.take(acc_full, jnp.minimum(
+                data.seg, self._num_segments - 1))
+            winner = act & (masked == acc_at_lane)
+            cmasked = jnp.where(winner, cvals, cident)
+            if self.backend == "pallas":
+                carry_full = kops.segment_combine_layout(
+                    cmasked, self._layout, "min")
+            else:
+                carry_full = kref.segment_combine(
+                    cmasked, data.seg, self._num_segments, "min")
+            carry = carry_full.reshape(P, Vm + 1)[:, :Vm]
+
+        n_msgs = jnp.sum(act.astype(jnp.int32))
+        n_remote_msgs = jnp.sum((act & data.lane_remote).astype(jnp.int32))
+        return acc, got, carry, n_msgs, n_remote_msgs
+
+    def _deliver_gravf(self, data: _GravfData, payload, active):
+        """Source-side scatter, unicast exchange (paper Fig. 4 left)."""
+        k, P, Vm = self.kernel, self._P, self._Vm
+        pe = jnp.broadcast_to(payload[:, None, :], (P, P, Vm))
+        ae = jnp.broadcast_to(active[:, None, :], (P, P, Vm))
+        vals = jnp.take_along_axis(pe, data.pair_src_local, axis=2)
+        act = jnp.take_along_axis(ae, data.pair_src_local, axis=2)
+        act = act & data.pair_valid
+        msg = k.scatter(vals, data.pair_w, data.pair_src_gid,
+                        data.pair_src_outdeg)
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+        masked = jnp.where(act, msg, ident)
+
+        # THE unicast exchange: shard-axis transpose (lowers to all_to_all).
+        recv = jnp.swapaxes(masked, 0, 1)
+        recv_act = jnp.swapaxes(act, 0, 1)
+        seg = (jnp.arange(P, dtype=jnp.int32)[:, None, None] * (Vm + 1)
+               + data.recv_dst_local)
+        S = P * (Vm + 1)
+        acc_full = kref.segment_combine(
+            recv.reshape(-1), seg.reshape(-1), S, k.combiner)
+        acc = acc_full.reshape(P, Vm + 1)[:, :Vm]
+
+        if k.got_from_identity:
+            got = acc != ident
+        else:
+            got_full = kref.segment_combine(
+                jnp.where(recv_act, 1, 0).astype(jnp.int32).reshape(-1),
+                seg.reshape(-1), S, "max")
+            got = got_full.reshape(P, Vm + 1)[:, :Vm] > 0
+
+        carry = None
+        if k.carry_dtype is not None:
+            cident = kops.identity_for("min", k.carry_dtype)
+            cvals = k.scatter_carry(vals, data.pair_w, data.pair_src_gid,
+                                    data.pair_src_outdeg)
+            crecv = jnp.swapaxes(jnp.where(act, cvals, cident), 0, 1)
+            acc_at_edge = jnp.take(
+                acc_full, jnp.minimum(seg.reshape(-1), S - 1)).reshape(seg.shape)
+            winner = recv_act & (recv == acc_at_edge)
+            cmasked = jnp.where(winner, crecv, cident)
+            carry_full = kref.segment_combine(
+                cmasked.reshape(-1), seg.reshape(-1), S, "min")
+            carry = carry_full.reshape(P, Vm + 1)[:, :Vm]
+
+        n_msgs = jnp.sum(act.astype(jnp.int32))
+        cross = ~jnp.eye(P, dtype=bool)[:, :, None]
+        n_remote = jnp.sum((act & cross).astype(jnp.int32))
+        return acc, got, carry, n_msgs, n_remote
+
+    # ------------------------------------------------------------------
+    def _make_loop(self):
+        k = self.kernel
+        deliver = (self._deliver_gravfm if self.mode == "gravfm"
+                   else self._deliver_gravf)
+        cap_default = k.max_supersteps or HARD_SUPERSTEP_CAP
+
+        def apply_masked(state, data, superstep):
+            state, payload, active = k.apply(state, data.vert_gid,
+                                             data.out_deg, superstep)
+            active = active & data.vert_valid
+            return state, payload, active
+
+        def loop(data, cap):
+            state = k.init_state(data.vert_gid, data.out_deg,
+                                 data.vert_valid, **self.params)
+            state, payload, active = apply_masked(state, data, 0)
+
+            stats0 = {
+                "messages": jnp.int32(0),
+                "unicast_words": jnp.float32(0.0),
+                "bcast_naive_words": jnp.float32(0.0),
+                "bcast_filtered_words": jnp.float32(0.0),
+            }
+
+            def cond(carry):
+                state, payload, active, s, stats = carry
+                return jnp.any(active) & (s < cap)
+
+            def body(carry):
+                state, payload, active, s, stats = carry
+                acc, got, carry_v, n_msgs, n_remote = deliver(
+                    data, payload, active)
+                if k.carry_dtype is not None:
+                    state = k.gather(state, acc, carry_v, got, s)
+                else:
+                    state = k.gather(state, acc, got, s)
+                n_act = jnp.sum(active.astype(jnp.int32))
+                n_flt = jnp.sum(jnp.where(active, data.flt_cnt, 0))
+                P = self._P
+                stats = {
+                    "messages": stats["messages"] + n_msgs,
+                    "unicast_words":
+                        stats["unicast_words"] + n_remote.astype(jnp.float32),
+                    "bcast_naive_words":
+                        stats["bcast_naive_words"]
+                        + (n_act * (P - 1)).astype(jnp.float32),
+                    "bcast_filtered_words":
+                        stats["bcast_filtered_words"]
+                        + n_flt.astype(jnp.float32),
+                }
+                state, payload, active = apply_masked(state, data, s + 1)
+                return (state, payload, active, s + 1, stats)
+
+            init = (state, payload, active, jnp.int32(0), stats0)
+            state, payload, active, s, stats = jax.lax.while_loop(
+                cond, body, init)
+            return state, s, stats
+
+        return loop
+
+    # ------------------------------------------------------------------
+    def run(self, max_supersteps: Optional[int] = None) -> EngineResult:
+        cap = max_supersteps or self.kernel.max_supersteps or HARD_SUPERSTEP_CAP
+        state, s, stats = self._step(self._data, jnp.int32(cap))
+        state = jax.tree.map(np.asarray, state)
+        comm_scheme = ("gravfm_broadcast" if self.mode == "gravfm"
+                       else "gravf_unicast")
+        comm = {kk: float(v) for kk, v in jax.tree.map(np.asarray,
+                                                       stats).items()}
+        comm["scheme"] = comm_scheme
+        return EngineResult(
+            state=collect(self.pg, state),
+            supersteps=int(s),
+            messages=int(stats["messages"]),
+            comm=comm,
+            raw_state=state,
+        )

@@ -1,0 +1,570 @@
+"""Explicit-collective (shard_map) variant of the GraVF-M engine.
+
+The global-array engine in ``engine.py`` relies on XLA SPMD to infer the
+collectives. This variant drives them explicitly, which is where the
+paper's architectural ideas become *schedulable*:
+
+  exchange="allgather"  — paper-faithful GraVF-M: one all_gather of the
+      per-shard update arrays per superstep (the broadcast of §4.1), then
+      receiver-side scatter+gather over the local dst-partitioned edges.
+
+  exchange="ring"       — the floating-barrier analogue (§4.3): the
+      broadcast is decomposed into P-1 ``ppermute`` hops around the mesh
+      ring. Each arriving chunk is scattered/gathered IMMEDIATELY while
+      the next hop is in flight, so transport overlaps compute and no
+      shard waits for a full-system barrier — different shards are
+      working on different "parts" of the superstep at any instant,
+      exactly the paper's floating barrier invariant (all messages of a
+      superstep are still folded before apply runs).
+
+  exchange="frontier"   — beyond-paper: the §4.3 neighbor-filter idea
+      taken further. Instead of the dense |V|/P update array, each shard
+      compacts its ACTIVE updates into a capacity-bounded (id, payload)
+      buffer; a one-scalar psum picks the smallest sufficient capacity
+      bucket per superstep (lax.switch over precompiled sizes) and only
+      that buffer is broadcast. Traffic tracks the live frontier the way
+      BFS/WCC actually behave, not |V|.
+
+  mode="gravf"          — baseline unicast: per-destination-shard message
+      blocks exchanged with one ``all_to_all`` per superstep (Fig. 4
+      left), gather at the receiver.
+
+All exchanges produce bit-identical states to ``engine.py`` (tested in a
+multi-device subprocess; see tests/test_engine_shardmap.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from .gas import GasKernel
+from .partition import PartitionedGraph
+
+__all__ = ["ShardEngine", "build_shard_data", "ShardData"]
+
+AXIS = "graph"
+
+
+class ShardData(NamedTuple):
+    """All arrays carry a leading shard axis sharded over mesh axis
+    ``graph``; inside shard_map each block is one shard's data."""
+    vert_gid: jnp.ndarray       # (P, Vm)
+    vert_valid: jnp.ndarray     # (P, Vm)
+    out_deg: jnp.ndarray        # (P, Vm)
+    flt_cnt: jnp.ndarray        # (P, Vm)
+    # CSC lanes in Pallas layout (allgather/frontier paths)
+    wid: jnp.ndarray            # (P, n_tiles)
+    rel: jnp.ndarray            # (P, L)
+    window_written: jnp.ndarray  # (P, n_windows)
+    src_slot: jnp.ndarray       # (P, L) global slot = part*Vm + local
+    src_gid: jnp.ndarray        # (P, L)
+    src_outdeg: jnp.ndarray     # (P, L)
+    w: jnp.ndarray              # (P, L)
+    lane_valid: jnp.ndarray     # (P, L)
+    seg: jnp.ndarray            # (P, L) local segment (dst_local; pad Vm)
+    # ring buckets: in-edges grouped by SOURCE shard (transposed pair layout)
+    rb_src_local: jnp.ndarray   # (P, P, E2)
+    rb_src_gid: jnp.ndarray
+    rb_src_outdeg: jnp.ndarray
+    rb_w: jnp.ndarray
+    rb_dst_local: jnp.ndarray
+    rb_valid: jnp.ndarray
+    # gravf unicast blocks (source-side layout)
+    pair_src_local: jnp.ndarray  # (P, P, E2)
+    pair_src_gid: jnp.ndarray
+    pair_src_outdeg: jnp.ndarray
+    pair_w: jnp.ndarray
+    pair_valid: jnp.ndarray
+    recv_dst_local: jnp.ndarray  # (P, P, E2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardMeta:
+    P: int
+    v_max: int
+    e_pair_max: int
+    n_tiles: int
+    n_windows: int
+    tile_e: int
+    tile_r: int
+    num_vertices: int
+    frontier_capacities: tuple = ()
+
+
+def _build_shard_layouts(pg: PartitionedGraph, tile_e: int, tile_r: int):
+    """Per-shard Pallas layouts padded to a common tile count (SPMD)."""
+    P, Vm = pg.num_parts, pg.v_max
+    S = Vm + 1
+    layouts = []
+    for p in range(P):
+        seg = pg.in_dst_local[p].astype(np.int64)
+        # sorted within shard by construction
+        layouts.append(kops.build_layout(seg, S, tile_e=tile_e,
+                                         tile_r=tile_r))
+    n_tiles = max(l.n_tiles for l in layouts)
+    n_windows = layouts[0].n_windows
+    L = n_tiles * tile_e
+
+    wid = np.zeros((P, n_tiles), np.int32)
+    rel = np.full((P, L), tile_r, np.int32)
+    written = np.zeros((P, n_windows), bool)
+    src_slot = np.zeros((P, L), np.int32)
+    src_gid = np.zeros((P, L), np.int32)
+    src_outdeg = np.ones((P, L), np.int32)
+    w = np.zeros((P, L), np.float32)
+    lane_valid = np.zeros((P, L), bool)
+    seg_l = np.full((P, L), Vm, np.int32)
+
+    for p, lo in enumerate(layouts):
+        nt, ll = lo.n_tiles, lo.num_lanes
+        wid[p, :nt] = lo.window_id
+        # pad tiles continue accumulating (identity) into the last window
+        wid[p, nt:] = lo.window_id[-1] if nt else 0
+        rel[p, :ll] = lo.rel
+        written[p] = lo.window_written
+        ev = pg.in_valid[p]
+        src_slot[p, :ll] = lo.place(pg.in_src_slot[p], 0)
+        src_gid[p, :ll] = lo.place(pg.in_src_gid[p], 0)
+        src_outdeg[p, :ll] = lo.place(pg.in_src_outdeg[p], 1)
+        w[p, :ll] = lo.place(pg.in_w[p], 0.0)
+        lane_valid[p, :ll] = lo.place(ev, False) & lo.lane_valid
+        seg_l[p, :ll] = lo.place(pg.in_dst_local[p], Vm)
+
+    return (dict(wid=wid, rel=rel, window_written=written,
+                 src_slot=src_slot, src_gid=src_gid, src_outdeg=src_outdeg,
+                 w=w, lane_valid=lane_valid, seg=seg_l),
+            n_tiles, n_windows)
+
+
+def build_shard_data(pg: PartitionedGraph, *, tile_e: int = 512,
+                     tile_r: int = 256) -> tuple:
+    """(ShardData of numpy arrays, ShardMeta)."""
+    P, Vm = pg.num_parts, pg.v_max
+    lanes, n_tiles, n_windows = _build_shard_layouts(pg, tile_e, tile_r)
+
+    flt = pg.nbr_filter.copy()
+    flt[np.arange(pg.num_vertices), pg.part_of] = False
+    flt_cnt = np.zeros((P, Vm), np.int32)
+    flt_cnt[pg.part_of, pg.local_of] = flt.sum(axis=1).astype(np.int32)
+
+    # ring buckets: shard p's in-edges grouped by source shard q =
+    # transpose of the pair (source-side) layout. src_local is local to q.
+    rb = dict(
+        rb_src_local=pg.pair_src_local.swapaxes(0, 1),
+        rb_src_gid=pg.pair_src_gid.swapaxes(0, 1),
+        rb_src_outdeg=pg.pair_src_outdeg.swapaxes(0, 1),
+        rb_w=pg.pair_w.swapaxes(0, 1),
+        rb_dst_local=pg.pair_dst_local.swapaxes(0, 1),
+        rb_valid=pg.pair_valid.swapaxes(0, 1),
+    )
+
+    data = ShardData(
+        vert_gid=pg.vert_gid, vert_valid=pg.vert_valid, out_deg=pg.out_deg,
+        flt_cnt=flt_cnt,
+        **{k: np.ascontiguousarray(v) for k, v in lanes.items()},
+        **{k: np.ascontiguousarray(v) for k, v in rb.items()},
+        pair_src_local=pg.pair_src_local, pair_src_gid=pg.pair_src_gid,
+        pair_src_outdeg=pg.pair_src_outdeg, pair_w=pg.pair_w,
+        pair_valid=pg.pair_valid,
+        recv_dst_local=pg.pair_dst_local.swapaxes(0, 1),
+    )
+    # frontier capacity buckets: powers of two up to Vm
+    caps = []
+    c = max(64, Vm // 16)
+    while c < Vm:
+        caps.append(c)
+        c *= 4
+    caps.append(Vm)
+    meta = ShardMeta(P=P, v_max=Vm, e_pair_max=pg.e_pair_max,
+                     n_tiles=n_tiles, n_windows=n_windows,
+                     tile_e=tile_e, tile_r=tile_r,
+                     num_vertices=pg.num_vertices,
+                     frontier_capacities=tuple(caps))
+    return data, meta
+
+
+def abstract_shard_data(meta: ShardMeta, mesh=None,
+                        exchange: str = "allgather") -> ShardData:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation). Fields
+    unused by the chosen exchange are None (pruned from the input
+    signature, so argument bytes reflect what that architecture loads)."""
+    P, Vm, E2 = meta.P, meta.v_max, meta.e_pair_max
+    Lf = meta.n_tiles * meta.tile_e
+    i32, f32, b = jnp.int32, jnp.float32, jnp.bool_
+
+    def sds(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    none6 = (None,) * 6
+    csc = exchange in ("allgather", "frontier")
+    ring = exchange == "ring"
+    uni = exchange == "unicast"
+    return ShardData(
+        vert_gid=sds((P, Vm), i32), vert_valid=sds((P, Vm), b),
+        out_deg=sds((P, Vm), i32), flt_cnt=sds((P, Vm), i32),
+        wid=sds((P, meta.n_tiles), i32) if csc else None,
+        rel=sds((P, Lf), i32) if csc else None,
+        window_written=sds((P, meta.n_windows), b) if csc else None,
+        src_slot=sds((P, Lf), i32) if csc else None,
+        src_gid=sds((P, Lf), i32) if csc else None,
+        src_outdeg=sds((P, Lf), i32) if csc else None,
+        w=sds((P, Lf), f32) if csc else None,
+        lane_valid=sds((P, Lf), b) if csc else None,
+        seg=sds((P, Lf), i32) if csc else None,
+        rb_src_local=sds((P, P, E2), i32) if ring else None,
+        rb_src_gid=sds((P, P, E2), i32) if ring else None,
+        rb_src_outdeg=sds((P, P, E2), i32) if ring else None,
+        rb_w=sds((P, P, E2), f32) if ring else None,
+        rb_dst_local=sds((P, P, E2), i32) if ring else None,
+        rb_valid=sds((P, P, E2), b) if ring else None,
+        pair_src_local=sds((P, P, E2), i32) if uni else None,
+        pair_src_gid=sds((P, P, E2), i32) if uni else None,
+        pair_src_outdeg=sds((P, P, E2), i32) if uni else None,
+        pair_w=sds((P, P, E2), f32) if uni else None,
+        pair_valid=sds((P, P, E2), b) if uni else None,
+        recv_dst_local=sds((P, P, E2), i32) if uni else None,
+    )
+
+
+class ShardEngine:
+    """shard_map execution of a GasKernel over a device mesh axis."""
+
+    def __init__(self, kernel: GasKernel, pg_or_meta, *,
+                 mesh: Mesh, exchange: str = "allgather",
+                 backend: str = "pallas",
+                 tile_e: int = 512, tile_r: int = 256,
+                 params: Optional[Dict[str, Any]] = None):
+        assert exchange in ("allgather", "ring", "frontier", "unicast")
+        self.kernel = kernel
+        self.mesh = mesh
+        self.exchange = exchange
+        self.backend = backend
+        self.params = dict(params or {})
+        if isinstance(pg_or_meta, PartitionedGraph):
+            self.pg = pg_or_meta
+            np_data, self.meta = build_shard_data(
+                pg_or_meta, tile_e=tile_e, tile_r=tile_r)
+            self.params.setdefault("num_vertices", pg_or_meta.num_vertices)
+            sharding = NamedSharding(mesh, P(AXIS))
+            self._data = jax.tree.map(
+                lambda a: jax.device_put(jnp.asarray(a), sharding), np_data)
+        else:
+            self.pg = None
+            self.meta = pg_or_meta
+            self._data = None
+        self.params.setdefault("num_vertices", self.meta.num_vertices)
+        self._interpret = jax.default_backend() != "tpu"
+
+    # ---------------- per-shard delivery kernels ----------------------
+    def _local_combine(self, masked, d, combiner):
+        """Per-shard segmented combine (Pallas kernel or jnp oracle)."""
+        k, m = self.kernel, self.meta
+        if self.backend == "pallas":
+            from ..kernels.edge_gather import segment_combine_pallas
+            out = segment_combine_pallas(
+                d.wid, d.rel, masked, combiner=combiner,
+                tile_e=m.tile_e, tile_r=m.tile_r, n_windows=m.n_windows,
+                interpret=self._interpret)
+            ident = kops.identity_for(combiner, masked.dtype)
+            written = jnp.repeat(d.window_written, m.tile_r,
+                                 total_repeat_length=m.n_windows * m.tile_r)
+            out = jnp.where(written, out, ident)
+            return out[: m.v_max + 1]
+        return kref.segment_combine(masked, d.seg, m.v_max + 1, combiner)
+
+    def _consume(self, d, payload_flat, active_flat):
+        """Receiver-side scatter+gather against the local CSC lanes given
+        the (already transported) flat update array."""
+        k, m = self.kernel, self.meta
+        vals = jnp.take(payload_flat, d.src_slot)
+        act = jnp.take(active_flat, d.src_slot) & d.lane_valid
+        msg = k.scatter(vals, d.w, d.src_gid, d.src_outdeg)
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+        masked = jnp.where(act, msg, ident)
+        acc = self._local_combine(masked, d, k.combiner)[: m.v_max]
+        if k.got_from_identity:
+            got = acc != ident
+        else:
+            gv = jnp.where(act, 1, 0).astype(jnp.int32)
+            got = self._local_combine(gv, d, "max")[: m.v_max] > 0
+        carry = None
+        if k.carry_dtype is not None:
+            cident = kops.identity_for("min", k.carry_dtype)
+            cvals = k.scatter_carry(vals, d.w, d.src_gid, d.src_outdeg)
+            acc_pad = jnp.concatenate(
+                [acc, jnp.full((1,), ident, acc.dtype)])
+            winner = act & (masked == jnp.take(
+                acc_pad, jnp.minimum(d.seg, m.v_max)))
+            cmasked = jnp.where(winner, cvals, cident)
+            carry = self._local_combine(cmasked, d, "min")[: m.v_max]
+        n_msgs = jnp.sum(act.astype(jnp.int32))
+        return acc, got, carry, n_msgs
+
+    # ---------------- exchanges ---------------------------------------
+    def _deliver_allgather(self, d, payload, active):
+        m = self.meta
+        upd = jax.lax.all_gather(payload, AXIS)          # (P, Vm)
+        act = jax.lax.all_gather(active, AXIS)
+        # actual wire: the DENSE padded update array goes to every peer
+        words = jnp.float32(m.v_max * (m.P - 1))
+        return (*self._consume(d, upd.reshape(-1), act.reshape(-1)), words)
+
+    def _deliver_frontier(self, d, payload, active):
+        """Compact ACTIVE updates to (id, payload) pairs; broadcast the
+        smallest sufficient capacity bucket."""
+        k, m = self.kernel, self.meta
+        me = jax.lax.axis_index(AXIS)
+        n_act = jnp.sum(active.astype(jnp.int32))
+        n_max = jax.lax.pmax(n_act, AXIS)
+        caps = m.frontier_capacities
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+
+        (idx,) = jnp.nonzero(active, size=m.v_max, fill_value=m.v_max)
+        drop = m.P * m.v_max  # out-of-bounds target -> dropped by scatter
+
+        def branch(cap):
+            def f(_):
+                ids = idx[:cap]                    # local active vertex ids
+                valid = ids < m.v_max
+                safe = jnp.minimum(ids, m.v_max - 1)
+                pay = jnp.take(payload, safe)
+                slots = me * m.v_max + safe
+                # broadcast the COMPACT (id, payload) buffer only
+                slots_all = jax.lax.all_gather(slots, AXIS).reshape(-1)
+                pay_all = jax.lax.all_gather(pay, AXIS).reshape(-1)
+                val_all = jax.lax.all_gather(valid, AXIS).reshape(-1)
+                tgt = jnp.where(val_all, slots_all, drop)
+                # each slot has a unique owner => plain scatter-set is exact
+                pf = jnp.full((m.P * m.v_max,), ident, pay_all.dtype)
+                pf = pf.at[tgt].set(pay_all, mode="drop")
+                af = jnp.zeros((m.P * m.v_max,), bool)
+                af = af.at[tgt].set(True, mode="drop")
+                # wire words actually moved: the padded buffer, id+payload
+                words = jnp.float32(cap * 2 * (m.P - 1))
+                return pf, af, words
+            return f
+
+        # smallest capacity bucket that fits the global max frontier
+        sel = jnp.searchsorted(jnp.asarray(caps), n_max)
+        sel = jnp.minimum(sel, len(caps) - 1)
+        pf, af, words = jax.lax.switch(sel, [branch(c) for c in caps],
+                                       operand=None)
+        return (*self._consume(d, pf, af), words)
+
+    def _deliver_ring(self, d, payload, active):
+        """P-hop ppermute ring; each arriving chunk is consumed against the
+        matching source-shard edge bucket while the next hop is in flight
+        (floating-barrier analogue)."""
+        k, m = self.kernel, self.meta
+        me = jax.lax.axis_index(AXIS)
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+        cident = (kops.identity_for("min", k.carry_dtype)
+                  if k.carry_dtype is not None else None)
+        perm = [(i, (i + 1) % m.P) for i in range(m.P)]
+
+        def combine(a, b):
+            if k.combiner == "add":
+                return a + b
+            return jnp.minimum(a, b) if k.combiner == "min" else jnp.maximum(a, b)
+
+        def bucket_consume(q, chunk_payload, chunk_active):
+            """Scatter+gather the edges whose SOURCE shard is q against the
+            chunk of q's updates currently held."""
+            b_src = d.rb_src_local[q]
+            vals = jnp.take(chunk_payload, b_src)
+            act = jnp.take(chunk_active, b_src) & d.rb_valid[q]
+            msg = k.scatter(vals, d.rb_w[q], d.rb_src_gid[q],
+                            d.rb_src_outdeg[q])
+            masked = jnp.where(act, msg, ident)
+            seg = d.rb_dst_local[q]
+            acc_q = kref.segment_combine(masked, seg, m.v_max, k.combiner)
+            gv = kref.segment_combine(
+                jnp.where(act, 1, 0).astype(jnp.int32), seg, m.v_max, "max")
+            car_q = None
+            if k.carry_dtype is not None:
+                cvals = k.scatter_carry(vals, d.rb_w[q], d.rb_src_gid[q],
+                                        d.rb_src_outdeg[q])
+                acc_pad = jnp.concatenate(
+                    [acc_q, jnp.full((1,), ident, acc_q.dtype)])
+                win = act & (masked == jnp.take(acc_pad,
+                                                jnp.minimum(seg, m.v_max)))
+                car_q = kref.segment_combine(
+                    jnp.where(win, cvals, cident), seg, m.v_max, "min")
+            return acc_q, gv > 0, car_q, jnp.sum(act.astype(jnp.int32))
+
+        def merge_carry(ckey, ccar, acc_q, car_q):
+            """Lexicographic fold of (key, carry) candidates."""
+            if k.combiner == "min":
+                better = acc_q < ckey
+            else:
+                better = acc_q > ckey
+            equal = acc_q == ckey
+            ccar = jnp.where(better, car_q,
+                             jnp.where(equal, jnp.minimum(ccar, car_q), ccar))
+            ckey = combine(ckey, acc_q)
+            return ckey, ccar
+
+        def body(i, st):
+            acc, got, n_msgs, chunk_p, chunk_a, ccar = st
+            q = (me - i) % m.P
+            acc_q, got_q, car_q, nm = bucket_consume(q, chunk_p, chunk_a)
+            if k.carry_dtype is not None:
+                acc, ccar = merge_carry(acc, ccar, acc_q, car_q)
+            else:
+                acc = combine(acc, acc_q)
+            got = got | got_q
+            n_msgs = n_msgs + nm
+            # next hop in flight while (in the compiled TPU schedule) the
+            # next bucket's compute proceeds
+            chunk_p = jax.lax.ppermute(chunk_p, AXIS, perm)
+            chunk_a = jax.lax.ppermute(chunk_a, AXIS, perm)
+            return acc, got, n_msgs, chunk_p, chunk_a, ccar
+
+        acc0 = jnp.full((m.v_max,), ident, k.msg_dtype)
+        got0 = jnp.zeros((m.v_max,), bool)
+        ccar0 = (jnp.full((m.v_max,), cident, k.carry_dtype)
+                 if k.carry_dtype is not None else jnp.int32(0))
+        st = (acc0, got0, jnp.int32(0), payload, active, ccar0)
+        st = jax.lax.fori_loop(0, m.P, body, st)
+        acc, got, n_msgs, _, _, ccar = st
+        carry = ccar if k.carry_dtype is not None else None
+        # ring moves the same dense bytes as allgather, in P-1 hops
+        words = jnp.float32(m.v_max * (m.P - 1))
+        return acc, got, carry, n_msgs, words
+
+    def _deliver_unicast(self, d, payload, active):
+        """GraVF baseline: source-side scatter + all_to_all blocks."""
+        k, m = self.kernel, self.meta
+        vals = jnp.take(payload, d.pair_src_local.reshape(-1)).reshape(
+            d.pair_src_local.shape)
+        act = jnp.take(active, d.pair_src_local.reshape(-1)).reshape(
+            d.pair_src_local.shape) & d.pair_valid
+        msg = k.scatter(vals, d.pair_w, d.pair_src_gid, d.pair_src_outdeg)
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+        masked = jnp.where(act, msg, ident)
+        recv = jax.lax.all_to_all(masked, AXIS, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        recv_act = jax.lax.all_to_all(act, AXIS, split_axis=0,
+                                      concat_axis=0, tiled=False)
+        seg = d.recv_dst_local
+        acc = kref.segment_combine(recv.reshape(-1), seg.reshape(-1),
+                                   m.v_max, k.combiner)
+        gv = kref.segment_combine(
+            jnp.where(recv_act, 1, 0).astype(jnp.int32).reshape(-1),
+            seg.reshape(-1), m.v_max, "max")
+        got = gv > 0
+        carry = None
+        if k.carry_dtype is not None:
+            cident = kops.identity_for("min", k.carry_dtype)
+            cvals = k.scatter_carry(vals, d.pair_w, d.pair_src_gid,
+                                    d.pair_src_outdeg)
+            crecv = jax.lax.all_to_all(jnp.where(act, cvals, cident), AXIS,
+                                       split_axis=0, concat_axis=0,
+                                       tiled=False)
+            acc_pad = jnp.concatenate([acc, jnp.full((1,), ident, acc.dtype)])
+            winner = recv_act & (recv == jnp.take(
+                acc_pad, jnp.minimum(seg, m.v_max)))
+            carry = kref.segment_combine(
+                jnp.where(winner, crecv, cident).reshape(-1),
+                seg.reshape(-1), m.v_max, "min")
+        n_msgs = jnp.sum(act.astype(jnp.int32))
+        # actual wire: all_to_all ships the PADDED per-pair blocks
+        words = jnp.float32(m.e_pair_max * (m.P - 1))
+        return acc, got, carry, n_msgs, words
+
+    # ---------------- superstep + loop ---------------------------------
+    def _shard_step(self, d: ShardData, payload, active, state, superstep):
+        k = self.kernel
+        deliver = {
+            "allgather": self._deliver_allgather,
+            "ring": self._deliver_ring,
+            "frontier": self._deliver_frontier,
+            "unicast": self._deliver_unicast,
+        }[self.exchange]
+        acc, got, carry, n_msgs, words = deliver(d, payload, active)
+        if k.carry_dtype is not None:
+            state = k.gather(state, acc, carry, got, superstep)
+        else:
+            state = k.gather(state, acc, got, superstep)
+        state, payload2, active2 = k.apply(state, d.vert_gid, d.out_deg,
+                                           superstep + 1)
+        active2 = active2 & d.vert_valid
+        return state, payload2, active2, n_msgs, words
+
+    def _make_run(self, cap: int):
+        k = self.kernel
+
+        def shard_fn(d: ShardData):
+            # shard_map blocks keep a size-1 leading (sharded) axis
+            d = jax.tree.map(lambda a: a[0], d)
+            state = k.init_state(d.vert_gid, d.out_deg, d.vert_valid,
+                                 **self.params)
+            state, payload, active = k.apply(state, d.vert_gid, d.out_deg, 0)
+            active = active & d.vert_valid
+
+            def cond(c):
+                _, _, active, s, _, _ = c
+                any_local = jnp.any(active)
+                # distributed termination: §4.3 barrier activity bit
+                any_global = jax.lax.pmax(any_local.astype(jnp.int32), AXIS)
+                return (any_global > 0) & (s < cap)
+
+            def body(c):
+                state, payload, active, s, msgs, words = c
+                state, payload, active, n, w_ = self._shard_step(
+                    d, payload, active, state, s)
+                return (state, payload, active, s + 1, msgs + n,
+                        words + w_)
+
+            init = (state, payload, active, jnp.int32(0), jnp.int32(0),
+                    jnp.float32(0.0))
+            state, payload, active, s, msgs, words = jax.lax.while_loop(
+                cond, body, init)
+            total_msgs = jax.lax.psum(msgs, AXIS)
+            total_words = jax.lax.psum(words, AXIS)
+            state = jax.tree.map(lambda a: a[None], state)  # re-add shard axis
+            return state, s, total_msgs, total_words
+
+        m = self.meta
+        in_specs = jax.tree.map(lambda _: P(AXIS), self._data,
+                                is_leaf=lambda x: x is None)
+        state_spec = P(AXIS)
+        fn = jax.shard_map(
+            shard_fn, mesh=self.mesh,
+            in_specs=(in_specs,),
+            out_specs=(state_spec, P(), P(), P()),
+            check_vma=False)
+        return jax.jit(fn)
+
+    def run(self, max_supersteps: Optional[int] = None):
+        cap = (max_supersteps or self.kernel.max_supersteps or 100_000)
+        fn = self._make_run(cap)
+        state, s, msgs, words = fn(self._data)
+        from .engine import collect
+        state_np = jax.tree.map(np.asarray, state)
+        return {
+            "state": collect(self.pg, state_np) if self.pg else state_np,
+            "supersteps": int(np.asarray(s)[0] if np.ndim(s) else s),
+            "messages": int(np.asarray(msgs).reshape(-1)[0]),
+            "exchange_words": float(np.asarray(words).reshape(-1)[0]),
+            "exchange": self.exchange,
+        }
+
+    # ---------------- dry-run hooks ------------------------------------
+    def superstep_fn(self):
+        """One full superstep (deliver + gather + apply) as a jittable fn
+        over (data, payload, active, state, superstep) — the unit that the
+        multi-pod dry-run lowers and the roofline analyses."""
+        def shard_fn(d, payload, active, state, superstep):
+            return self._shard_step(d, payload, active, state, superstep)
+
+        return shard_fn

@@ -1,0 +1,123 @@
+"""The GraVF-M three-stage programming model (paper §3).
+
+A graph algorithm is a :class:`GasKernel` — three small pure functions with
+fixed interfaces, the JAX counterpart of the paper's three Verilog modules:
+
+  gather  : called (logically once per message) to fold messages into
+            vertex state. As in all high-throughput vertex-centric systems
+            the fold must be a commutative monoid, so the engine
+            pre-aggregates messages per destination with ``combiner`` and
+            calls ``gather`` once per vertex with the combined value.
+  apply   : called once per vertex at the end of a superstep; reads the
+            final state and may issue ONE update (payload + active flag).
+            This ≤1-update-per-vertex bound is what makes the GraVF-M
+            broadcast optimization legal (paper §4.1).
+  scatter : called once per (update, out-edge) to finalize the message.
+            In GraVF-M the engine runs it at the RECEIVER, on demand.
+
+All functions are elementwise jnp code, vectorized by the engine over
+vertices/edges — the analogue of the paper's per-cycle hardware pipelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GasKernel", "COMBINER_IDENTITY", "segment_combine_ref"]
+
+State = Any  # pytree of (num_vertices,) arrays
+
+
+def _id_for(combiner: str, dtype) -> Any:
+    dt = jnp.dtype(dtype)
+    if combiner == "add":
+        return np.zeros((), dt)
+    if combiner == "min":
+        if jnp.issubdtype(dt, jnp.floating):
+            return np.array(np.inf, dt)
+        return np.array(jnp.iinfo(dt).max, dt)
+    if combiner == "max":
+        if jnp.issubdtype(dt, jnp.floating):
+            return np.array(-np.inf, dt)
+        return np.array(jnp.iinfo(dt).min, dt)
+    raise ValueError(f"unknown combiner {combiner}")
+
+
+COMBINER_IDENTITY = _id_for
+
+
+@dataclasses.dataclass(frozen=True)
+class GasKernel:
+    """A user graph algorithm.
+
+    Shapes (engine-side, per shard):
+      init_state(vert_gid, out_deg, valid, **params)      -> state pytree
+      apply(state, vert_gid, out_deg, superstep)           -> (state, payload, active)
+      scatter(payload, weight, src_gid, src_outdeg)        -> message value
+      gather(state, combined_msg, got_msg, superstep)      -> state
+
+    ``combiner`` ∈ {"min", "max", "add"} pre-aggregates messages per
+    destination vertex; ``msg_dtype`` is the message value dtype;
+    ``update_dtype`` the update payload dtype (usually identical — the
+    paper's m_update/m_message ratio, which enters the §5 model).
+    """
+
+    name: str
+    init_state: Callable[..., State]
+    apply: Callable[..., Any]
+    scatter: Callable[..., jnp.ndarray]
+    gather: Callable[..., State]
+    combiner: str
+    msg_dtype: Any
+    update_dtype: Any = None
+    max_supersteps: int = 0  # 0 = until quiescence
+    # Bit widths for the §5 performance model (paper's m_update/m_message).
+    update_bits: int = 32
+    message_bits: int = 32
+    # got = (combined != identity) is exact for this kernel (saves a
+    # reduction pass). All built-ins qualify; see engine._deliver_*.
+    got_from_identity: bool = True
+    # Optional argmin-style carried value: ``scatter_carry`` produces a
+    # second per-message value; among messages achieving the winning key the
+    # minimum carry is delivered (combiner must be min/max). gather then
+    # receives (combined_key, carry, got). Keeps payloads 32-bit without
+    # packing (SSSP uses this for parent pointers).
+    carry_dtype: Any = None
+    scatter_carry: Callable[..., jnp.ndarray] = None
+
+    @property
+    def identity(self):
+        return _id_for(self.combiner, self.msg_dtype)
+
+    def describe(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "combiner": self.combiner,
+            "msg_dtype": str(jnp.dtype(self.msg_dtype)),
+            "max_supersteps": self.max_supersteps,
+            "update_bits": self.update_bits,
+            "message_bits": self.message_bits,
+        }
+
+
+def segment_combine_ref(vals, seg_ids, num_segments: int, combiner: str):
+    """Pure-jnp oracle for per-destination message aggregation (the fused
+    receiver-side scatter+gather hot loop). ``seg_ids`` may contain
+    ``num_segments`` for padding lanes (routed to a discard bin)."""
+    import jax
+
+    n = num_segments + 1  # one discard bin for padding
+    if combiner == "add":
+        out = jax.ops.segment_sum(vals, seg_ids, num_segments=n)
+    elif combiner == "min":
+        out = jax.ops.segment_min(vals, seg_ids, num_segments=n)
+    elif combiner == "max":
+        out = jax.ops.segment_max(vals, seg_ids, num_segments=n)
+    else:
+        raise ValueError(combiner)
+    # segment_min/max produce the dtype identity for empty bins already;
+    # slice off the discard bin.
+    return out[:num_segments]

@@ -1,0 +1,204 @@
+"""The paper's §5 analytical performance model.
+
+T_sys = min(L_PE, L_mem, L_if, L_net)            (eq. 9)
+
+with
+  L_PE  = n_nodes * n_pe * f_clk / CPE           (eq. 1)
+  L_mem = n_nodes * BW_mem / m_edge              (eq. 2, + §5.4 access-
+          granularity refinement)
+  L_if  = BW_if/(2 m_update) * n/(n-1) * |E|/|V| (eq. 3, GraVF-M)
+        = BW_if/(2 m_message) * n^2/(n-1)        (eq. 4, GraVF)
+  L_net = BW_net/((n-1) m_update) * |E|/|V|      (eq. 6, GraVF-M)
+        = BW_net * n/((n-1) m_message)           (eq. 7, GraVF)
+
+speedup(GraVF-M / GraVF) = |E|/|V| * 1/n * m_update/m_message   (eq. 5/8)
+
+Two platform profiles ship with the model:
+  * ``PAPER_PLATFORM`` — the 4x Micron AC-510 (KU060 + HMC, PCIe backplane)
+    system of §6.1, with the experimentally measured constants (Table 2).
+    Used to validate the model against the paper's own published numbers.
+  * ``TPU_V5E`` — the adaptation target: one chip plays one "FPGA"
+    (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI). The PE-throughput
+    limit is re-derived from the VPU/MXU cost of the Pallas edge kernel
+    instead of a hardware pipeline CPE (see kernels/edge_gather.py):
+    the mask-expansion kernel does ~4 VPU lane-ops per (row, edge) pair,
+    so CPE ~= tile_r * 4 / (8*128) cycles/edge at f_clk ~= 0.94 GHz.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+__all__ = [
+    "Platform", "AlgoProfile", "Workload", "limits", "speedup_eq5",
+    "optimize", "PAPER_PLATFORM", "TPU_V5E", "PAPER_ALGOS", "tpu_algo",
+]
+
+GiB = 1024.0 ** 3
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    name: str
+    f_clk: float          # Hz
+    n_pe_max: int         # PEs per node the fabric fits
+    bw_mem: float         # bytes/s per node (edge storage interface)
+    bw_if: float          # bytes/s per node network interface (send+recv)
+    bw_network: float     # bytes/s total network
+    m_board: float        # bytes memory per node
+    m_memword: int        # bytes per memory access word (§5.4 granularity)
+    n_nodes_max: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoProfile:
+    name: str
+    cpe: float            # cycles per edge (paper §5.3, measured §6.1)
+    m_vertex: int         # bytes of vertex state
+    m_update: int         # bytes per update (incl. id/routing overhead)
+    m_message: int        # bytes per message
+    m_edge: int           # bytes per stored edge
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    num_vertices: int
+    num_edges: int
+
+    @property
+    def avg_degree(self) -> float:
+        return self.num_edges / max(1, self.num_vertices)
+
+
+# --- §6.1 evaluation platform: 4x AC-510 (KU060 + 4GB HMC), EX-750 PCIe --
+PAPER_PLATFORM = Platform(
+    name="4xAC-510 (paper §6.1)",
+    f_clk=187.5e6,
+    n_pe_max=9,
+    bw_mem=21.7 * GiB,          # GUPS-measured peak HMC bandwidth
+    bw_if=11.7 * GiB,           # Table 2 (send+recv; 5.85 GiB/s each way)
+    bw_network=23.4 * GiB,      # lower bound — never limiting (§6.1)
+    m_board=4 * GiB,
+    m_memword=16,               # HMC 128-bit access granularity
+    n_nodes_max=4,
+)
+
+# Paper §6.1: measured CPE per algorithm; §3 layouts give the data sizes
+# (updates/messages carry a 32-bit vertex id + payload on the wire).
+PAPER_ALGOS = {
+    "wcc": AlgoProfile("wcc", cpe=1.05, m_vertex=5, m_update=8, m_message=8,
+                       m_edge=8),
+    "bfs": AlgoProfile("bfs", cpe=1.10, m_vertex=5, m_update=8, m_message=8,
+                       m_edge=8),
+    "pagerank": AlgoProfile("pagerank", cpe=1.42, m_vertex=8, m_update=8,
+                            m_message=8, m_edge=8),
+}
+
+
+# --- Adaptation target: TPU v5e ----------------------------------------
+TPU_V5E = Platform(
+    name="TPU v5e pod",
+    f_clk=0.94e9,                # core clock
+    n_pe_max=8 * 128,            # VPU lanes play the PE role
+    bw_mem=819e9,                # HBM bytes/s per chip
+    bw_if=4 * 50e9,              # 4 ICI links/chip x ~50 GB/s
+    bw_network=256 * 2 * 50e9,   # bisection-ish for a 16x16 torus pod
+    m_board=16e9,                # HBM capacity per chip
+    m_memword=512,               # VMEM tile granularity (§5.4 analogue)
+    n_nodes_max=512,
+)
+
+
+def tpu_algo(name: str, *, tile_r: int = 256, ops_per_pair: float = 4.0,
+             mxu: bool = False, m_update: int = 8, m_message: int = 8,
+             m_vertex: int = 8, m_edge: int = 20) -> AlgoProfile:
+    """Derive a CPE for the Pallas edge kernel on TPU.
+
+    VPU path: each edge is tested against tile_r rows; ~ops_per_pair lane
+    ops each; 8x128 lanes/cycle -> CPE = tile_r*ops_per_pair/1024.
+    MXU path (one-hot matmul, add-semiring): 128x128 MACs/cycle/pass ->
+    CPE = tile_r/ (128*128/128) ... effectively tile_r/128 per 128-edge
+    group = tile_r/128/128 cycles/edge.
+    ``m_edge`` counts the per-lane static stream (slot, w, gid, outdeg,
+    rel) the kernel pulls through VMEM.
+    """
+    if mxu:
+        cpe = tile_r / (128.0 * 128.0)
+    else:
+        cpe = tile_r * ops_per_pair / (8.0 * 128.0)
+    return AlgoProfile(name=name, cpe=cpe, m_vertex=m_vertex,
+                       m_update=m_update, m_message=m_message, m_edge=m_edge)
+
+
+# ------------------------------------------------------------------------
+def limits(platform: Platform, algo: AlgoProfile, wl: Workload, *,
+           n_nodes: int, n_pe: Optional[int] = None, mode: str = "gravfm",
+           granularity: bool = False) -> Dict[str, float]:
+    """All four §5 limits (TEPS) + the binding constraint (eq. 9)."""
+    assert mode in ("gravf", "gravfm")
+    n_pe = platform.n_pe_max if n_pe is None else n_pe
+    deg = wl.avg_degree
+
+    l_pe = n_nodes * n_pe * platform.f_clk / algo.cpe                # eq. 1
+
+    if granularity:                                                   # §5.4
+        nv_ne = wl.num_vertices / max(1, wl.num_edges)
+        spread = min(1.0, nv_ne * n_pe)
+        eff_edge = algo.m_edge + spread * (platform.m_memword - algo.m_edge)
+        l_mem = n_nodes * platform.bw_mem / eff_edge
+    else:
+        l_mem = n_nodes * platform.bw_mem / algo.m_edge              # eq. 2
+
+    if n_nodes <= 1:
+        l_if = math.inf
+        l_net = math.inf
+    elif mode == "gravfm":
+        l_if = (platform.bw_if / (2 * algo.m_update)
+                * n_nodes / (n_nodes - 1) * deg)                      # eq. 3
+        l_net = (platform.bw_network / ((n_nodes - 1) * algo.m_update)
+                 * deg)                                               # eq. 6
+    else:
+        l_if = (platform.bw_if / (2 * algo.m_message)
+                * n_nodes ** 2 / (n_nodes - 1))                       # eq. 4
+        l_net = (platform.bw_network * n_nodes
+                 / ((n_nodes - 1) * algo.m_message))                  # eq. 7
+
+    t_sys = min(l_pe, l_mem, l_if, l_net)                             # eq. 9
+    bottleneck = min(
+        (("L_PE", l_pe), ("L_mem", l_mem), ("L_if", l_if), ("L_net", l_net)),
+        key=lambda kv: kv[1])[0]
+    return {"L_PE": l_pe, "L_mem": l_mem, "L_if": l_if, "L_net": l_net,
+            "T_sys": t_sys, "bottleneck": bottleneck}
+
+
+def speedup_eq5(algo: AlgoProfile, wl: Workload, n_nodes: int) -> float:
+    """eq. 5/8: GraVF-M over GraVF when network-limited. The §4.3 filter
+    guarantees >= 1 in practice; the raw model value may be < 1."""
+    return (wl.avg_degree / n_nodes) * (algo.m_update / algo.m_message)
+
+
+def min_nodes_for_memory(platform: Platform, algo: AlgoProfile,
+                         wl: Workload) -> int:
+    """§5.2: enough boards to host vertex state + edges."""
+    bytes_needed = (wl.num_vertices * algo.m_vertex
+                    + wl.num_edges * algo.m_edge)
+    return max(1, math.ceil(bytes_needed / platform.m_board))
+
+
+def optimize(platform: Platform, algo: AlgoProfile, wl: Workload, *,
+             mode: str = "gravfm") -> Dict[str, float]:
+    """§5.7: pick n_nodes maximizing T_sys (L_PE/L_mem rise with n, L_if/
+    L_net fall), then shrink n_pe to the throughput-preserving minimum
+    (power optimization)."""
+    lo = min_nodes_for_memory(platform, algo, wl)
+    best = None
+    for n in range(lo, platform.n_nodes_max + 1):
+        lim = limits(platform, algo, wl, n_nodes=n, mode=mode)
+        if best is None or lim["T_sys"] > best[1]["T_sys"]:
+            best = (n, lim)
+    n_nodes, lim = best
+    n_pe_needed = math.ceil(
+        lim["T_sys"] * algo.cpe / (n_nodes * platform.f_clk))
+    n_pe = min(platform.n_pe_max, max(1, n_pe_needed))
+    return {"n_nodes": n_nodes, "n_pe": n_pe, **lim}

@@ -1,0 +1,2 @@
+"""Deterministic restart-safe data pipeline."""
+from . import pipeline  # noqa: F401

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (edge traversal).
+
+``edge_gather``: fused receiver-side scatter+gather (semiring segment
+combine), ``ops``: jitted dispatch, ``ref``: pure-jnp oracles, ``layout``:
+static tile layout builder.
+"""
+from . import layout, ops, ref  # noqa: F401

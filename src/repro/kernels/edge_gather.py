@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused receiver-side scatter+gather edge traversal.
+
+This is the paper's compute hot-spot (its whole §5 model is in traversed
+edges/second), re-architected for the TPU memory hierarchy instead of
+ported from the FPGA pipeline:
+
+  * Edges arrive pre-sorted by destination segment (CSC order — a static
+    property of the partitioned graph, prepared once at load time like the
+    paper's per-PE edge lists).
+  * The edge stream is cut into fixed ``TILE_E``-edge tiles. Rows are
+    grouped into windows of ``TILE_R`` consecutive segments, and tiles are
+    padded so NO tile straddles a window boundary (static layout, see
+    ``layout.py``).
+  * Each grid step stages one (rel, vals) tile through VMEM (BlockSpec),
+    expands it against a broadcasted iota into a ``TILE_R x TILE_E``
+    equality mask — the VPU's 8x128 lanes play the role of the paper's
+    parallel PEs — and folds it into the window's partial with the
+    semiring combiner. Messages are produced and consumed entirely in
+    VMEM, never materialized to HBM: the exact TPU analogue of GraVF-M's
+    "generate messages on demand, immediately consumed by gather".
+  * Consecutive tiles of the same window hit the same output block, which
+    therefore stays resident in VMEM (sequential TPU grid); a
+    scalar-prefetched ``window_id`` array drives the output index_map —
+    this is the floating-barrier-flavoured part: the output block "floats"
+    forward only when the window changes, with no global flush.
+
+Semirings: add (PageRank), min (BFS/WCC/SSSP), max. ``interpret=True``
+executes the same kernel body on CPU for validation (this container).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["segment_combine_pallas"]
+
+
+def _identity_for(combiner: str, dtype):
+    """Combiner identity as a PYTHON scalar (weakly typed — safe to bake
+    into kernel bodies and jnp.where without forcing a dtype)."""
+    dt = jnp.dtype(dtype)
+    if combiner == "add":
+        return 0.0 if jnp.issubdtype(dt, jnp.floating) else 0
+    if combiner == "min":
+        return (float("inf") if jnp.issubdtype(dt, jnp.floating)
+                else int(jnp.iinfo(dt).max))
+    if combiner == "max":
+        return (float("-inf") if jnp.issubdtype(dt, jnp.floating)
+                else int(jnp.iinfo(dt).min))
+    raise ValueError(combiner)
+
+
+def _make_kernel(combiner: str, tile_e: int, tile_r: int, dtype):
+    ident = _identity_for(combiner, dtype)
+
+    def kern(wid_ref, rel_ref, vals_ref, out_ref):
+        t = pl.program_id(0)
+        wid = wid_ref[t]
+        prev = wid_ref[jnp.maximum(t - 1, 0)]
+        is_first = (t == 0) | (wid != prev)
+
+        rel = rel_ref[...]          # (tile_e,) int32 row-within-window
+        vals = vals_ref[...]        # (tile_e,) message values
+        # (tile_r, tile_e) equality mask vs broadcasted iota: each VPU row
+        # lane selects the messages destined for its vertex.
+        iota = jax.lax.broadcasted_iota(jnp.int32, (tile_r, tile_e), 0)
+        mask = iota == rel[None, :]
+        expanded = jnp.where(mask, vals[None, :], ident)
+        if combiner == "add":
+            part = jnp.sum(expanded, axis=1)
+        elif combiner == "min":
+            part = jnp.min(expanded, axis=1)
+        else:
+            part = jnp.max(expanded, axis=1)
+
+        @pl.when(is_first)
+        def _init():
+            out_ref[...] = part
+
+        @pl.when(jnp.logical_not(is_first))
+        def _accum():
+            if combiner == "add":
+                out_ref[...] = out_ref[...] + part
+            elif combiner == "min":
+                out_ref[...] = jnp.minimum(out_ref[...], part)
+            else:
+                out_ref[...] = jnp.maximum(out_ref[...], part)
+
+    return kern
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("combiner", "tile_e", "tile_r", "n_windows", "interpret"))
+def segment_combine_pallas(window_id, rel, vals, *, combiner: str,
+                           tile_e: int, tile_r: int, n_windows: int,
+                           interpret: bool = True):
+    """Run the edge-traversal kernel.
+
+    Args:
+      window_id: (n_tiles,) int32 — output window per tile (non-decreasing).
+      rel:       (n_tiles*tile_e,) int32 — row-within-window per edge lane;
+                 padding lanes hold ``tile_r`` (matches no row).
+      vals:      (n_tiles*tile_e,) message values (padding lanes hold the
+                 combiner identity).
+      n_windows: number of output windows; result is (n_windows*tile_r,).
+    """
+    n_tiles = window_id.shape[0]
+    assert rel.shape[0] == n_tiles * tile_e and vals.shape[0] == n_tiles * tile_e
+    kern = _make_kernel(combiner, tile_e, tile_r, vals.dtype)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_tiles,),
+            in_specs=[
+                pl.BlockSpec((tile_e,), lambda t, wid: (t,)),
+                pl.BlockSpec((tile_e,), lambda t, wid: (t,)),
+            ],
+            out_specs=pl.BlockSpec((tile_r,), lambda t, wid: (wid[t],)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_windows * tile_r,), vals.dtype),
+        interpret=interpret,
+    )(window_id, rel, vals)
+    return out

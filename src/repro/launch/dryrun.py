@@ -1,0 +1,442 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production meshes with ShapeDtypeStruct stand-ins
+(no allocation), record memory/cost/collective analyses for EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+      --shape train_4k --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --graph --exchange allgather
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system — the run exits nonzero.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import configs
+from .. import sharding as SH
+from ..configs.common import SHAPES, input_specs, shape_applicable
+from ..models import encdec as ED
+from ..models import layers as L
+from ..models import lm as LM
+from ..train.loop import make_train_step
+from ..train.optimizer import AdamWConfig, adamw_init
+from .mesh import make_graph_mesh, make_production_mesh
+from .roofline import model_flops, parse_collectives, roofline
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def _sds_with_sharding(abstract_tree, sharding_tree):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract_tree, sharding_tree)
+
+
+def _abstract_params(cfg, mesh):
+    if cfg.family == "encdec":
+        spec = ED.encdec_spec(cfg, cfg.n_enc, cfg.n_dec)
+    else:
+        spec = LM.lm_spec(cfg)
+    abstract = L.abstract_params(spec)
+    axes = L.axes_tree(spec)
+    shardings = SH.param_sharding_rules(mesh, abstract, axes)
+    return _sds_with_sharding(abstract, shardings), spec
+
+
+def active_param_count(cfg) -> int:
+    """Total params, with routed experts scaled by topk/n_routed."""
+    if cfg.family == "encdec":
+        spec = ED.encdec_spec(cfg, cfg.n_enc, cfg.n_dec)
+    else:
+        spec = LM.lm_spec(cfg)
+    total = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(
+            spec, is_leaf=lambda x: isinstance(x, L.PSpec))[0]:
+        n = int(np.prod(s.shape))
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if cfg.moe and any(k.startswith("we_") for k in keys):
+            n = n * cfg.moe.topk // cfg.moe.n_routed
+        total += n
+    return total
+
+
+def _batch_sharded(cfg, mesh, shape):
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if v.ndim == 0:
+            spec = SH.spec(mesh)
+        else:
+            logical = ["batch"] + [None] * (v.ndim - 1)
+            out_spec = SH.logical_to_spec(mesh, logical, v.shape)
+            spec = jax.sharding.NamedSharding(mesh, out_spec)
+        out[k] = jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=spec)
+    return out
+
+
+def _cache_sharded(cfg, mesh, shape):
+    B, S = shape.global_batch, shape.seq_len
+    dp = SH.axis_size(mesh, SH.batch_axes(mesh)) if SH.batch_axes(mesh) else 1
+    seq_ax = "kv_seq_model" if B % max(dp, 1) == 0 and B >= dp \
+        else "kv_seq_pdm"
+    if cfg.family == "encdec":
+        abstract = ED.abstract_encdec_cache(cfg, cfg.n_dec, B, S,
+                                            min(S, 4096))
+        axes = {k: v.replace("kv_seq_model", seq_ax)
+                for k, v in ED.encdec_cache_axes(
+                    cfg, cfg.n_dec, B, S, min(S, 4096)).items()}
+    else:
+        abstract = LM.abstract_cache(cfg, B, S)
+        axes = jax.tree.map(
+            lambda s: s.replace("kv_seq_model", seq_ax),
+            LM.cache_axes(cfg, B, S))
+    shardings = SH.param_sharding_rules(mesh, abstract, axes)
+    return _sds_with_sharding(abstract, shardings)
+
+
+def build_lowerable(cfg, mesh, shape, *, microbatch: int = 8):
+    """Returns (jitted_fn, example_args) ready to .lower()."""
+    params_sds, spec = _abstract_params(cfg, mesh)
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw_init, params_sds)
+        opt_axes = type(opt_abs)(
+            m=L.axes_tree(spec), v=L.axes_tree(spec), count="")
+        opt_shard = SH.param_sharding_rules(
+            mesh, opt_abs.m, L.axes_tree(spec))
+        opt_sds = type(opt_abs)(
+            m=_sds_with_sharding(opt_abs.m, opt_shard),
+            v=_sds_with_sharding(opt_abs.v, opt_shard),
+            count=jax.ShapeDtypeStruct((), jnp.int32,
+                                       sharding=SH.spec(mesh)))
+        batch_sds = _batch_sharded(cfg, mesh, shape)
+        # microbatch 8: divides the remat-boundary activation saves (the
+        # dominant per-device activation term at 1M tokens/step) while
+        # keeping per-microbatch batch divisible by the data axes.
+        step_fn = make_train_step(cfg, AdamWConfig(), mesh,
+                                  microbatch=microbatch)
+        fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.int32, sharding=SH.spec(mesh)))
+        return fn, args
+
+    if shape.kind == "prefill":
+        batch_sds = _batch_sharded(cfg, mesh, shape)
+        if cfg.family == "encdec":
+            def prefill(params, batch):
+                enc = ED.encode(params, batch["frames"], cfg, mesh)
+                return ED.decode_train(params, enc, batch["tokens"], cfg,
+                                       mesh=mesh, last_only=True)
+        elif cfg.family == "vlm":
+            def prefill(params, batch):
+                return LM.lm_forward(
+                    params, batch["tokens"], cfg, mesh=mesh,
+                    prefix_embeds=batch["patch_embeds"], return_cache=True,
+                    last_only=True)
+        else:
+            def prefill(params, batch):
+                return LM.lm_forward(params, batch["tokens"], cfg,
+                                     mesh=mesh, return_cache=True,
+                                     last_only=True)
+        return jax.jit(prefill), (params_sds, batch_sds)
+
+    # decode
+    cache_sds = _cache_sharded(cfg, mesh, shape)
+    batch_sds = _batch_sharded(cfg, mesh, shape)
+    if cfg.family == "encdec":
+        def decode(params, cache, batch):
+            return ED.encdec_decode_step(params, cache, batch["tokens"],
+                                         batch["pos"], cfg)
+    else:
+        def decode(params, cache, batch):
+            return LM.lm_decode_step(params, cache, batch["tokens"],
+                                     batch["pos"], cfg, mesh=mesh)
+    fn = jax.jit(decode, donate_argnums=(1,))
+    return fn, (params_sds, cache_sds, batch_sds)
+
+
+def _compile_cell(cfg, mesh, shape, microbatch):
+    fn, args = build_lowerable(cfg, mesh, shape, microbatch=microbatch)
+    with mesh:
+        compiled = fn.lower(*args).compile()
+    return compiled
+
+
+def _costs_of(compiled, n_dev):
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text(), n_dev)
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "wire": colls["total_wire_bytes"],
+            "colls": colls}
+
+
+def _depth_cfg(cfg, r):
+    import dataclasses
+    kw = {"repeats": r, "scan_unroll": True}
+    if cfg.family == "encdec":
+        kw.update(n_enc=r, n_dec=r)
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             outdir: Optional[str] = None, *, microbatch: int = 0,
+             overrides: Optional[Dict] = None,
+             cost_depths=(2, 4)) -> Dict:
+    """Two-pass dry-run cell:
+
+    1. MEMORY/COMPILE pass — the FULL config exactly as production would
+       run it (rolled layer scans, microbatched train step): proves the
+       (arch x shape x mesh) cell lowers, compiles, and fits HBM.
+    2. COST pass — XLA's cost_analysis counts rolled scan bodies once, so
+       the exact FLOP/byte/collective totals come from two UNROLLED
+       compiles at reduced depths r1 < r2; per-layer costs are linear in
+       depth (identical per-layer shapes), so totals extrapolate exactly:
+       total = A + (B - A)/(r2 - r1) * (full_depth - r1).
+    """
+    import dataclasses
+    cfg = configs.get(arch)
+    cfg = dataclasses.replace(cfg, **(overrides or {}))
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        cell.update(status="skipped", reason=why)
+        return cell
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    # single-pod: 16 microbatches (per-micro batch 16 = data axis); the
+    # multi-pod data degree is 32, so 8 is the divisibility ceiling there.
+    if microbatch == 0:
+        microbatch = 8 if multi_pod else 16
+    mb = microbatch if shape.kind == "train" else 1
+
+    # ---- pass 1: full-depth memory/compile ------------------------------
+    t0 = time.time()
+    compiled = _compile_cell(cfg, mesh, shape, mb)
+    t1 = time.time()
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_estimate_bytes": (ma.argument_size_in_bytes
+                                + ma.output_size_in_bytes
+                                + ma.temp_size_in_bytes
+                                - ma.alias_size_in_bytes),
+    }
+    fits = mem["peak_estimate_bytes"] < HBM_PER_CHIP
+
+    # ---- pass 2: unrolled cost extrapolation ----------------------------
+    r1, r2 = cost_depths
+    full_r = cfg.n_enc if cfg.family == "encdec" else cfg.repeats
+    r1, r2 = min(r1, full_r), min(r2, full_r)
+    ca = _costs_of(_compile_cell(_depth_cfg(cfg, r1), mesh, shape, 1), n_dev)
+    if r2 > r1:
+        cb = _costs_of(_compile_cell(_depth_cfg(cfg, r2), mesh, shape, 1),
+                       n_dev)
+    else:
+        cb = ca
+    t2 = time.time()
+
+    def extrap(key):
+        a, b = ca[key], cb[key]
+        d = (b - a) / max(r2 - r1, 1)
+        return a + d * (full_r - r1)
+
+    cost = {"flops": extrap("flops"), "bytes accessed": extrap("bytes")}
+    colls = {"total_wire_bytes": extrap("wire"),
+             "at_depth_" + str(r1): ca["colls"],
+             "at_depth_" + str(r2): cb["colls"]}
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    from .roofline import analytic_hbm_bytes
+    dp = SH.axis_size(mesh, SH.batch_axes(mesh))
+    tp = dict(mesh.shape).get("model", 1)
+    n_layers = (cfg.n_enc + cfg.n_dec if cfg.family == "encdec"
+                else cfg.n_layers)
+    cache_dev = 0.0
+    if shape.kind == "decode":
+        cache_abs = (ED.abstract_encdec_cache(
+            cfg, cfg.n_dec, shape.global_batch, shape.seq_len,
+            min(shape.seq_len, 4096)) if cfg.family == "encdec"
+            else LM.abstract_cache(cfg, shape.global_batch, shape.seq_len))
+        cache_dev = sum(
+            float(np.prod(a.shape)) * a.dtype.itemsize
+            for a in jax.tree.leaves(cache_abs)) / n_dev
+    ana = analytic_hbm_bytes(
+        n_params=(L.param_count(ED.encdec_spec(cfg, cfg.n_enc, cfg.n_dec))
+                  if cfg.family == "encdec" else LM.num_params(cfg)),
+        n_params_active=active_param_count(cfg), tokens=tokens,
+        d_model=cfg.d_model, n_layers=n_layers, vocab=cfg.vocab_padded,
+        n_dev=n_dev, dp=dp, tp=tp, kind=shape.kind, microbatch=mb,
+        cache_bytes_per_dev=cache_dev)
+    rf = roofline(cost, colls, n_devices=n_dev, tokens=tokens,
+                  n_params_active=active_param_count(cfg),
+                  kind=shape.kind, analytic_bytes=ana)
+    cell.update(status="ok", compile_s=round(t1 - t0, 2),
+                cost_compile_s=round(t2 - t1, 2),
+                memory=mem, fits_hbm=bool(fits),
+                collectives=colls, roofline=rf)
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        path = os.path.join(outdir, f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(cell, f, indent=1)
+    return cell
+
+
+# ---------------------------------------------------------------------------
+# graph-engine dry-run (the paper's own technique at pod scale)
+# ---------------------------------------------------------------------------
+
+def run_graph_cell(exchange: str, multi_pod: bool, algo: str = "wcc",
+                   outdir: Optional[str] = None,
+                   scale: int = 26, edge_factor: int = 16) -> Dict:
+    from ..core import algorithms as ALG
+    from ..core.engine_shardmap import ShardEngine, ShardMeta, abstract_shard_data
+    mesh = make_graph_mesh(multi_pod=multi_pod)
+    P = mesh.size
+    V = 1 << scale
+    E = edge_factor * V
+    v_max = -(-V // P // 256) * 256
+    e_pair = -(-E // (P * P) // 32) * 32 * 4  # 4x imbalance headroom
+    meta = ShardMeta(P=P, v_max=v_max, e_pair_max=e_pair,
+                     n_tiles=-(-(E // P) // 512), n_windows=-(-(v_max + 1)
+                                                              // 256),
+                     tile_e=512, tile_r=256, num_vertices=V,
+                     frontier_capacities=(v_max // 16, v_max // 4, v_max))
+    kernel = ALG.ALGORITHMS[algo]()
+    eng = ShardEngine(kernel, meta, mesh=mesh, exchange=exchange,
+                      backend="ref")
+    data_sds = abstract_shard_data(meta, mesh, exchange)
+    mesh_name = "multipod_512" if multi_pod else "pod_256"
+    cell = {"arch": f"gravfm-{algo}-{exchange}", "shape": f"rmat{scale}",
+            "mesh": mesh_name}
+    from jax.sharding import PartitionSpec as PS
+
+    state_sds = jax.eval_shape(
+        lambda g, o, v: kernel.init_state(g, o, v, num_vertices=V),
+        jax.ShapeDtypeStruct((P, v_max), jnp.int32),
+        jax.ShapeDtypeStruct((P, v_max), jnp.int32),
+        jax.ShapeDtypeStruct((P, v_max), bool))
+
+    def superstep(d, payload, active, state):
+        # shard blocks keep a size-1 leading axis
+        sq = lambda t: jax.tree.map(lambda a: a[0], t)
+        st, p2, a2, n, w = eng._shard_step(
+            sq(d), payload[0], active[0], sq(state), jnp.int32(1))
+        n = jax.lax.psum(n, "graph")
+        w = jax.lax.psum(w, "graph")
+        ex = lambda t: jax.tree.map(lambda a: a[None], t)
+        return ex(st), p2[None], a2[None], n, w
+
+    shard_fn = jax.shard_map(
+        superstep, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: PS("graph"), data_sds),
+                  PS("graph"), PS("graph"),
+                  jax.tree.map(lambda _: PS("graph"), state_sds)),
+        out_specs=(PS("graph"), PS("graph"), PS("graph"), PS(), PS()),
+        check_vma=False)
+
+    payload_sds = jax.ShapeDtypeStruct((P, v_max), kernel.msg_dtype)
+    active_sds = jax.ShapeDtypeStruct((P, v_max), jnp.bool_)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(shard_fn).lower(
+            data_sds, payload_sds, active_sds, state_sds)
+        compiled = lowered.compile()
+    t1 = time.time()
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text(), P)
+    ma = compiled.memory_analysis()
+    # paper-units: traversed edges per superstep = E; TEPS bound per term
+    rf = roofline(cost, colls, n_devices=P, tokens=E,
+                  n_params_active=0, kind="prefill")
+    cell.update(status="ok", compile_s=round(t1 - t0, 2),
+                edges_per_superstep=E,
+                teps_bound=E / max(rf["roofline_step_s"], 1e-30),
+                memory={"argument_bytes": ma.argument_size_in_bytes,
+                        "temp_bytes": ma.temp_size_in_bytes},
+                collectives=colls, roofline=rf)
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        with open(os.path.join(
+                outdir, f"graph__{algo}__{exchange}__{mesh_name}.json"),
+                "w") as f:
+            json.dump(cell, f, indent=1)
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--graph", action="store_true")
+    ap.add_argument("--exchange", default="allgather")
+    ap.add_argument("--algo", default="wcc")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    results = []
+    failures = 0
+
+    if args.graph:
+        for mp in meshes:
+            cell = run_graph_cell(args.exchange, mp, args.algo, args.out)
+            results.append(cell)
+            print(json.dumps(cell, indent=1)[:400])
+    else:
+        archs = configs.ARCH_IDS if (args.all or not args.arch) \
+            else [args.arch]
+        shapes = list(SHAPES) if (args.all or not args.shape) \
+            else [args.shape]
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    try:
+                        cell = run_cell(arch, shape, mp, args.out)
+                    except Exception as e:
+                        traceback.print_exc()
+                        cell = {"arch": arch, "shape": shape,
+                                "mesh": "multi" if mp else "single",
+                                "status": "FAILED", "error": str(e)[:500]}
+                        failures += 1
+                    results.append(cell)
+                    s = cell.get("status")
+                    extra = ""
+                    if s == "ok":
+                        rf = cell["roofline"]
+                        extra = (f" bound={rf['bound_by']}"
+                                 f" step={rf['roofline_step_s']:.4f}s"
+                                 f" fits={cell['fits_hbm']}"
+                                 f" compile={cell['compile_s']}s")
+                    print(f"[{s:7s}] {cell['arch']:22s} {cell['shape']:12s}"
+                          f" {cell['mesh']:18s}{extra}", flush=True)
+    summary = os.path.join(args.out, "summary.json")
+    os.makedirs(args.out, exist_ok=True)
+    with open(summary, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {summary}; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production meshes.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (jax locks the device count on first backend
+init, and the dry-run needs to set XLA_FLAGS first).
+
+  single pod : (16, 16)    ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16) ("pod", "data", "model") = 512 chips
+
+The graph engine flattens every axis into one "graph" axis (the paper's
+n_FPGA): 256- or 512-way vertex sharding.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_graph_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_graph_mesh(*, multi_pod: bool = False) -> Mesh:
+    """All chips on one 'graph' axis for the GraVF-M engine."""
+    n = 512 if multi_pod else 256
+    return jax.make_mesh(
+        (n,), ("graph",), axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def make_local_mesh(axes=("graph",)) -> Mesh:
+    """Whatever devices exist locally (tests / reduced runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n,), axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,62 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b \
+      --reduced --steps 100 --ckpt-dir /tmp/ckpt
+
+On real hardware the same entrypoint builds the production mesh and
+shards params/optimizer/batch per sharding.py; on this CPU box it runs
+the reduced config on the local device. The loop resumes from the latest
+complete checkpoint automatically — relaunch after any failure (or on a
+different mesh: checkpoints reshard on restore).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from .. import configs
+from ..data.pipeline import DataConfig
+from ..train.loop import TrainConfig, Trainer
+from ..train.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale config (default on this box)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="build the (16,16) mesh (requires 256 devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch, reduced=args.reduced
+                      or len(jax.devices()) == 1)
+    mesh = None
+    if args.production_mesh:
+        from .mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    dc = DataConfig(vocab=cfg.vocab, global_batch=args.global_batch,
+                    seq_len=args.seq_len)
+    oc = AdamWConfig(lr_peak=args.lr, warmup_steps=max(1, args.steps // 20),
+                     total_steps=args.steps)
+    tc = TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                     ckpt_dir=args.ckpt_dir, log_every=10,
+                     microbatch=args.microbatch)
+    out = Trainer(cfg, dc, oc, tc, mesh=mesh).run()
+    for s, l in out["losses"]:
+        print(f"step {s:5d} loss {l:.4f}")
+    print(f"done: step {out['final_step']} wall {out['seconds']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

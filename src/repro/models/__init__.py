@@ -1,0 +1,2 @@
+"""Model zoo for the assigned architectures (see configs/)."""
+from . import layers, lm, mla, moe, rglru, ssm, encdec  # noqa: F401

@@ -1,0 +1,460 @@
+"""Shared layer library for the assigned architectures.
+
+Functional, module-free style: every layer is (spec, apply). ``spec``
+returns a nested dict of :class:`PSpec` leaves describing each parameter
+(shape, dtype, logical sharding axes, initializer); generic materializers
+turn a spec tree into real params (``init_params``), abstract stand-ins for
+the dry-run (``abstract_params``; no allocation), or the sharding-axes tree
+(``axes_tree``).
+
+Compute policy: params bf16, matmuls bf16, softmax/norms/router/logits f32.
+Attention is blockwise (flash-style lax.scan over KV chunks, f32 running
+max/sum) so 32k prefill never materializes an S x S score matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PSpec", "init_params", "abstract_params", "axes_tree",
+    "rmsnorm", "rope", "blockwise_attention", "dense", "gqa_full",
+    "gqa_decode", "mlp_apply", "mlp_spec", "attn_spec", "embed_spec",
+    "softcap",
+]
+
+DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: Tuple[int, ...]
+    axes: str                      # comma-joined logical axes, '.' = repl.
+    dtype: Any = DTYPE
+    init: str = "normal"           # normal | zeros | ones | embed
+    fan_in: Optional[int] = None   # override for stacked shapes
+
+
+def _is_spec(x):
+    return isinstance(x, PSpec)
+
+
+def init_params(rng: jax.Array, spec_tree):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+
+    def one(key, s: PSpec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        if s.init == "embed":
+            return (jax.random.normal(key, s.shape, jnp.float32)
+                    .astype(s.dtype))
+        fan_in = s.fan_in or (s.shape[-2] if len(s.shape) >= 2 else s.shape[-1])
+        std = 1.0 / math.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, s.shape, jnp.float32) * std
+                ).astype(s.dtype)
+
+    return jax.tree.unflatten(treedef, [one(k, s) for k, s in
+                                        zip(keys, leaves)])
+
+
+def abstract_params(spec_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree,
+        is_leaf=_is_spec)
+
+
+def axes_tree(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=_is_spec)
+
+
+def param_count(spec_tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in
+               jax.tree.leaves(spec_tree, is_leaf=_is_spec))
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, plus_one: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    s = s + 1.0 if plus_one else s
+    return (y * s).astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+@jax.custom_vjp
+def grad_cast_bf16(x):
+    """Identity that casts the COTANGENT to bf16. Placed at block
+    boundaries so f32 cotangents born in f32-accumulated ops (softmax,
+    flash accumulators, logits) do not propagate f32 activation-gradients
+    through the whole backward pass (2x memory + bandwidth)."""
+    return x
+
+
+def _gcb_fwd(x):
+    return x, None
+
+
+def _gcb_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+grad_cast_bf16.defvjp(_gcb_fwd, _gcb_bwd)
+
+
+def rope(x, positions, *, base: float = 10000.0):
+    """x: (..., S, H, hd) with positions (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+def dense(x, w, *, out_axes: int = 1):
+    """x: (..., d_in), w: (d_in, ...out). Contract last dim of x."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype)
+
+
+def masked_cache_update(cache, new, pos, *, axis: int = 1):
+    """Write one token's entry at ``pos`` along ``axis``.
+
+    NOT a dynamic_update_slice: a traced start index on a SHARDED sequence
+    axis makes SPMD gather the whole cache. The iota==pos select is
+    elementwise, so every shard updates (or keeps) its local slice with
+    zero communication. Costs one full cache read+write — the decode
+    attention reads the full cache anyway (same order); the shard_map+cond
+    zero-copy variant is a recorded §Perf lever."""
+    assert new.shape[axis] == 1
+    t = jax.lax.broadcasted_iota(jnp.int32, cache.shape, axis)
+    newb = jnp.broadcast_to(new.astype(cache.dtype), cache.shape)
+    return jnp.where(t == pos, newb, cache)
+
+
+# ---------------------------------------------------------------------------
+# blockwise (flash-style) attention — pure jnp + lax.scan
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        q_positions=None,
+                        logit_cap: Optional[float] = None,
+                        q_chunk: int = 512, kv_chunk: int = 1024,
+                        scale: Optional[float] = None,
+                        skip_masked_blocks: bool = False):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd). GQA via head grouping.
+    Never materializes (Sq, Skv); memory is O(q_chunk * kv_chunk).
+
+    ``window``: sliding-window size (local attention) — a kv position t is
+    visible from query position s iff s - window < t <= s.
+    ``q_positions``: absolute positions of the queries (default arange);
+    kv positions are arange(Skv) (prefill) — decode uses gqa_decode.
+
+    ``skip_masked_blocks`` (§Perf lever): with causal and/or window masks,
+    most (q_block, kv_block) pairs are FULLY masked; instead of scanning
+    all kv blocks per q block, scan only the fixed-size band that can be
+    visible — ceil((q_chunk+window)/kv_chunk)+1 blocks for local layers,
+    and the causal prefix for global layers — fetching kv blocks by
+    dynamic index. FLOPs/bytes drop by ~Skv/(window+q_chunk) on window
+    layers (gemma3: 5/6 of the net) with identical numerics.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if q_positions is None:
+        q_positions = jnp.arange(Sq, dtype=jnp.int32)
+
+    nq = -(-Sq // q_chunk)
+    nk = -(-Skv // kv_chunk)
+    Sq_pad, Skv_pad = nq * q_chunk, nk * kv_chunk
+
+    def pad(x, n, axis):
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, n - x.shape[axis])
+        return jnp.pad(x, cfg)
+
+    qp = pad(q, Sq_pad, 1).reshape(B, nq, q_chunk, Hkv, G, hd)
+    kp = pad(k, Skv_pad, 1).reshape(B, nk, kv_chunk, Hkv, hd)
+    vp = pad(v, Skv_pad, 1).reshape(B, nk, kv_chunk, Hkv, hd)
+    qpos = pad(q_positions, Sq_pad, 0).reshape(nq, q_chunk)
+    kpos = jnp.arange(Skv_pad, dtype=jnp.int32).reshape(nk, kv_chunk)
+    kvalid = (jnp.arange(Skv_pad) < Skv).reshape(nk, kv_chunk)
+
+    def q_block(qi):
+        qc = qp[:, qi]                       # (B, qc, Hkv, G, hd)
+        pos_q = qpos[qi]                     # (qc,)
+
+        # remat: without this the backward of the kv scan saves every
+        # block's (q_chunk x kv_chunk) probability matrix — an O(S^2)
+        # residual. Rematerializing them from (q, k, v, m, l) is the
+        # flash-attention backward strategy.
+        @jax.checkpoint
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kc, vc, pos_k, val_k = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, logit_cap)
+            mask = val_k[None, :]
+            if causal:
+                mask = mask & (pos_k[None, :] <= pos_q[:, None])
+            if window is not None:
+                mask = mask & (pos_k[None, :] > pos_q[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), ()
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, hd), jnp.float32)
+        if skip_masked_blocks and window is not None:
+            # only kv blocks intersecting [q_start - window, q_end] can be
+            # visible: a fixed-size band, fetched by dynamic index.
+            nband = min(nk, (q_chunk + window) // kv_chunk + 2)
+            first = jnp.maximum(
+                (qi * q_chunk - window) // kv_chunk, 0)
+            first = jnp.minimum(first, nk - nband)
+
+            def band_step(carry, j):
+                ki = first + j
+                kc = jax.lax.dynamic_index_in_dim(kp, ki, 1, False)
+                vc = jax.lax.dynamic_index_in_dim(vp, ki, 1, False)
+                pk = jax.lax.dynamic_index_in_dim(kpos, ki, 0, False)
+                vk = jax.lax.dynamic_index_in_dim(kvalid, ki, 0, False)
+                return kv_step(carry, (kc, vc, pk, vk))
+
+            (m, l, acc), _ = jax.lax.scan(
+                band_step, (m0, l0, a0), jnp.arange(nband))
+        elif skip_masked_blocks and causal:
+            # causal prefix: kv blocks after this q block are fully masked
+            nneed = min(nk, (Sq_pad + kv_chunk - 1) // kv_chunk)
+
+            def causal_step(carry, j):
+                visible = (j * kv_chunk) <= (qi * q_chunk + q_chunk - 1)
+
+                def go(c):
+                    kc = jax.lax.dynamic_index_in_dim(kp, j, 1, False)
+                    vc = jax.lax.dynamic_index_in_dim(vp, j, 1, False)
+                    pk = jax.lax.dynamic_index_in_dim(kpos, j, 0, False)
+                    vk = jax.lax.dynamic_index_in_dim(kvalid, j, 0, False)
+                    return kv_step(c, (kc, vc, pk, vk))[0]
+
+                return jax.lax.cond(visible, go, lambda c: c, carry), ()
+
+            (m, l, acc), _ = jax.lax.scan(
+                causal_step, (m0, l0, a0), jnp.arange(nneed))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0), kpos,
+                 kvalid))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # (B, Hkv, G, qc, hd)
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))      # (nq, B, Hkv, G, qc, hd)
+    out = jnp.moveaxis(outs, 0, 3)                   # (B, Hkv, G, nq, qc, hd)
+    out = out.reshape(B, Hkv, G, Sq_pad, hd)[:, :, :, :Sq]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (spec + full/decode applies)
+# ---------------------------------------------------------------------------
+
+def attn_spec(d_model: int, n_heads: int, n_kv: int, head_dim: int, *,
+              qkv_bias: bool = False, qk_norm: bool = False,
+              stack: Optional[int] = None) -> Dict[str, PSpec]:
+    st = (stack,) if stack else ()
+    pre = "stack," if stack else ""
+    s = {
+        "wq": PSpec(st + (d_model, n_heads, head_dim),
+                    pre + "fsdp,heads,.", fan_in=d_model),
+        "wk": PSpec(st + (d_model, n_kv, head_dim),
+                    pre + "fsdp,heads,.", fan_in=d_model),
+        "wv": PSpec(st + (d_model, n_kv, head_dim),
+                    pre + "fsdp,heads,.", fan_in=d_model),
+        "wo": PSpec(st + (n_heads, head_dim, d_model),
+                    pre + "heads,.,fsdp", fan_in=n_heads * head_dim),
+    }
+    if qkv_bias:
+        s["bq"] = PSpec(st + (n_heads, head_dim), pre + "heads,.",
+                        init="zeros")
+        s["bk"] = PSpec(st + (n_kv, head_dim), pre + "heads,.", init="zeros")
+        s["bv"] = PSpec(st + (n_kv, head_dim), pre + "heads,.", init="zeros")
+    if qk_norm:
+        s["q_norm"] = PSpec(st + (head_dim,), pre + ".", init="ones")
+        s["k_norm"] = PSpec(st + (head_dim,), pre + ".", init="ones")
+    return s
+
+
+def _project_qkv(p, x, positions, *, rope_base, qk_norm):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    if qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if rope_base:
+        q = rope(q, positions, base=rope_base)
+        k = rope(k, positions, base=rope_base)
+    return q, k, v
+
+
+def gqa_full(p, x, *, rope_base: float = 10000.0, causal: bool = True,
+             window: Optional[int] = None, qk_norm: bool = False,
+             logit_cap: Optional[float] = None,
+             q_chunk: int = 512, kv_chunk: int = 1024,
+             skip_masked_blocks: bool = False):
+    """Training / prefill path. x: (B, S, D). Returns (out, (k, v))."""
+    B, S, D = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, positions, rope_base=rope_base,
+                           qk_norm=qk_norm)
+    out = blockwise_attention(q, k, v, causal=causal, window=window,
+                              logit_cap=logit_cap, q_chunk=q_chunk,
+                              kv_chunk=kv_chunk,
+                              skip_masked_blocks=skip_masked_blocks)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (k, v)
+
+
+def gqa_decode(p, x, cache_k, cache_v, pos, *, rope_base: float = 10000.0,
+               window: Optional[int] = None, qk_norm: bool = False,
+               logit_cap: Optional[float] = None):
+    """Single-token decode. x: (B, 1, D); cache_k/v: (B, Smax, Hkv, hd);
+    pos: () int32 current position. Returns (out, new_k_cache, new_v_cache).
+    The KV sequence axis may be sharded over "model" (flash-decoding):
+    einsums below reduce over it and XLA inserts the psum."""
+    B, _, D = x.shape
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, positions, rope_base=rope_base,
+                                   qk_norm=qk_norm)
+    cache_k = masked_cache_update(cache_k, k_new, pos, axis=1)
+    cache_v = masked_cache_update(cache_v, v_new, pos, axis=1)
+    Smax, Hkv = cache_k.shape[1], cache_k.shape[2]
+    H = q.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, -1)
+    f32 = jnp.float32
+    s = jnp.einsum("bhgk,bthk->bhgt", qg.astype(f32), cache_k.astype(f32))
+    s = s / math.sqrt(q.shape[-1])
+    s = softcap(s, logit_cap)
+    t = jnp.arange(Smax, dtype=jnp.int32)
+    mask = t[None, None, None, :] <= pos
+    if window is not None:
+        mask = mask & (t[None, None, None, :] > pos - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthk->bhgk", a, cache_v.astype(f32))
+    out = out.reshape(B, 1, H, -1).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_spec(d_model: int, d_ff: int, *, gated: bool = True,
+             stack: Optional[int] = None) -> Dict[str, PSpec]:
+    st = (stack,) if stack else ()
+    pre = "stack," if stack else ""
+    s = {
+        "w_up": PSpec(st + (d_model, d_ff), pre + "fsdp,model",
+                      fan_in=d_model),
+        "w_down": PSpec(st + (d_ff, d_model), pre + "model,fsdp",
+                        fan_in=d_ff),
+    }
+    if gated:
+        s["w_gate"] = PSpec(st + (d_model, d_ff), pre + "fsdp,model",
+                            fan_in=d_model)
+    return s
+
+
+def mlp_apply(p, x, *, act: str = "silu"):
+    up = dense(x, p["w_up"])
+    if "w_gate" in p:
+        g = dense(x, p["w_gate"])
+        if act == "silu":
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * up
+        else:
+            h = jax.nn.gelu(g.astype(jnp.float32), approximate=True
+                            ).astype(x.dtype) * up
+    else:
+        if act == "relu2":   # nemotron/minitron squared relu
+            r = jax.nn.relu(up)
+            h = r * r
+        elif act == "relu":
+            h = jax.nn.relu(up)
+        else:
+            h = jax.nn.gelu(up.astype(jnp.float32), approximate=True
+                            ).astype(x.dtype)
+    return dense(h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def embed_spec(vocab: int, d_model: int) -> PSpec:
+    return PSpec((vocab, d_model), "vocab,.", init="embed")
+
+
+def embed_apply(table, tokens, *, scale: bool = False):
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(table.shape[1]), x.dtype)
+    return x
+
+
+def logits_apply(table_or_w, x, *, transpose: bool = True,
+                 cap: Optional[float] = None):
+    # matmul in model dtype (backward stays bf16); upcast AFTER for the
+    # f32 softmax/loss.
+    w = table_or_w
+    if transpose:  # tied embedding (vocab, d) -> project with transpose
+        out = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, w)
+    return softcap(out.astype(jnp.float32), cap)

@@ -1,0 +1,546 @@
+"""Decoder-only LM assembly for all assigned architectures.
+
+A model is a sequence of *blocks* described by :class:`LayerKind`
+(temporal mixer + channel mixer). Architectures declare a repeating
+``block_pattern`` (scanned with stacked params — keeps HLO size O(pattern)
+regardless of depth) plus an optional non-repeating ``tail``.
+
+Families covered here: dense GQA (qwen3/qwen2/minitron/internvl2 backbone),
+local:global hybrids (gemma3), MLA+MoE (deepseek-v2), GQA+MoE
+(deepseek-moe), xLSTM (mlstm/slstm), RG-LRU hybrids (recurrentgemma).
+Encoder-decoder (seamless-m4t) lives in encdec.py on the same blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mla as MLA
+from . import moe as MOE
+from . import rglru as RG
+from . import ssm as SSM
+from .layers import PSpec
+
+__all__ = ["LayerKind", "ArchCfg", "lm_spec", "lm_forward",
+           "lm_decode_step", "init_cache", "abstract_cache", "num_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str = "attn"          # attn | mla | mlstm | slstm | rglru
+    ffn: str = "mlp"             # mlp | moe | none
+    window: Optional[int] = None  # sliding window for attn
+    rope_base: float = 10000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeCfg:
+    n_routed: int
+    n_shared: int
+    topk: int
+    d_ff_expert: int
+    renormalize: bool = True
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MlaCfg:
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchCfg:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    block_pattern: Tuple[LayerKind, ...]
+    repeats: int
+    tail: Tuple[LayerKind, ...] = ()
+    # attention details
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    act: str = "silu"            # mlp activation: silu | gelu | relu2
+    logit_cap: Optional[float] = None
+    # norms / embeddings
+    norm_plus_one: bool = False  # gemma-style (1 + w) RMSNorm, zero-init
+    post_norms: bool = False     # gemma-style sandwich norms
+    embed_scale: bool = False
+    tie_embeddings: bool = True
+    # family extras
+    moe: Optional[MoeCfg] = None
+    mla: Optional[MlaCfg] = None
+    xlstm_heads: int = 4
+    lru_width: Optional[int] = None
+    prefix_len: int = 0          # VLM / multimodal stub prefix tokens
+    # family plumbing
+    family: str = "lm"           # lm | encdec | vlm
+    n_enc: int = 0               # encoder layers (encdec only)
+    n_dec: int = 0               # decoder layers (encdec only)
+    # runtime
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    remat: bool = True
+    long_context_ok: bool = False  # sub-quadratic: eligible for long_500k
+    # embedding/logits table padding (vocab not divisible by the TP
+    # degree would force replication — e.g. seamless's 256206).
+    vocab_pad_to: int = 0
+    # accumulate microbatch gradients in bf16 (halves grad memory;
+    # unbiased-ish at mb<=16). §Perf lever for the 236B cells.
+    accum_bf16: bool = False
+    # skip fully-masked KV blocks in blockwise attention (window/causal
+    # band scheduling — see layers.blockwise_attention). §Perf lever.
+    attn_block_skip: bool = False
+    # sequence parallelism: shard boundary activations (the remat saves)
+    # over "model" on the seq axis (Megatron-SP analogue). §Perf lever.
+    seq_shard_acts: bool = False
+    # Dry-run accounting: XLA cost_analysis counts a scan body ONCE, not
+    # x trip-count; the dry-run sets scan_unroll=True so the lowered HLO
+    # contains every layer and FLOP/byte/collective counts are exact.
+    scan_unroll: bool = False
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.block_pattern) * self.repeats + len(self.tail)
+
+    @property
+    def vocab_padded(self) -> int:
+        if not self.vocab_pad_to:
+            return self.vocab
+        m = self.vocab_pad_to
+        return -(-self.vocab // m) * m
+
+
+# ---------------------------------------------------------------------------
+# spec
+# ---------------------------------------------------------------------------
+
+def _norm_spec(cfg: ArchCfg, stack):
+    st = (stack,) if stack else ()
+    pre = "stack," if stack else ""
+    init = "zeros" if cfg.norm_plus_one else "ones"
+    return PSpec(st + (cfg.d_model,), pre + ".", init=init)
+
+
+def block_spec(kind: LayerKind, cfg: ArchCfg,
+               stack: Optional[int] = None) -> Dict[str, Any]:
+    s: Dict[str, Any] = {}
+    if kind.mixer == "attn":
+        s["mix_norm"] = _norm_spec(cfg, stack)
+        s["attn"] = L.attn_spec(cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim, qkv_bias=cfg.qkv_bias,
+                                qk_norm=cfg.qk_norm, stack=stack)
+    elif kind.mixer == "mla":
+        s["mix_norm"] = _norm_spec(cfg, stack)
+        m = cfg.mla
+        s["attn"] = MLA.mla_spec(cfg.d_model, cfg.n_heads, q_lora=m.q_lora,
+                                 kv_lora=m.kv_lora, qk_nope=m.qk_nope,
+                                 qk_rope=m.qk_rope, v_dim=m.v_dim,
+                                 stack=stack)
+    elif kind.mixer == "mlstm":
+        s["mlstm"] = SSM.mlstm_spec(cfg.d_model, cfg.xlstm_heads,
+                                    stack=stack)
+    elif kind.mixer == "slstm":
+        s["slstm"] = SSM.slstm_spec(cfg.d_model, cfg.xlstm_heads,
+                                    stack=stack)
+    elif kind.mixer == "rglru":
+        s["rglru"] = RG.rglru_spec(cfg.d_model, lru_width=cfg.lru_width,
+                                   stack=stack)
+    else:
+        raise ValueError(kind.mixer)
+
+    if cfg.post_norms and kind.mixer in ("attn", "mla"):
+        s["mix_post_norm"] = _norm_spec(cfg, stack)
+
+    if kind.ffn == "mlp":
+        s["ffn_norm"] = _norm_spec(cfg, stack)
+        s["mlp"] = L.mlp_spec(cfg.d_model, cfg.d_ff,
+                              gated=cfg.act in ("silu", "gelu"),
+                              stack=stack)
+        if cfg.post_norms:
+            s["ffn_post_norm"] = _norm_spec(cfg, stack)
+    elif kind.ffn == "moe":
+        mo = cfg.moe
+        s["ffn_norm"] = _norm_spec(cfg, stack)
+        s["moe"] = MOE.moe_spec(cfg.d_model, mo.d_ff_expert, mo.n_routed,
+                                mo.n_shared, stack=stack)
+    return s
+
+
+def lm_spec(cfg: ArchCfg) -> Dict[str, Any]:
+    s: Dict[str, Any] = {
+        "embed": L.embed_spec(cfg.vocab_padded, cfg.d_model),
+        "final_norm": _norm_spec(cfg, None),
+        "stage": {str(i): block_spec(k, cfg, stack=cfg.repeats)
+                  for i, k in enumerate(cfg.block_pattern)},
+    }
+    if cfg.tail:
+        s["tail"] = {str(i): block_spec(k, cfg, stack=None)
+                     for i, k in enumerate(cfg.tail)}
+    if not cfg.tie_embeddings:
+        s["lm_head"] = PSpec((cfg.d_model, cfg.vocab_padded), ".,vocab",
+                             fan_in=cfg.d_model)
+    return s
+
+
+def num_params(cfg: ArchCfg) -> int:
+    return L.param_count(lm_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _norm(cfg, x, w):
+    return L.rmsnorm(x, w, plus_one=cfg.norm_plus_one)
+
+
+def _constrain_act(x, mesh, cfg=None):
+    """Pin activations to (batch over data(+pod), seq/feature replicated)
+    at block boundaries — otherwise SPMD propagation can flip them onto
+    the feature axis (replicating the batch) deep in the stack.
+
+    With ``cfg.seq_shard_acts`` (sequence parallelism), the boundary
+    activations — which are exactly the remat-saved residuals — are ALSO
+    sharded over "model" on the sequence axis, dividing the dominant
+    activation-memory term by the TP degree at the cost of per-layer
+    gathers (a §Perf lever)."""
+    if mesh is None:
+        return x
+    from .. import sharding as SH
+    seq = "seq_model" if (cfg is not None and
+                          getattr(cfg, "seq_shard_acts", False)
+                          and x.ndim == 3) else None
+    spec = SH.logical_to_spec(
+        mesh, ("batch", seq) + (None,) * (x.ndim - 2) if x.ndim >= 2
+        else ("batch",), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def _moe_capacity(cfg: ArchCfg, n_tokens_local: int) -> int:
+    mo = cfg.moe
+    c = math.ceil(n_tokens_local * mo.topk * mo.capacity_factor
+                  / mo.n_routed)
+    return max(8, -(-c // 8) * 8)
+
+
+def _apply_ffn(kind, p, x, cfg, mesh):
+    if kind.ffn == "mlp":
+        h = L.mlp_apply(p["mlp"], _norm(cfg, x, p["ffn_norm"]), act=cfg.act)
+        if cfg.post_norms:
+            h = _norm(cfg, h, p["ffn_post_norm"])
+        return x + L.grad_cast_bf16(h)
+    if kind.ffn == "moe":
+        B, S, _ = x.shape
+        dp = 1
+        if mesh is not None:
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    dp *= mesh.shape[a]
+        cap = _moe_capacity(cfg, max(1, (B * S) // dp))
+        h = MOE.moe_apply(p["moe"], _norm(cfg, x, p["ffn_norm"]),
+                          topk=cfg.moe.topk, n_routed=cfg.moe.n_routed,
+                          capacity=cap, renormalize=cfg.moe.renormalize,
+                          mesh=mesh)
+        return x + h
+    return x
+
+
+def block_full(kind: LayerKind, p, x, cfg: ArchCfg, mesh=None):
+    """Training/prefill through one block. Returns (x, cache_entry)."""
+    if kind.mixer == "attn":
+        h, (k, v) = L.gqa_full(
+            p["attn"], _norm(cfg, x, p["mix_norm"]), rope_base=kind.rope_base,
+            window=kind.window, qk_norm=cfg.qk_norm,
+            logit_cap=cfg.logit_cap, q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk,
+            skip_masked_blocks=cfg.attn_block_skip)
+        if cfg.post_norms:
+            h = _norm(cfg, h, p["mix_post_norm"])
+        x = x + L.grad_cast_bf16(h)
+        cache = {"k": k, "v": v}
+    elif kind.mixer == "mla":
+        m = cfg.mla
+        h, (ckv, kpe) = MLA.mla_full(
+            p["attn"], _norm(cfg, x, p["mix_norm"]), qk_nope=m.qk_nope,
+            qk_rope=m.qk_rope, kv_lora=m.kv_lora, v_dim=m.v_dim,
+            rope_base=kind.rope_base, q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk)
+        x = x + L.grad_cast_bf16(h)
+        cache = {"ckv": ckv, "kpe": kpe}
+    elif kind.mixer == "mlstm":
+        h, cache = SSM.mlstm_scan(p["mlstm"], x, n_heads=cfg.xlstm_heads)
+        x = x + h
+    elif kind.mixer == "slstm":
+        h, cache = SSM.slstm_scan(p["slstm"], x, n_heads=cfg.xlstm_heads)
+        x = x + h
+    elif kind.mixer == "rglru":
+        h, cache = RG.rglru_scan(p["rglru"], x)
+        x = x + h
+    else:
+        raise ValueError(kind.mixer)
+    x = _apply_ffn(kind, p, x, cfg, mesh)
+    return x, cache
+
+
+def block_decode(kind: LayerKind, p, x, cache, pos, cfg: ArchCfg,
+                 mesh=None):
+    """Single-token decode through one block. Returns (x, new_cache)."""
+    if kind.mixer == "attn":
+        h, ck, cv = L.gqa_decode(
+            p["attn"], _norm(cfg, x, p["mix_norm"]), cache["k"], cache["v"],
+            pos, rope_base=kind.rope_base, window=kind.window,
+            qk_norm=cfg.qk_norm, logit_cap=cfg.logit_cap)
+        if cfg.post_norms:
+            h = _norm(cfg, h, p["mix_post_norm"])
+        x = x + h
+        cache = {"k": ck, "v": cv}
+    elif kind.mixer == "mla":
+        m = cfg.mla
+        h, ckv, kpe = MLA.mla_decode(
+            p["attn"], _norm(cfg, x, p["mix_norm"]), cache["ckv"],
+            cache["kpe"], pos, qk_nope=m.qk_nope, qk_rope=m.qk_rope,
+            kv_lora=m.kv_lora, v_dim=m.v_dim, rope_base=kind.rope_base)
+        x = x + L.grad_cast_bf16(h)
+        cache = {"ckv": ckv, "kpe": kpe}
+    elif kind.mixer == "mlstm":
+        h, cache = SSM.mlstm_step(p["mlstm"], x, cache,
+                                  n_heads=cfg.xlstm_heads)
+        x = x + h
+    elif kind.mixer == "slstm":
+        h, cache = SSM.slstm_step(p["slstm"], x, cache,
+                                  n_heads=cfg.xlstm_heads)
+        x = x + h
+    elif kind.mixer == "rglru":
+        h, cache = RG.rglru_step(p["rglru"], x, cache)
+        x = x + h
+    x = _apply_ffn(kind, p, x, cfg, mesh)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _block_cache_shapes(kind: LayerKind, cfg: ArchCfg, batch: int,
+                        max_len: int):
+    d = cfg.d_model
+    if kind.mixer == "attn":
+        sh = (batch, max_len, cfg.n_kv, cfg.head_dim)
+        return {"k": (sh, jnp.bfloat16), "v": (sh, jnp.bfloat16)}
+    if kind.mixer == "mla":
+        m = cfg.mla
+        return {"ckv": ((batch, max_len, m.kv_lora), jnp.bfloat16),
+                "kpe": ((batch, max_len, m.qk_rope), jnp.bfloat16)}
+    if kind.mixer == "mlstm":
+        di = int(d * 2.0)
+        dh = di // cfg.xlstm_heads
+        return {"C": ((batch, cfg.xlstm_heads, dh, dh), jnp.float32),
+                "n": ((batch, cfg.xlstm_heads, dh), jnp.float32),
+                "m": ((batch, cfg.xlstm_heads), jnp.float32),
+                "conv": ((batch, SSM.CONV_W - 1, di), jnp.bfloat16)}
+    if kind.mixer == "slstm":
+        sh = (batch, d)
+        return {"c": (sh, jnp.float32), "n": (sh, jnp.float32),
+                "h": (sh, jnp.float32), "m": (sh, jnp.float32)}
+    if kind.mixer == "rglru":
+        dr = cfg.lru_width or d
+        return {"h": ((batch, dr), jnp.float32),
+                "conv": ((batch, SSM.CONV_W - 1, dr), jnp.bfloat16)}
+    raise ValueError(kind.mixer)
+
+
+def _make_cache(cfg: ArchCfg, batch: int, max_len: int, fn):
+    """fn(shape_without_stack, dtype, stacked: bool) -> leaf."""
+    out = {"stage": {}}
+    for i, kind in enumerate(cfg.block_pattern):
+        shapes = _block_cache_shapes(kind, cfg, batch, max_len)
+        out["stage"][str(i)] = {
+            k: fn(sh, dt, True) for k, (sh, dt) in shapes.items()}
+    if cfg.tail:
+        out["tail"] = {}
+        for i, kind in enumerate(cfg.tail):
+            shapes = _block_cache_shapes(kind, cfg, batch, max_len)
+            out["tail"][str(i)] = {
+                k: fn(sh, dt, False) for k, (sh, dt) in shapes.items()}
+    return out
+
+
+def init_cache(cfg: ArchCfg, batch: int, max_len: int):
+    def mk(sh, dt, stacked):
+        full = ((cfg.repeats,) + sh) if stacked else sh
+        return jnp.zeros(full, dt)
+    cache = _make_cache(cfg, batch, max_len, mk)
+
+    # m-stabilizer states start at -inf
+    def fix(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        if name == "m" and leaf.dtype == jnp.float32 and leaf.ndim <= 3:
+            return jnp.full(leaf.shape, -jnp.inf, leaf.dtype)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+def abstract_cache(cfg: ArchCfg, batch: int, max_len: int):
+    def mk(sh, dt, stacked):
+        full = ((cfg.repeats,) + sh) if stacked else sh
+        return jax.ShapeDtypeStruct(full, dt)
+    return _make_cache(cfg, batch, max_len, mk)
+
+
+def cache_axes(cfg: ArchCfg, batch: int, max_len: int):
+    """Logical sharding axes matching the cache pytree: batch over data,
+    KV sequence over model (flash-decoding split)."""
+    def mk(sh, dt, stacked):
+        if len(sh) >= 2 and sh[1] == max_len:
+            names = ["batch", "kv_seq_model"] + ["."] * (len(sh) - 2)
+        else:
+            names = ["batch"] + ["."] * (len(sh) - 1)
+        if stacked:
+            names = ["stack"] + names
+        return ",".join(names)
+    return _make_cache(cfg, batch, max_len, mk)
+
+
+# ---------------------------------------------------------------------------
+# forward / decode
+# ---------------------------------------------------------------------------
+
+def lm_forward(params, tokens, cfg: ArchCfg, *, mesh=None,
+               prefix_embeds=None, return_cache: bool = False,
+               last_only: bool = False):
+    """tokens: (B, S) int32. prefix_embeds: optional (B, Sp, D) multimodal
+    stub prefix (internvl2/seamless-style). Returns logits (B, S_total, V)
+    (f32) and optionally the prefill KV caches (cache pytree WITHOUT
+    padding to a max_len — caller places them into serve buffers)."""
+    x = L.embed_apply(params["embed"], tokens, scale=cfg.embed_scale)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+
+    caches = {"stage": {}} if return_cache else None
+
+    # repeating stages: scan over stacked params
+    stage_params = params["stage"]
+
+    def stage_body(x, layer_params):
+        x = L.grad_cast_bf16(_constrain_act(x, mesh, cfg))
+        cs = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, c = block_full(kind, layer_params[str(i)], x, cfg, mesh)
+            if return_cache:
+                cs[str(i)] = c
+        x = _constrain_act(x, mesh, cfg)
+        return x, cs
+
+    body = stage_body
+    if cfg.remat:
+        body = jax.checkpoint(stage_body)
+    x, stage_caches = jax.lax.scan(
+        body, x, stage_params,
+        unroll=cfg.repeats if cfg.scan_unroll else 1)
+    if return_cache:
+        caches["stage"] = stage_caches
+
+    if cfg.tail:
+        if return_cache:
+            caches["tail"] = {}
+        for i, kind in enumerate(cfg.tail):
+            x, c = block_full(kind, params["tail"][str(i)], x, cfg, mesh)
+            if return_cache:
+                caches["tail"][str(i)] = c
+
+    if last_only:
+        x = x[:, -1:]  # serve prefill: only the last position's logits
+    x = _norm(cfg, x, params["final_norm"])
+    logits = _logits(params, x, cfg, mesh)
+    return (logits, caches) if return_cache else logits
+
+
+def _logits(params, x, cfg: ArchCfg, mesh):
+    if cfg.tie_embeddings:
+        logits = L.logits_apply(params["embed"], x, transpose=True,
+                                cap=cfg.logit_cap)
+    else:
+        logits = L.logits_apply(params["lm_head"], x, transpose=False,
+                                cap=cfg.logit_cap)
+    if cfg.vocab_padded != cfg.vocab:
+        # mask padding ids out of the softmax (elementwise: sharding-safe)
+        vid = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(vid < cfg.vocab, logits, -1e9)
+    if mesh is not None:
+        # keep the f32 logits sharded (batch over data, vocab over model) —
+        # without this XLA may replicate the (tokens x vocab) tensor.
+        from .. import sharding as SH
+        spec = SH.logical_to_spec(mesh, ("batch", None, "vocab"),
+                                  logits.shape)
+        logits = jax.lax.with_sharding_constraint(
+            logits, jax.sharding.NamedSharding(mesh, spec))
+    return logits
+
+
+def lm_decode_step(params, cache, tokens, pos, cfg: ArchCfg, *, mesh=None):
+    """tokens: (B, 1); pos: () int32. Returns (logits (B,1,V), new cache).
+
+    Layers run under a fori_loop with in-place dynamic updates on the
+    (leading, unsharded) stack axis of the cache — a lax.scan with cache
+    xs/ys would double-buffer the multi-GB KV cache (xs and stacked ys are
+    distinct buffers), which blows the HBM budget at 32k context."""
+    x = L.embed_apply(params["embed"], tokens, scale=cfg.embed_scale)
+
+    def one_layer(i, x, stage_cache):
+        x = _constrain_act(x, mesh)
+        p_i = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            params["stage"])
+        c_i = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            stage_cache)
+        new_c = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            x, c = block_decode(kind, p_i[str(j)], x, c_i[str(j)], pos,
+                                cfg, mesh)
+            new_c[str(j)] = c
+        stage_cache = jax.tree.map(
+            lambda buf, n: jax.lax.dynamic_update_index_in_dim(
+                buf, n.astype(buf.dtype), i, 0),
+            stage_cache, new_c)
+        return x, stage_cache
+
+    if cfg.scan_unroll:  # cost-pass accounting: statically unrolled
+        stage_cache = cache["stage"]
+        for i in range(cfg.repeats):
+            x, stage_cache = one_layer(i, x, stage_cache)
+        new_stage_cache = stage_cache
+    else:
+        def body(i, carry):
+            x, sc = carry
+            return one_layer(i, x, sc)
+        x, new_stage_cache = jax.lax.fori_loop(
+            0, cfg.repeats, body, (x, cache["stage"]))
+    new_cache = {"stage": new_stage_cache}
+
+    if cfg.tail:
+        new_cache["tail"] = {}
+        for i, kind in enumerate(cfg.tail):
+            x, c = block_decode(kind, params["tail"][str(i)], x,
+                                cache["tail"][str(i)], pos, cfg, mesh)
+            new_cache["tail"][str(i)] = c
+
+    x = _norm(cfg, x, params["final_norm"])
+    logits = _logits(params, x, cfg, mesh)
+    return logits, new_cache

@@ -1,0 +1,126 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a ``kv_lora`` latent (512) plus one shared decoupled
+RoPE key (64) per token — the cache stores 576 dims/token regardless of the
+128 heads. Decode uses the ABSORBED form: q_nope is folded through W_uk so
+scores are taken directly against the latent cache, and the attention
+context is un-projected through W_uv afterwards; full K/V are never
+materialized at decode time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (PSpec, blockwise_attention, rmsnorm, rope)
+
+__all__ = ["mla_spec", "mla_full", "mla_decode"]
+
+
+def mla_spec(d_model: int, n_heads: int, *, q_lora: int = 1536,
+             kv_lora: int = 512, qk_nope: int = 128, qk_rope: int = 64,
+             v_dim: int = 128, stack: Optional[int] = None) -> Dict[str, PSpec]:
+    st = (stack,) if stack else ()
+    pre = "stack," if stack else ""
+    return {
+        "w_dq": PSpec(st + (d_model, q_lora), pre + "fsdp,.",
+                      fan_in=d_model),
+        "q_norm": PSpec(st + (q_lora,), pre + ".", init="ones"),
+        "w_uq": PSpec(st + (q_lora, n_heads, qk_nope + qk_rope),
+                      pre + "fsdp,heads,.", fan_in=q_lora),
+        "w_dkv": PSpec(st + (d_model, kv_lora + qk_rope), pre + "fsdp,.",
+                       fan_in=d_model),
+        "kv_norm": PSpec(st + (kv_lora,), pre + ".", init="ones"),
+        "w_uk": PSpec(st + (kv_lora, n_heads, qk_nope),
+                      pre + ".,heads,.", fan_in=kv_lora),
+        "w_uv": PSpec(st + (kv_lora, n_heads, v_dim),
+                      pre + ".,heads,.", fan_in=kv_lora),
+        "w_o": PSpec(st + (n_heads, v_dim, d_model), pre + "heads,.,fsdp",
+                     fan_in=n_heads * v_dim),
+    }
+
+
+def _project(p, x, positions, *, qk_nope, qk_rope, kv_lora,
+             rope_base=10000.0):
+    q_lat = rmsnorm(dense_(x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("bsl,lhk->bshk", q_lat, p["w_uq"])
+    q_nope, q_pe = q[..., :qk_nope], q[..., qk_nope:]
+    q_pe = rope(q_pe, positions, base=rope_base)
+
+    dkv = dense_(x, p["w_dkv"])
+    c_kv = rmsnorm(dkv[..., :kv_lora], p["kv_norm"])      # (B,S,kv_lora)
+    k_pe = dkv[..., kv_lora:][:, :, None, :]              # (B,S,1,rope)
+    k_pe = rope(k_pe, positions, base=rope_base)
+    return q_nope, q_pe, c_kv, k_pe
+
+
+def dense_(x, w):
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype)
+
+
+def mla_full(p, x, *, qk_nope: int = 128, qk_rope: int = 64,
+             kv_lora: int = 512, v_dim: int = 128,
+             rope_base: float = 10000.0, q_chunk: int = 512,
+             kv_chunk: int = 1024):
+    """Training/prefill. Returns (out, (c_kv, k_pe)) — the decode cache."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    q_nope, q_pe, c_kv, k_pe = _project(
+        p, x, positions, qk_nope=qk_nope, qk_rope=qk_rope, kv_lora=kv_lora,
+        rope_base=rope_base)
+    H = q_nope.shape[2]
+    k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsl,lhk->bshk", c_kv, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe, (B, S, H, qk_rope))], axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    # pad v to qk dims for the shared blockwise kernel, slice after
+    scale = 1.0 / math.sqrt(qk_nope + qk_rope)
+    if v_dim != q.shape[-1]:
+        v_in = jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                           (0, q.shape[-1] - v_dim)))
+    else:
+        v_in = v
+    out = blockwise_attention(q, k, v_in, causal=True, scale=scale,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out[..., :v_dim]
+    out = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return out, (c_kv, k_pe[:, :, 0, :])
+
+
+def mla_decode(p, x, cache_ckv, cache_kpe, pos, *, qk_nope: int = 128,
+               qk_rope: int = 64, kv_lora: int = 512, v_dim: int = 128,
+               rope_base: float = 10000.0):
+    """Absorbed single-token decode.
+    cache_ckv: (B, Smax, kv_lora); cache_kpe: (B, Smax, qk_rope)."""
+    B = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_pe, c_kv_new, k_pe_new = _project(
+        p, x, positions, qk_nope=qk_nope, qk_rope=qk_rope, kv_lora=kv_lora,
+        rope_base=rope_base)
+    from .layers import masked_cache_update
+    cache_ckv = masked_cache_update(cache_ckv, c_kv_new, pos, axis=1)
+    cache_kpe = masked_cache_update(cache_kpe, k_pe_new[:, :, 0, :],
+                                    pos, axis=1)
+
+    # absorb q_nope through W_uk: (B,1,H,nope) x (lora,H,nope) -> latent q
+    q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, p["w_uk"])
+    f32 = jnp.float32
+    s = (jnp.einsum("bshl,btl->bhst", q_lat.astype(f32),
+                    cache_ckv.astype(f32))
+         + jnp.einsum("bshk,btk->bhst", q_pe.astype(f32),
+                      cache_kpe.astype(f32)))
+    s = s * (1.0 / math.sqrt(qk_nope + qk_rope))
+    t = jnp.arange(cache_ckv.shape[1], dtype=jnp.int32)
+    s = jnp.where(t[None, None, None, :] <= pos, s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhst,btl->bshl", a,
+                     cache_ckv.astype(f32)).astype(x.dtype)
+    out = jnp.einsum("bshl,lhk->bshk", ctx, p["w_uv"])    # un-absorb W_uv
+    out = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return out, cache_ckv, cache_kpe

@@ -1,0 +1,156 @@
+"""Fine-grained Mixture-of-Experts (DeepSeek-MoE / DeepSeek-V2 style):
+``n_shared`` always-on experts + ``n_routed`` experts with top-k routing.
+
+Expert parallelism follows the GraVF-M lesson (DESIGN.md §8): a token with
+top-k experts is a vertex with out-degree k. Instead of unicasting k copies
+of every token through an all_to_all (the GraVF pattern), the token
+activations — already replicated across the "model" axis by the preceding
+TP attention psum — play the broadcast update, and each expert shard
+*receiver-side scatters*: it selects, from the replicated token stream,
+exactly the (token, expert) pairs whose expert it hosts, computes them, and
+a single psum combines. Cross-chip traffic per token is the d-sized output
+reduction (independent of k), not k dispatched copies.
+
+Dispatch inside each shard is sort-based into per-expert capacity buffers
+(static shapes; overflow drops, standard with capacity_factor >= 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from .layers import PSpec, dense, mlp_apply, mlp_spec
+
+__all__ = ["moe_spec", "moe_apply", "MoECfg"]
+
+
+def moe_spec(d_model: int, d_ff_expert: int, n_routed: int, n_shared: int,
+             *, stack: Optional[int] = None) -> Dict[str, PSpec]:
+    st = (stack,) if stack else ()
+    pre = "stack," if stack else ""
+    s = {
+        "router": PSpec(st + (d_model, n_routed), pre + ".,.",
+                        dtype=jnp.float32, fan_in=d_model),
+        "we_gate": PSpec(st + (n_routed, d_model, d_ff_expert),
+                         pre + "expert,fsdp,.", fan_in=d_model),
+        "we_up": PSpec(st + (n_routed, d_model, d_ff_expert),
+                       pre + "expert,fsdp,.", fan_in=d_model),
+        "we_down": PSpec(st + (n_routed, d_ff_expert, d_model),
+                         pre + "expert,.,fsdp", fan_in=d_ff_expert),
+    }
+    if n_shared:
+        s["shared"] = mlp_spec(d_model, d_ff_expert * n_shared, gated=True,
+                               stack=stack)
+    return s
+
+
+def _expert_ffn(wg, wu, wd, buf):
+    """buf: (E_loc, C, d) -> (E_loc, C, d). Gated SiLU experts."""
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _dispatch_compute(x2, p_router, wg, wu, wd, *, topk: int, capacity: int,
+                      n_routed: int, e_start, e_local: int,
+                      renormalize: bool):
+    """Receiver-side scatter for one expert shard.
+
+    x2: (T, d) tokens (replicated across expert shards); wg/wu/wd hold only
+    this shard's ``e_local`` experts. Returns this shard's partial output
+    (T, d) — caller psums across shards.
+    """
+    T, d = x2.shape
+    logits = x2.astype(jnp.float32) @ p_router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)              # (T, E)
+    gate_vals, idx = jax.lax.top_k(probs, topk)          # (T, topk) global e
+    if renormalize:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- select the (token, expert) edges this shard owns ----------------
+    e_loc = idx - e_start                                # (T, topk)
+    mine = (e_loc >= 0) & (e_loc < e_local)
+    flat_e = jnp.where(mine, e_loc, e_local).reshape(-1)  # (T*topk,)
+    slot_tok = jnp.arange(T * topk, dtype=jnp.int32) // topk
+
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = slot_tok[order]
+    start_of_e = jnp.searchsorted(e_sorted, jnp.arange(e_local + 1))
+    pos = jnp.arange(T * topk, dtype=jnp.int32) - jnp.take(
+        start_of_e, jnp.minimum(e_sorted, e_local))
+    ok = (e_sorted < e_local) & (pos < capacity)
+
+    buf = jnp.zeros((e_local + 1, capacity, d), x2.dtype)
+    tgt_e = jnp.where(ok, e_sorted, e_local)
+    tgt_p = jnp.where(ok, pos, 0)
+    buf = buf.at[tgt_e, tgt_p].set(
+        jnp.where(ok[:, None], jnp.take(x2, tok_sorted, axis=0), 0.0),
+        mode="drop")
+
+    out_buf = _expert_ffn(wg, wu, wd, buf[:-1])
+
+    y_sorted = jnp.where(
+        ok[:, None],
+        out_buf.reshape(-1, d)[jnp.minimum(
+            tgt_e * capacity + tgt_p, e_local * capacity - 1)],
+        0.0)
+    y_slots = jnp.zeros((T * topk, d), x2.dtype).at[order].set(y_sorted)
+    gates = gate_vals.reshape(T * topk).astype(x2.dtype)
+    y = (y_slots * gates[:, None]).reshape(T, topk, d).sum(axis=1)
+    return y
+
+
+def moe_apply(p, x, *, topk: int, n_routed: int, capacity: int,
+              renormalize: bool = True, mesh: Optional[Mesh] = None):
+    """x: (B, S, d) -> (B, S, d) routed-expert output + shared experts.
+
+    With a mesh, the routed computation runs under shard_map over the
+    "model" axis (expert parallelism, receiver-side dispatch); tokens stay
+    sharded over ("pod","data") and replicated over "model".
+    """
+    from .layers import grad_cast_bf16
+    B, S, d = x.shape
+    x2 = grad_cast_bf16(x.reshape(B * S, d))
+
+    if mesh is not None and "model" in mesh.axis_names:
+        em = mesh.shape["model"]
+        e_local = n_routed // em
+        batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+        def shard_fn(x2b, router, wg, wu, wd):
+            # blocks: x2b (T_local, d); wg/wu/wd (e_local, d, ff)
+            me = jax.lax.axis_index("model")
+            y = _dispatch_compute(
+                x2b, router, wg, wu, wd, topk=topk,
+                capacity=capacity, n_routed=n_routed,
+                e_start=me * e_local, e_local=e_local,
+                renormalize=renormalize)
+            return jax.lax.psum(y, "model")
+
+        fn = jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(batch_ax, None), P(None, None),
+                      P("model", None, None), P("model", None, None),
+                      P("model", None, None)),
+            out_specs=P(batch_ax, None),
+            check_vma=False)
+        y = fn(x2, p["router"], p["we_gate"], p["we_up"], p["we_down"])
+    else:
+        y = _dispatch_compute(
+            x2, p["router"], p["we_gate"], p["we_up"], p["we_down"],
+            topk=topk, capacity=capacity, n_routed=n_routed,
+            e_start=0, e_local=n_routed, renormalize=renormalize)
+
+    y = grad_cast_bf16(y.reshape(B, S, d))
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, act="silu")
+    return y

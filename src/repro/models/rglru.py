@@ -1,0 +1,101 @@
+"""Real-Gated Linear Recurrent Unit blocks (Griffin / RecurrentGemma,
+arXiv:2402.19427).
+
+Temporal-mixing block: gated branch + (causal conv -> RG-LRU) branch,
+elementwise product, down-projection. Recurrence:
+
+    r_t = sigmoid(W_a x_t + b_a)                (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                (input gate)
+    a_t = exp(c * softplus(Lambda) * (-r_t))    (0 < a_t < 1, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+State is O(1) in sequence length (long_500k-eligible). Used in a 2:1
+pattern with local (sliding-window, MQA) attention in recurrentgemma-9b.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PSpec, dense, rmsnorm
+from .ssm import CONV_W, _causal_conv, _conv_step
+
+__all__ = ["rglru_spec", "rglru_scan", "rglru_step", "rglru_init_state"]
+
+C_FACTOR = 8.0
+
+
+def rglru_spec(d_model: int, *, lru_width: Optional[int] = None,
+               stack: Optional[int] = None) -> Dict[str, PSpec]:
+    dr = lru_width or d_model
+    st = (stack,) if stack else ()
+    pre = "stack," if stack else ""
+    return {
+        "norm": PSpec(st + (d_model,), pre + ".", init="ones"),
+        "w_gate": PSpec(st + (d_model, dr), pre + "fsdp,model",
+                        fan_in=d_model),
+        "w_x": PSpec(st + (d_model, dr), pre + "fsdp,model", fan_in=d_model),
+        "conv": PSpec(st + (CONV_W, dr), pre + ".,model", fan_in=CONV_W),
+        "w_a": PSpec(st + (dr, dr), pre + "model,.", fan_in=dr),
+        "b_a": PSpec(st + (dr,), pre + ".", init="zeros"),
+        "w_i": PSpec(st + (dr, dr), pre + "model,.", fan_in=dr),
+        "b_i": PSpec(st + (dr,), pre + ".", init="zeros"),
+        "lam": PSpec(st + (dr,), pre + ".", init="ones",
+                     dtype=jnp.float32),
+        "w_down": PSpec(st + (dr, d_model), pre + "model,fsdp", fan_in=dr),
+    }
+
+
+def rglru_init_state(batch: int, dr: int):
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_W - 1, dr), jnp.bfloat16)}
+
+
+def _lru_gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(uf, p["w_a"].astype(jnp.float32)) + p["b_a"])
+    i = jax.nn.sigmoid(dense(uf, p["w_i"].astype(jnp.float32)) + p["b_i"])
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, mult * (i * uf)
+
+
+def rglru_scan(p, x):
+    """x: (B, S, D) -> residual-branch output (B, S, D)."""
+    B, S, D = x.shape
+    xn = rmsnorm(x, p["norm"])
+    gate = jax.nn.gelu(dense(xn, p["w_gate"]).astype(jnp.float32),
+                       approximate=True)
+    u = _causal_conv(dense(xn, p["w_x"]), p["conv"])
+    a, bx = _lru_gates(p, u)  # (B,S,dr) each, f32
+
+    # associative scan over time: h_t = a_t h_{t-1} + b_t
+    def bin_op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    a_s, h = jax.lax.associative_scan(bin_op, (a, bx), axis=1)
+    y = (gate * h).astype(x.dtype)
+    conv_buf = jnp.pad(dense(xn, p["w_x"]), ((0, 0), (CONV_W - 1, 0), (0, 0))
+                       )[:, S:S + CONV_W - 1].astype(jnp.bfloat16)
+    state = {"h": h[:, -1].astype(jnp.float32), "conv": conv_buf}
+    return dense(y, p["w_down"]), state
+
+
+def rglru_step(p, x_t, state):
+    """x_t: (B, 1, D); state: {"h": (B,dr) f32, "conv": (B,3,dr)}."""
+    xn = rmsnorm(x_t[:, 0], p["norm"])
+    gate = jax.nn.gelu(dense(xn, p["w_gate"]).astype(jnp.float32),
+                       approximate=True)
+    ux = dense(xn, p["w_x"])
+    u, conv_buf = _conv_step(state["conv"], ux.astype(state["conv"].dtype),
+                             p["conv"])
+    a, bx = _lru_gates(p, u)
+    h = a * state["h"] + bx
+    y = (gate * h).astype(x_t.dtype)
+    out = dense(y, p["w_down"])[:, None, :]
+    return out, {"h": h, "conv": conv_buf}

@@ -1,0 +1,324 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with exponential gating).
+
+Faithful-to-structure implementation with the paper's stabilized
+exponential gating (m-state). Recurrences run as lax.scan over time for
+training/prefill; decode advances the state one step — the state is O(1)
+in sequence length, which is why xlstm-350m is a ``long_500k``-eligible
+architecture. Block layout follows the paper: mLSTM with pre-up-projection
+(factor 2) + causal conv + qkv heads; sLSTM with post-FFN (factor 4/3).
+Simplifications noted in DESIGN.md: single-direction scan only, conv width
+4, no bias on projections.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PSpec, dense, rmsnorm
+
+__all__ = [
+    "mlstm_spec", "mlstm_scan", "mlstm_step", "mlstm_init_state",
+    "slstm_spec", "slstm_scan", "slstm_step", "slstm_init_state",
+]
+
+CONV_W = 4
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (B, S, C), w: (CONV_W, C)."""
+    pads = jnp.pad(x, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(CONV_W))
+    return out
+
+
+def _conv_step(buf, x_t, w):
+    """buf: (B, CONV_W-1, C) previous inputs; x_t: (B, C)."""
+    full = jnp.concatenate([buf, x_t[:, None, :]], axis=1)  # (B, CONV_W, C)
+    out = jnp.einsum("bwc,wc->bc", full, w)
+    return out, full[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_spec(d_model: int, n_heads: int, *, proj_factor: float = 2.0,
+               stack: Optional[int] = None) -> Dict[str, PSpec]:
+    di = int(d_model * proj_factor)
+    st = (stack,) if stack else ()
+    pre = "stack," if stack else ""
+    return {
+        "norm": PSpec(st + (d_model,), pre + ".", init="ones"),
+        "w_up": PSpec(st + (d_model, di), pre + "fsdp,model",
+                      fan_in=d_model),
+        "w_z": PSpec(st + (d_model, di), pre + "fsdp,model", fan_in=d_model),
+        "conv": PSpec(st + (CONV_W, di), pre + ".,model", init="normal",
+                      fan_in=CONV_W),
+        "w_q": PSpec(st + (di, di), pre + "model,.", fan_in=di),
+        "w_k": PSpec(st + (di, di), pre + "model,.", fan_in=di),
+        "w_v": PSpec(st + (di, di), pre + "model,.", fan_in=di),
+        "w_i": PSpec(st + (d_model, n_heads), pre + "fsdp,.",
+                     fan_in=d_model),
+        "w_f": PSpec(st + (d_model, n_heads), pre + "fsdp,.",
+                     fan_in=d_model),
+        "out_norm": PSpec(st + (di,), pre + ".", init="ones"),
+        "w_down": PSpec(st + (di, d_model), pre + "model,fsdp", fan_in=di),
+    }
+
+
+def mlstm_init_state(batch: int, d_model: int, n_heads: int,
+                     proj_factor: float = 2.0, dtype=jnp.float32):
+    di = int(d_model * proj_factor)
+    dh = di // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, dh, dh), dtype),
+        "n": jnp.zeros((batch, n_heads, dh), dtype),
+        "m": jnp.full((batch, n_heads), -jnp.inf, dtype),
+        "conv": jnp.zeros((batch, CONV_W - 1, di), jnp.bfloat16),
+    }
+
+
+def _mlstm_cell(state, q, k, v, i_t, f_t):
+    """One recurrent step. q/k/v: (B,H,dh); i_t/f_t: (B,H) pre-activations.
+    Stabilized exponential gating (paper eq. 19-27)."""
+    C, n, m = state
+    dh = q.shape[-1]
+    k = k / math.sqrt(dh)
+    log_f = jax.nn.log_sigmoid(f_t.astype(jnp.float32))
+    m_new = jnp.maximum(log_f + m, i_t.astype(jnp.float32))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    i_g = jnp.exp(i_t.astype(jnp.float32) - m_safe)
+    f_g = jnp.exp(log_f + jnp.where(jnp.isfinite(m), m, -jnp.inf) - m_safe)
+    f_g = jnp.where(jnp.isfinite(m)[..., None, None], f_g[..., None, None],
+                    0.0)
+    kf, vf, qf = (a.astype(jnp.float32) for a in (k, v, q))
+    C_new = f_g * C + i_g[..., None, None] * (vf[..., :, None]
+                                              * kf[..., None, :])
+    n_new = (f_g[..., :, 0] * n + i_g[..., None] * kf)
+    h_num = jnp.einsum("bhvk,bhk->bhv", C_new, qf)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf)), 1.0)
+    h = h_num / h_den[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_gates(p, xn, up):
+    c = jax.nn.silu(_causal_conv(up, p["conv"]).astype(jnp.float32)
+                    ).astype(up.dtype)
+    q = dense(c, p["w_q"])
+    k = dense(c, p["w_k"])
+    v = dense(up, p["w_v"])
+    i_pre = dense(xn, p["w_i"])
+    f_pre = dense(xn, p["w_f"])
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_scan(p, x, *, n_heads: int):
+    """Full-sequence training/prefill. x: (B,S,D) -> (B,S,D) residual
+    branch output (caller adds residual)."""
+    B, S, D = x.shape
+    xn = rmsnorm(x, p["norm"])
+    up = dense(xn, p["w_up"])
+    z = dense(xn, p["w_z"])
+    di = up.shape[-1]
+    dh = di // n_heads
+    q, k, v, i_pre, f_pre = _mlstm_gates(p, xn, up)
+
+    def split(a):
+        return a.reshape(B, S, n_heads, dh)
+
+    q, k, v = split(q), split(k), split(v)
+
+    # Two-level chunked scan: the naive time scan's BACKWARD saves the
+    # (B, H, dh, dh) matrix state at every timestep — O(S * dh^2), which
+    # is what makes recurrent-form training infeasible at 4k+ context.
+    # Chunking + remat saves states only at chunk boundaries (O(S/C))
+    # and recomputes the C-step window in the backward pass.
+    CHUNK = 64
+    pad = (-S) % CHUNK
+    nchunks = (S + pad) // CHUNK
+
+    def padt(a):  # pad time axis (axis=1) and cut into chunks
+        a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        return jnp.moveaxis(
+            a.reshape((B, nchunks, CHUNK) + a.shape[2:]), 1, 0)
+
+    qc, kc, vc = padt(q), padt(k), padt(v)
+    ic, fc = padt(i_pre), padt(f_pre)
+    tvalid = jnp.moveaxis(jnp.broadcast_to(
+        (jnp.arange(S + pad) < S)[None, :], (B, S + pad)
+    ).reshape(B, nchunks, CHUNK), 1, 0)
+
+    @jax.checkpoint
+    def chunk_step(carry, inp):
+        qq, kk, vv, ii, ff, tv = inp
+
+        def step(c, t):
+            c2, h = _mlstm_cell(c, qq[:, t], kk[:, t], vv[:, t],
+                                ii[:, t], ff[:, t])
+            # padded timesteps must not perturb the state (prefill handoff)
+            ok = tv[:, t]
+            c2 = jax.tree.map(
+                lambda new, old: jnp.where(
+                    ok.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+                c2, c)
+            return c2, h
+        carry, hs = jax.lax.scan(step, carry, jnp.arange(CHUNK))
+        return carry, hs
+
+    C0 = jnp.zeros((B, n_heads, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, n_heads, dh), jnp.float32)
+    m0 = jnp.full((B, n_heads), -jnp.inf, jnp.float32)
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                    (qc, kc, vc, ic, fc, tvalid))
+    # hs: (nchunks, CHUNK, B, H, dh) -> (B, S, di)
+    hs = jnp.moveaxis(hs.reshape(nchunks * CHUNK, B, n_heads, dh), 0, 1)
+    hs = hs[:, :S]
+    h = hs.reshape(B, S, di).astype(x.dtype)
+    h = rmsnorm(h, p["out_norm"])
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    # last CONV_W-1 conv inputs (zero-padded when S < CONV_W-1)
+    conv_buf = jnp.pad(up, ((0, 0), (CONV_W - 1, 0), (0, 0))
+                       )[:, S:S + CONV_W - 1].astype(jnp.bfloat16)
+    state = {"C": Cf, "n": nf, "m": mf, "conv": conv_buf}
+    return dense(h, p["w_down"]), state
+
+
+def mlstm_step(p, x_t, state, *, n_heads: int):
+    """Single-token decode. x_t: (B,1,D); state from mlstm_init_state."""
+    B, _, D = x_t.shape
+    xn = rmsnorm(x_t[:, 0], p["norm"])
+    up = dense(xn, p["w_up"])
+    z = dense(xn, p["w_z"])
+    di = up.shape[-1]
+    dh = di // n_heads
+    c, conv_buf = _conv_step(state["conv"], up.astype(state["conv"].dtype),
+                             p["conv"])
+    c = jax.nn.silu(c.astype(jnp.float32)).astype(up.dtype)
+    q = dense(c, p["w_q"]).reshape(B, n_heads, dh)
+    k = dense(c, p["w_k"]).reshape(B, n_heads, dh)
+    v = dense(up, p["w_v"]).reshape(B, n_heads, dh)
+    i_pre = dense(xn, p["w_i"])
+    f_pre = dense(xn, p["w_f"])
+    (C, n, m), h = _mlstm_cell((state["C"], state["n"], state["m"]),
+                               q, k, v, i_pre, f_pre)
+    h = h.reshape(B, di).astype(x_t.dtype)
+    h = rmsnorm(h, p["out_norm"])
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x_t.dtype)
+    out = dense(h, p["w_down"])[:, None, :]
+    new_state = {"C": C, "n": n, "m": m, "conv": conv_buf}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_spec(d_model: int, n_heads: int, *, ff_factor: float = 4.0 / 3.0,
+               stack: Optional[int] = None) -> Dict[str, PSpec]:
+    st = (stack,) if stack else ()
+    pre = "stack," if stack else ""
+    dff = int(d_model * ff_factor)
+    return {
+        "norm": PSpec(st + (d_model,), pre + ".", init="ones"),
+        "w_gates": PSpec(st + (d_model, 4 * d_model), pre + "fsdp,model",
+                         fan_in=d_model),
+        "r_gates": PSpec(st + (n_heads, d_model // n_heads,
+                               4 * (d_model // n_heads)),
+                         pre + ".,.,.", fan_in=d_model),
+        "out_norm": PSpec(st + (d_model,), pre + ".", init="ones"),
+        "ffn_norm": PSpec(st + (d_model,), pre + ".", init="ones"),
+        "w_ff_gate": PSpec(st + (d_model, dff), pre + "fsdp,model",
+                           fan_in=d_model),
+        "w_ff_up": PSpec(st + (d_model, dff), pre + "fsdp,model",
+                         fan_in=d_model),
+        "w_ff_down": PSpec(st + (dff, d_model), pre + "model,fsdp",
+                           fan_in=dff),
+    }
+
+
+def slstm_init_state(batch: int, d_model: int, dtype=jnp.float32):
+    z = jnp.zeros((batch, d_model), dtype)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, d_model), -jnp.inf, dtype)}
+
+
+def _slstm_cell(p, state, gx, n_heads: int):
+    """gx: (B, 4D) input gate pre-activations. Head-blocked recurrence."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    B, D = c.shape
+    dh = D // n_heads
+    hr = h.reshape(B, n_heads, dh).astype(jnp.float32)
+    rec = jnp.einsum("bhk,hkg->bhg", hr, p["r_gates"].astype(jnp.float32))
+    g = gx.astype(jnp.float32).reshape(B, n_heads, 4 * dh) + rec
+    zi, ii, fi, oi = jnp.split(g, 4, axis=-1)  # each (B, H, dh)
+    zi, ii, fi, oi = (a.reshape(B, D) for a in (zi, ii, fi, oi))
+    zt = jnp.tanh(zi)
+    log_f = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(log_f + m, ii)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    i_g = jnp.exp(ii - m_safe)
+    f_g = jnp.where(jnp.isfinite(m), jnp.exp(log_f + m - m_safe), 0.0)
+    c_new = f_g * c + i_g * zt
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(oi) * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_scan(p, x, *, n_heads: int):
+    B, S, D = x.shape
+    xn = rmsnorm(x, p["norm"])
+    gx = dense(xn, p["w_gates"])  # (B,S,4D)
+
+    # chunked like mlstm_scan (backward saves chunk-boundary states only)
+    CHUNK = 64
+    pad = (-S) % CHUNK
+    nchunks = (S + pad) // CHUNK
+    gxp = jnp.pad(gx, ((0, 0), (0, pad), (0, 0)))
+    gxc = jnp.moveaxis(
+        gxp.reshape(B, nchunks, CHUNK, gx.shape[-1]), 1, 0)
+    tvalid = jnp.moveaxis(jnp.broadcast_to(
+        (jnp.arange(S + pad) < S)[None, :], (B, S + pad)
+    ).reshape(B, nchunks, CHUNK), 1, 0)
+
+    @jax.checkpoint
+    def chunk_step(state, inp):
+        gchunk, tv = inp
+
+        def step(st, t):
+            st2 = _slstm_cell(p, st, gchunk[:, t], n_heads)
+            ok = tv[:, t][:, None]
+            st2 = jax.tree.map(lambda n, o: jnp.where(ok, n, o), st2, st)
+            return st2, st2["h"]
+        return jax.lax.scan(step, state, jnp.arange(CHUNK))
+
+    final_state, hs = jax.lax.scan(chunk_step, slstm_init_state(B, D),
+                                   (gxc, tvalid))
+    hs = jnp.moveaxis(hs.reshape(nchunks * CHUNK, B, D), 0, 1)[:, :S]
+    h = hs.astype(x.dtype)
+    h = rmsnorm(h, p["out_norm"])
+    # post-FFN (paper: sLSTM block with ff factor 4/3, gated)
+    y = x + h  # inner residual around the recurrence
+    yn = rmsnorm(y, p["ffn_norm"])
+    ff = (jax.nn.silu(dense(yn, p["w_ff_gate"]).astype(jnp.float32)
+                      ).astype(x.dtype) * dense(yn, p["w_ff_up"]))
+    return h + dense(ff, p["w_ff_down"]), final_state
+
+
+def slstm_step(p, x_t, state, *, n_heads: int):
+    B = x_t.shape[0]
+    xn = rmsnorm(x_t[:, 0], p["norm"])
+    gx = dense(xn, p["w_gates"])
+    state = _slstm_cell(p, state, gx, n_heads)
+    h = state["h"].astype(x_t.dtype)
+    h = rmsnorm(h, p["out_norm"])
+    y = x_t[:, 0] + h
+    yn = rmsnorm(y, p["ffn_norm"])
+    ff = (jax.nn.silu(dense(yn, p["w_ff_gate"]).astype(jnp.float32)
+                      ).astype(x_t.dtype) * dense(yn, p["w_ff_up"]))
+    out = (h + dense(ff, p["w_ff_down"]))[:, None, :]
+    return out, state

@@ -1,0 +1,2 @@
+"""Serving substrate: prefill/decode with static cache buffers."""
+from . import engine  # noqa: F401

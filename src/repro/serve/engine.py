@@ -1,0 +1,84 @@
+"""Serving engine: batched prefill + decode with static cache buffers.
+
+``make_serve_fns(cfg, mesh)`` builds the jitted pair:
+  prefill(params, tokens)             -> (next_token_logits, cache)
+  decode_step(params, cache, tok, pos)-> (logits, cache)   [donated cache]
+
+Caches follow models/lm.py layouts; attention KV buffers are allocated at
+``max_len`` and sharded (batch over data, KV-seq over model — the
+flash-decoding split; see sharding.py). Recurrent archs carry O(1) state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import encdec as ED
+from ..models import layers as L
+from ..models import lm as LM
+
+__all__ = ["make_serve_fns", "place_prefill_cache", "greedy_generate"]
+
+
+def place_prefill_cache(cfg: LM.ArchCfg, prefill_cache, buffers, seq_len):
+    """Copy prefill-produced caches (length S) into max_len buffers.
+    Recurrent entries are final states and replace the buffer outright."""
+    def merge(path, buf, new):
+        if new is None:
+            return buf
+        # attention kv / mla latents: (…, S, …) -> paste at offset 0
+        if buf.ndim == new.ndim and buf.shape != new.shape:
+            idx = tuple(0 for _ in buf.shape)
+            return jax.lax.dynamic_update_slice(
+                buf, new.astype(buf.dtype), idx)
+        return new.astype(buf.dtype)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, b, n: merge(p, b, n), buffers, prefill_cache)
+
+
+def make_serve_fns(cfg: LM.ArchCfg, mesh=None, *,
+                   batch: int, max_len: int,
+                   prefix_embeds: bool = False):
+    """Returns (prefill_fn, decode_fn, init_cache_fn)."""
+
+    def init_cache_fn():
+        return LM.init_cache(cfg, batch, max_len)
+
+    def prefill_fn(params, tokens, prefix=None):
+        logits, cache = LM.lm_forward(
+            params, tokens, cfg, mesh=mesh, prefix_embeds=prefix,
+            return_cache=True, last_only=True)
+        return logits, cache
+
+    def decode_fn(params, cache, tokens, pos):
+        return LM.lm_decode_step(params, cache, tokens, pos, cfg, mesh=mesh)
+
+    prefill_jit = jax.jit(prefill_fn)
+    decode_jit = jax.jit(decode_fn, donate_argnums=(1,))
+    return prefill_jit, decode_jit, init_cache_fn
+
+
+def greedy_generate(cfg: LM.ArchCfg, params, prompt_tokens: np.ndarray,
+                    *, num_new: int, max_len: Optional[int] = None,
+                    mesh=None, prefix=None):
+    """End-to-end batched greedy decoding (prefill -> N decode steps)."""
+    B, S = prompt_tokens.shape
+    max_len = max_len or (S + num_new + 1)
+    prefill, decode, init_cache = make_serve_fns(
+        cfg, mesh, batch=B, max_len=max_len)
+    logits, pre_cache = prefill(params, jnp.asarray(prompt_tokens),
+                                prefix)
+    cache = place_prefill_cache(cfg, pre_cache, init_cache(), S)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    out = [np.asarray(tok)]
+    pos = S
+    for _ in range(num_new - 1):
+        logits, cache = decode(params, cache, tok, jnp.int32(pos))
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        out.append(np.asarray(tok))
+        pos += 1
+    return np.concatenate(out, axis=1)

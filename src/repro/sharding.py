@@ -1,0 +1,115 @@
+"""Mesh-aware sharding rules (FSDP x TP x optional pod DP).
+
+Single source of truth for how every tensor class is laid out on the
+production meshes:
+
+  (16, 16)    ("data", "model")           — one pod, 256 chips
+  (2, 16, 16) ("pod", "data", "model")    — two pods, 512 chips
+
+Rules:
+  * batch/tokens  : ("pod", "data")  (pod axis joins data parallelism)
+  * params        : FSDP over ("pod","data") on the largest divisible dim
+                    x TP over "model" on the contraction/feature dim
+  * attention     : query/kv heads over "model" when divisible, else the
+                    KV sequence axis (flash-decoding style) for decode
+  * MoE experts   : over "model" (expert parallelism)
+  * vocab/embed   : vocab over "model"
+  * graph engine  : shard axis over every mesh axis flattened
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "batch_axes", "fsdp_axes", "model_axis", "spec", "shard",
+    "logical_to_spec", "param_sharding_rules",
+]
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return batch_axes(mesh)
+
+
+def model_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def axis_size(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    s = 1
+    for n in names:
+        s *= mesh.shape[n]
+    return s
+
+
+def spec(mesh: Mesh, *axes) -> NamedSharding:
+    return NamedSharding(mesh, P(*axes))
+
+
+def shard(mesh: Mesh, x, *axes):
+    return jax.device_put(x, spec(mesh, *axes))
+
+
+# ---------------------------------------------------------------------------
+# Logical axis names -> PartitionSpec. Model code annotates params with
+# logical axes; this table maps them onto the physical mesh.
+# ---------------------------------------------------------------------------
+
+def logical_to_spec(mesh: Mesh, logical: Sequence[Optional[str]],
+                    shape: Sequence[int]) -> P:
+    """Map logical axis names to mesh axes, dropping assignments that do
+    not divide the dimension (padding-free rule)."""
+    b = batch_axes(mesh)
+    m = model_axis(mesh)
+    table = {
+        None: None,
+        "batch": b if b else None,
+        "fsdp": b if b else None,          # FSDP shards dim over data(+pod)
+        "model": m,
+        "expert": m,
+        "vocab": m,
+        "seq": None,
+        "kv_seq_model": m,                 # decode flash-split
+        "kv_seq_pdm": tuple(list(b) + ([m] if m else [])) or None,
+        "seq_model": m,                    # sequence parallelism
+        "heads": m,
+        "stack": None,                     # scan-stacked layer dim
+    }
+    out = []
+    for ax_logical, dim in zip(logical, shape):
+        phys = table.get(ax_logical, None)
+        if phys is None:
+            out.append(None)
+            continue
+        sz = axis_size(mesh, phys)
+        if dim % sz != 0:
+            out.append(None)  # not divisible: replicate rather than pad
+        else:
+            out.append(phys)
+    return P(*out)
+
+
+def parse_axes(s: str):
+    """'fsdp,model' -> ("fsdp", "model"); '.' entries mean replicated."""
+    return tuple(None if a in (".", "") else a for a in s.split(","))
+
+
+def param_sharding_rules(mesh: Mesh, abstract_params, logical_axes):
+    """abstract_params: pytree of ShapeDtypeStruct; logical_axes: matching
+    pytree of comma-joined logical-axis STRINGS (string = leaf, so the two
+    trees share a structure). Returns pytree of NamedSharding."""
+    def one(a, names):
+        ax = parse_axes(names)
+        assert len(ax) == len(a.shape), (names, a.shape)
+        return NamedSharding(mesh, logical_to_spec(mesh, ax, a.shape))
+    return jax.tree.map(one, abstract_params, logical_axes)

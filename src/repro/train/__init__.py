@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, loop, checkpointing, compression."""
+from . import checkpoint, compress, loop, optimizer  # noqa: F401

@@ -1,0 +1,181 @@
+"""Fault-tolerant checkpointing.
+
+Design (scales to multi-host; degenerates cleanly to this 1-process box):
+  * one ``.npz`` per process holding that process's addressable shards,
+    keys are flattened pytree paths + global shapes (resume-with-reshard:
+    a checkpoint saved on one mesh restores onto any other mesh — shards
+    are re-cut by ``device_put`` with the new sharding),
+  * two-phase commit: write to ``step_XXXX.tmp/``, fsync, atomic rename to
+    ``step_XXXX/`` and update a ``LATEST`` pointer file last — a crash
+    mid-write never corrupts the restore point,
+  * async double-buffered saves: device_get happens synchronously (cheap,
+    sharded), file IO runs on a background thread; at most one in flight,
+  * ``restore_latest`` walks backwards past incomplete directories.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "restore_latest", "Checkpointer"]
+
+_SEP = "//"
+_DT = "@@"  # dtype tag for numpy-unrepresentable dtypes (bfloat16 etc.)
+
+
+def _encode(arr: np.ndarray):
+    """np.savez can't store ml_dtypes (bfloat16) — view as uint16/uint8
+    and tag the key with the real dtype."""
+    if arr.dtype.kind == "V" or "bfloat16" in arr.dtype.name:
+        return arr.view(np.uint16), "bfloat16"
+    if "float8" in arr.dtype.name:
+        return arr.view(np.uint8), arr.dtype.name
+    return arr, None
+
+
+def _decode(arr: np.ndarray, dtype_name: str):
+    if dtype_name is None:
+        return arr
+    import ml_dtypes
+    return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr, tag = _encode(np.asarray(leaf))
+        flat[key + (_DT + tag if tag else "")] = arr
+    return flat
+
+
+def save(directory: str, step: int, tree, *, extra: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    proc = jax.process_index()
+    np.savez(os.path.join(tmp, f"shard_{proc:05d}.npz"), **flat)
+    meta = {"step": step, "num_processes": jax.process_count(),
+            "keys": sorted(flat), **(extra or {})}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(os.path.join(directory, "LATEST.tmp"),
+              os.path.join(directory, "LATEST"))
+    return final
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray],
+                    shardings=None):
+    # strip dtype tags into a lookup
+    decoded = {}
+    for k, v in flat.items():
+        if _DT in k:
+            base, tag = k.split(_DT, 1)
+            decoded[base] = _decode(v, tag)
+        else:
+            decoded[k] = v
+    paths = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else None)
+    for i, (path, leaf) in enumerate(paths[0]):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = decoded[key]
+        if shard_leaves is not None:
+            arr = jax.device_put(arr, shard_leaves[i])
+        leaves.append(arr)
+    return jax.tree.unflatten(paths[1], leaves)
+
+
+def restore(path: str, template, *, shardings=None) -> Tuple[Any, dict]:
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    flat: Dict[str, np.ndarray] = {}
+    for fn in sorted(os.listdir(path)):
+        if fn.startswith("shard_") and fn.endswith(".npz"):
+            with np.load(os.path.join(path, fn)) as z:
+                for k in z.files:
+                    flat[k] = z[k]
+    return _unflatten_into(template, flat, shardings), meta
+
+
+def restore_latest(directory: str, template, *, shardings=None):
+    """Walk back past incomplete checkpoints. Returns (tree, meta) or
+    (None, None) if nothing restorable."""
+    if not os.path.isdir(directory):
+        return None, None
+    candidates = sorted(
+        (d for d in os.listdir(directory)
+         if d.startswith("step_") and not d.endswith(".tmp")),
+        reverse=True)
+    latest = os.path.join(directory, "LATEST")
+    if os.path.exists(latest):
+        with open(latest) as f:
+            pointed = f.read().strip()
+        if pointed in candidates:
+            candidates.remove(pointed)
+            candidates.insert(0, pointed)
+    for name in candidates:
+        path = os.path.join(directory, name)
+        if not os.path.exists(os.path.join(path, "meta.json")):
+            continue  # incomplete — crashed mid-write
+        try:
+            return restore(path, template, shardings=shardings)
+        except Exception:
+            continue
+    return None, None
+
+
+class Checkpointer:
+    """Async double-buffered checkpoint writer with retention."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save_async(self, step: int, tree, *, extra: Optional[dict] = None):
+        host_tree = jax.tree.map(np.asarray, tree)  # sync device_get
+        self.wait()
+
+        def work():
+            save(self.directory, step, host_tree, extra=extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(
+            (d for d in os.listdir(self.directory)
+             if d.startswith("step_") and not d.endswith(".tmp")))
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, d),
+                          ignore_errors=True)

@@ -1,0 +1,71 @@
+"""Gradient compression for the slowest link tier (cross-pod DCI).
+
+The paper's central move is shrinking what crosses the slowest network by
+exchanging the compact dual (updates) instead of the expanded stream
+(messages). The DP analogue: pods exchange int8 block-scaled gradients
+instead of f32/bf16 — 4x/2x fewer wire bytes on the pod axis, where
+bandwidth is scarcest.
+
+``allreduce_int8(x, axis)`` is used inside shard_map over the "pod" axis:
+per-block absmax scales (f32, one per 256 values) + int8 payload are
+all_gathered, dequantized, and summed. Stochastic rounding keeps the
+quantizer unbiased (E[q] = x), which is what makes SGD tolerate it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "allreduce_int8",
+           "wire_bytes"]
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    return flat.reshape(-1, BLOCK), n
+
+
+def quantize_int8(x, key) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """x: any-shape f32/bf16 -> (int8 blocks, f32 scales, orig_size).
+    Stochastic rounding: unbiased."""
+    blocks, n = _pad_to_block(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    y = blocks / scale
+    noise = jax.random.uniform(key, y.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0], n
+
+
+def dequantize_int8(q, scale, n, shape, dtype):
+    x = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return x.reshape(shape).astype(dtype)
+
+
+def allreduce_int8(x, axis: str, key):
+    """Unbiased int8 all-reduce over a mesh axis (use inside shard_map).
+    Wire bytes per element: 1 (payload) + 4/BLOCK (scales) vs 4 for f32."""
+    q, scale, n = quantize_int8(x, key)
+    q_all = jax.lax.all_gather(q, axis)          # (P, nblk, BLOCK) int8
+    s_all = jax.lax.all_gather(scale, axis)      # (P, nblk) f32
+    deq = q_all.astype(jnp.float32) * s_all[..., None]
+    total = jnp.sum(deq, axis=0).reshape(-1)[:n]
+    return total.reshape(x.shape).astype(x.dtype)
+
+
+def wire_bytes(num_elements: int, dtype_bytes: int = 4) -> dict:
+    """Analytic wire cost per element for EXPERIMENTS.md."""
+    blocks = -(-num_elements // BLOCK)
+    return {
+        "f32_psum": num_elements * dtype_bytes,
+        "int8_allgather": num_elements + blocks * 4,
+        "ratio": (num_elements * dtype_bytes)
+                 / (num_elements + blocks * 4),
+    }

@@ -1,0 +1,214 @@
+"""Training loop: jitted train_step builder + fault-tolerant driver.
+
+``make_train_step(cfg, mesh)`` builds the family-appropriate loss/step;
+``Trainer`` wires data, checkpointing (async, atomic), resume, and
+restart-after-failure. Synchronous SPMD has no intra-step stragglers; the
+cross-step mitigation is the checkpoint cadence + deterministic data (see
+data/pipeline.py) + elastic resume (checkpoints restore onto any mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import sharding as SH
+from ..data.pipeline import DataConfig, SyntheticTokens
+from ..models import encdec as ED
+from ..models import layers as L
+from ..models import lm as LM
+from . import checkpoint as CKPT
+from .optimizer import (AdamWConfig, AdamWState, adamw_init, adamw_update,
+                        clip_by_global_norm)
+
+__all__ = ["make_forward", "make_train_step", "Trainer", "TrainConfig"]
+
+
+def cross_entropy(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_forward(cfg: LM.ArchCfg, mesh=None) -> Callable:
+    """batch dict -> logits, per family."""
+    if cfg.family == "encdec":
+        def fwd(params, batch):
+            return ED.encdec_forward(params, batch["frames"],
+                                     batch["tokens"], cfg, mesh=mesh)
+        return fwd
+    if cfg.family == "vlm":
+        def fwd(params, batch):
+            return LM.lm_forward(params, batch["tokens"], cfg, mesh=mesh,
+                                 prefix_embeds=batch["patch_embeds"])
+        return fwd
+
+    def fwd(params, batch):
+        return LM.lm_forward(params, batch["tokens"], cfg, mesh=mesh)
+    return fwd
+
+
+def make_loss(cfg: LM.ArchCfg, mesh=None) -> Callable:
+    fwd = make_forward(cfg, mesh)
+
+    def loss_fn(params, batch):
+        logits = fwd(params, batch)
+        labels = batch["labels"]
+        if cfg.family == "vlm":
+            # prefix positions carry no LM loss
+            logits = logits[:, cfg.prefix_len:, :]
+        return cross_entropy(logits, labels)
+    return loss_fn
+
+
+def make_train_step(cfg: LM.ArchCfg, opt_cfg: AdamWConfig, mesh=None,
+                    *, microbatch: Optional[int] = None,
+                    accum_dtype=jnp.float32) -> Callable:
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``microbatch``: optional gradient-accumulation factor (splits the batch
+    along axis 0 into chunks scanned sequentially — activation memory
+    divides by the factor at identical math)."""
+    loss_fn = make_loss(cfg, mesh)
+    if getattr(cfg, "accum_bf16", False):
+        accum_dtype = jnp.bfloat16
+
+    def step_fn(params, opt_state, batch, step):
+        if microbatch and microbatch > 1:
+            # reshape (B, ...) -> (mb, B/mb, ...) and scan over axis 0.
+            # NEVER dynamic-slice the sharded batch axis with a traced
+            # index — SPMD would all-gather the whole batch per chunk.
+            def to_chunks(a):
+                a = a.reshape((microbatch, a.shape[0] // microbatch)
+                              + a.shape[1:])
+                if mesh is not None:
+                    from .. import sharding as SHs
+                    spec = SHs.logical_to_spec(
+                        mesh, (None, "batch") + (None,) * (a.ndim - 2),
+                        a.shape)
+                    a = jax.lax.with_sharding_constraint(
+                        a, jax.sharding.NamedSharding(mesh, spec))
+                return a
+
+            chunks = jax.tree.map(to_chunks, batch)
+
+            def acc_body(carry, mb_batch):
+                loss_sum, grad_sum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb_batch)
+                return (loss_sum + l,
+                        jax.tree.map(
+                            lambda a, b: a + b.astype(accum_dtype),
+                            grad_sum, g)), ()
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), zero), chunks,
+                unroll=microbatch if getattr(cfg, "scan_unroll", False)
+                else 1)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt_state = adamw_update(grads, opt_state, params, opt_cfg,
+                                         step)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 200
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    microbatch: Optional[int] = None
+    seed: int = 0
+
+
+class Trainer:
+    """Restartable trainer. Construction is cheap; ``run`` resumes from the
+    latest complete checkpoint automatically (fault tolerance: kill the
+    process at any point and call run() again)."""
+
+    def __init__(self, cfg: LM.ArchCfg, data_cfg: DataConfig,
+                 opt_cfg: AdamWConfig, tc: TrainConfig, mesh=None):
+        self.cfg, self.data_cfg, self.opt_cfg, self.tc = (
+            cfg, data_cfg, opt_cfg, tc)
+        self.mesh = mesh
+        if cfg.family == "encdec":
+            self.spec = ED.encdec_spec(cfg, cfg.n_enc, cfg.n_dec)
+        else:
+            self.spec = LM.lm_spec(cfg)
+        self.data = SyntheticTokens(data_cfg)
+        self._step_fn = jax.jit(
+            make_train_step(cfg, opt_cfg, mesh, microbatch=tc.microbatch),
+            donate_argnums=(0, 1))
+        self.ckpt = (CKPT.Checkpointer(tc.ckpt_dir)
+                     if tc.ckpt_dir else None)
+
+    def _init_state(self):
+        params = L.init_params(jax.random.PRNGKey(self.tc.seed), self.spec)
+        return params, adamw_init(params)
+
+    def _make_batch(self, step: int) -> Dict[str, Any]:
+        b = self.data.batch(step)
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            n = b["tokens"].shape[0]
+            rng = np.random.default_rng([step, 7])
+            b["patch_embeds"] = rng.standard_normal(
+                (n, cfg.prefix_len, cfg.d_model), dtype=np.float32
+            ).astype(jnp.bfloat16)
+        if cfg.family == "encdec":
+            n = b["tokens"].shape[0]
+            rng = np.random.default_rng([step, 11])
+            enc_len = min(self.data_cfg.seq_len, 64)
+            b["frames"] = rng.standard_normal(
+                (n, enc_len, cfg.d_model), dtype=np.float32
+            ).astype(jnp.bfloat16)
+        return b
+
+    def run(self, *, fail_at_step: Optional[int] = None) -> Dict[str, Any]:
+        """Train to tc.steps, resuming from the latest checkpoint.
+        ``fail_at_step`` injects a crash (for fault-tolerance tests)."""
+        params, opt_state = self._init_state()
+        start = 0
+        if self.ckpt:
+            restored, meta = CKPT.restore_latest(
+                self.tc.ckpt_dir, {"params": params, "opt": opt_state})
+            if restored is not None:
+                # device_put (donation requires jax.Array, not numpy)
+                params = jax.tree.map(jnp.asarray, restored["params"])
+                opt_state = jax.tree.map(jnp.asarray, restored["opt"])
+                start = int(meta["step"]) + 1
+        losses = []
+        t0 = time.time()
+        for step in range(start, self.tc.steps):
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = self._make_batch(step)
+            params, opt_state, metrics = self._step_fn(
+                params, opt_state, batch, jnp.int32(step))
+            if step % self.tc.log_every == 0 or step == self.tc.steps - 1:
+                losses.append((step, float(metrics["loss"])))
+            if self.ckpt and (step % self.tc.ckpt_every == 0
+                              or step == self.tc.steps - 1):
+                self.ckpt.save_async(
+                    step, {"params": params, "opt": opt_state},
+                    extra={"arch": self.cfg.name})
+        if self.ckpt:
+            self.ckpt.wait()
+        return {"losses": losses, "params": params,
+                "seconds": time.time() - t0, "final_step": self.tc.steps - 1}

@@ -1,0 +1,95 @@
+"""AdamW with warmup-cosine schedule, global-norm clipping.
+
+Written from scratch (no optax in this environment). Optimizer moments are
+fp32 and inherit the FSDP sharding of their parameters (ZeRO-3-equivalent:
+each device holds only its param shard's m/v). Params may be bf16; the
+update is computed in fp32 and cast back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "warmup_cosine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    lr_min: float = 3e-5
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def warmup_cosine(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / max(1, cfg.warmup_steps)
+    t = (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(
+        jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig, step):
+    lr = warmup_cosine(cfg, step)
+    c = state.count + 1
+    cf = c.astype(jnp.float32)
+    b1c = 1.0 - cfg.b1 ** cf
+    b2c = 1.0 - cfg.b2 ** cf
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = pf - lr * (step_ + wd * pf)
+        return new_p.astype(p.dtype), m2, v2
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(m=new_m, v=new_v, count=c)

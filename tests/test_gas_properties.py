@@ -1,0 +1,74 @@
+"""Programming-model contract properties (hypothesis).
+
+DESIGN.md §9 assumption 2: hardware delivers messages in arbitrary order,
+so gather must be order-insensitive. Our engine pre-aggregates with a
+combiner; these tests check the built-in kernels' combiners are genuinely
+commutative/associative monoids and that results are delivery-order
+independent end-to-end (by permuting edge insertion order)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import algorithms as ALG
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core.engine import Engine
+from repro.kernels import ops as kops
+
+
+@settings(max_examples=50, deadline=None)
+@given(vals=st.lists(st.integers(-10 ** 6, 10 ** 6), min_size=1,
+                     max_size=20),
+       combiner=st.sampled_from(["min", "max", "add"]),
+       seed=st.integers(0, 100))
+def test_combiner_monoid_laws(vals, combiner, seed):
+    rng = np.random.default_rng(seed)
+    arr = np.array(vals, np.int64)
+    op = {"min": np.minimum, "max": np.maximum, "add": np.add}[combiner]
+    ident = kops.identity_for(combiner, jnp.int32)
+    # identity
+    assert op(arr[0], ident) == arr[0]
+    # commutativity under random permutation: fold result is invariant
+    perm = rng.permutation(len(arr))
+    fold = arr[0]
+    for v in arr[1:]:
+        fold = op(fold, v)
+    fold_p = arr[perm][0]
+    for v in arr[perm][1:]:
+        fold_p = op(fold_p, v)
+    assert fold == fold_p
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_delivery_order_independence(seed):
+    """Permuting the edge list (=> different message generation order and
+    different lane assignment) must not change any algorithm result."""
+    rng = np.random.default_rng(seed)
+    g = G.uniform(120, 4.0, seed=seed).symmetrized()
+    perm = rng.permutation(g.num_edges)
+    g2 = G.Graph(g.num_vertices, g.src[perm], g.dst[perm],
+                 None if g.weights is None else g.weights[perm])
+    for kfn in (ALG.wcc, lambda: ALG.bfs(0)):
+        outs = []
+        for gg in (g, g2):
+            pg = PT.partition_graph(gg, 4, pad_multiple=16)
+            outs.append(Engine(kfn(), pg, mode="gravfm",
+                               backend="ref").run().state)
+        for k in outs[0]:
+            assert np.array_equal(outs[0][k], outs[1][k])
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.sampled_from([1, 2, 3, 4, 8]), seed=st.integers(0, 50))
+def test_partition_count_independence(p, seed):
+    """Results must be independent of the shard count (the generated
+    'system size' is a deployment knob, not a semantic one)."""
+    g = G.uniform(100, 4.0, seed=seed).symmetrized()
+    base = None
+    pg = PT.partition_graph(g, p, pad_multiple=8)
+    res = Engine(ALG.wcc(), pg, mode="gravfm", backend="ref").run()
+    pg1 = PT.partition_graph(g, 1, pad_multiple=8)
+    ref = Engine(ALG.wcc(), pg1, mode="gravfm", backend="ref").run()
+    assert np.array_equal(res.state["label"], ref.state["label"])

@@ -1,0 +1,119 @@
+"""Partitioner + layout invariants (hypothesis property tests).
+
+These are the paper-§4.4 guarantees the engine relies on: exact edge
+conservation across both Fig. 4 layouts, ownership bijection, neighbor
+filter correctness, and the balance claims of Fig. 12.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+from repro.core import partition as PT
+
+
+@st.composite
+def small_graphs(draw):
+    v = draw(st.integers(2, 120))
+    e = draw(st.integers(0, 500))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v, size=e).astype(np.int32)
+    dst = rng.integers(0, v, size=e).astype(np.int32)
+    w = rng.uniform(0.1, 1.0, size=e).astype(np.float32)
+    return G.Graph(v, src, dst, w)
+
+
+@settings(max_examples=40, deadline=None)
+@given(g=small_graphs(), p=st.sampled_from([1, 2, 4, 7]),
+       method=st.sampled_from(["round_robin", "greedy", "snake_lpt",
+                               "ldg"]))
+def test_partition_invariants(g, p, method):
+    pg = PT.partition_graph(g, p, method=method, pad_multiple=8)
+    # ownership bijection
+    assert pg.part_of.shape == (g.num_vertices,)
+    assert (pg.part_of >= 0).all() and (pg.part_of < p).all()
+    assert pg.vert_valid.sum() == g.num_vertices
+    gids = pg.vert_gid[pg.vert_valid]
+    assert sorted(gids.tolist()) == list(range(g.num_vertices))
+    # edge conservation in BOTH layouts (Fig. 4)
+    assert int(pg.in_valid.sum()) == g.num_edges
+    assert int(pg.pair_valid.sum()) == g.num_edges
+    # GraVF-M CSC: every in-edge lands on its destination's shard
+    for shard in range(p):
+        v = pg.in_valid[shard]
+        dl = pg.in_dst_local[shard][v]
+        assert (dl < pg.v_max).all()
+        owners = pg.vert_gid[shard][dl]
+        dpart = pg.part_of[owners]
+        assert (dpart == shard).all()
+    # out-degrees preserved
+    od = np.zeros(g.num_vertices, np.int64)
+    od[pg.vert_gid[pg.vert_valid]] = pg.out_deg[pg.vert_valid]
+    assert (od == g.out_degrees()).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(g=small_graphs(), p=st.sampled_from([2, 4]))
+def test_neighbor_filter(g, p):
+    """§4.3 filter bitmap: filter[v, q] iff v has an out-neighbor on q."""
+    pg = PT.partition_graph(g, p, pad_multiple=8)
+    expect = np.zeros((g.num_vertices, p), bool)
+    for s, d in zip(g.src, g.dst):
+        expect[s, pg.part_of[d]] = True
+    assert (pg.nbr_filter == expect).all()
+
+
+def test_greedy_balance_quality():
+    """Paper §4.4: greedy edge balance is near-perfect even unsorted; on a
+    skewed RMAT graph it beats round-robin. Hub vertices bound what any
+    partitioner can do: greedy satisfies max_load <= mean + max_degree."""
+    g = G.rmat(10, 8, seed=5)
+    deg = g.out_degrees()
+
+    def loads(method):
+        part = PT.PARTITIONERS[method](g, 8)
+        return np.bincount(part, weights=deg, minlength=8)
+
+    gr = loads("greedy")
+    rr = loads("round_robin")
+    assert gr.max() <= gr.mean() + deg.max()       # classic greedy bound
+    assert gr.max() <= rr.max() + 1e-9             # beats round robin
+    # and on a hub-free uniform graph, greedy IS near-perfect
+    gu = G.uniform(1000, 8.0, seed=5)
+    part = PT.PARTITIONERS["greedy"](gu, 8)
+    lu = np.bincount(part, weights=gu.out_degrees(), minlength=8)
+    assert lu.max() / lu.mean() <= 1.01
+
+
+def test_ldg_reduces_cross_edges():
+    """LDG (METIS stand-in) should cut cross-shard edges vs round-robin on
+    a community-structured graph."""
+    # two dense communities + a few bridges
+    rng = np.random.default_rng(0)
+    n = 200
+    a = rng.integers(0, n // 2, size=(2000, 2))
+    b = rng.integers(n // 2, n, size=(2000, 2))
+    bridges = np.stack([rng.integers(0, n // 2, 20),
+                        rng.integers(n // 2, n, 20)], axis=1)
+    e = np.concatenate([a, b, bridges])
+    g = G.Graph(n, e[:, 0].astype(np.int32), e[:, 1].astype(np.int32))
+
+    def cross(method):
+        pg = PT.partition_graph(g, 2, method=method, pad_multiple=8)
+        return PT.edge_balance(pg)["cross_frac"]
+
+    assert cross("ldg") < cross("round_robin")
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_generators_well_formed(seed):
+    for g in (G.uniform(100, 3.0, seed=seed), G.rmat(6, 4, seed=seed),
+              G.ladder(4, 5, 2, seed=seed), G.road(8, seed=seed)):
+        assert (g.src >= 0).all() and (g.src < g.num_vertices).all()
+        assert (g.dst >= 0).all() and (g.dst < g.num_vertices).all()
+        assert (g.src != g.dst).all()  # no self loops after cleanup
+        # dedup: no repeated (src, dst)
+        key = g.src.astype(np.int64) * g.num_vertices + g.dst
+        assert len(np.unique(key)) == g.num_edges

@@ -1,0 +1,117 @@
+"""§5 analytical model: validated against the paper's own published
+numbers (Table 3 peaks vs model limits, eq. 5 speedup, §5.7 optimizer)."""
+import math
+
+import pytest
+
+from repro.core import perfmodel as pm
+
+WL_PEAK = pm.Workload(num_vertices=2 ** 21, num_edges=32 * 2 ** 21)
+# Table 3 peak MTEPS (paper, 4 FPGAs, edgefactor-32 dataset)
+REPORTED = {"wcc": 5.791e9, "bfs": 5.493e9, "pagerank": 4.623e9}
+
+
+@pytest.mark.parametrize("algo", ["wcc", "bfs", "pagerank"])
+def test_paper_peaks_within_model_limits(algo):
+    """The paper reports reaching 'up to 94% of the projected limit'.
+    Check every reported peak is (a) below the model limit and (b) at
+    least 85% of it — i.e. the model reproduces §6's relationship."""
+    lim = pm.limits(pm.PAPER_PLATFORM, pm.PAPER_ALGOS[algo], WL_PEAK,
+                    n_nodes=4, mode="gravfm")
+    frac = REPORTED[algo] / lim["T_sys"]
+    assert 0.85 <= frac <= 1.0, (algo, frac)
+
+
+def test_pe_limit_is_binding_at_peak():
+    """On the paper's platform at edgefactor 32, GraVF-M removes the
+    network bottleneck: L_PE binds (paper §6.3.3)."""
+    lim = pm.limits(pm.PAPER_PLATFORM, pm.PAPER_ALGOS["wcc"], WL_PEAK,
+                    n_nodes=4, mode="gravfm")
+    assert lim["bottleneck"] == "L_PE"
+
+
+def test_gravf_baseline_is_network_bound():
+    """...whereas GraVF (unicast) is interface-bound on the same setup,
+    which is the paper's whole motivation (Fig. 7)."""
+    lim = pm.limits(pm.PAPER_PLATFORM, pm.PAPER_ALGOS["wcc"], WL_PEAK,
+                    n_nodes=4, mode="gravf")
+    assert lim["bottleneck"] in ("L_if", "L_net")
+    lim_m = pm.limits(pm.PAPER_PLATFORM, pm.PAPER_ALGOS["wcc"], WL_PEAK,
+                      n_nodes=4, mode="gravfm")
+    assert lim_m["T_sys"] > lim["T_sys"]
+
+
+def test_eq5_speedup():
+    s = pm.speedup_eq5(pm.PAPER_ALGOS["wcc"], WL_PEAK, 4)
+    assert abs(s - 32 / 4) < 1e-9  # |E|/|V| / n * (m_u/m_m = 1)
+
+
+def test_speedup_matches_limit_ratio_when_network_bound():
+    """eq. 5 == L_if(GraVF-M)/L_if(GraVF) identically."""
+    wl = pm.Workload(num_vertices=2 ** 20, num_edges=6 * 2 ** 20)
+    a = pm.PAPER_ALGOS["bfs"]
+    for n in (2, 3, 4):
+        m = pm.limits(pm.PAPER_PLATFORM, a, wl, n_nodes=n, mode="gravfm")
+        g = pm.limits(pm.PAPER_PLATFORM, a, wl, n_nodes=n, mode="gravf")
+        assert math.isclose(m["L_if"] / g["L_if"],
+                            pm.speedup_eq5(a, wl, n), rel_tol=1e-9)
+
+
+def test_degree_dependence():
+    """Fig. 9: GraVF-M network limit scales with |E|/|V|."""
+    a = pm.PAPER_ALGOS["wcc"]
+    lims = [pm.limits(pm.PAPER_PLATFORM, a,
+                      pm.Workload(2 ** 20, d * 2 ** 20), n_nodes=4)
+            ["L_if"] for d in (2, 8, 32)]
+    assert lims[0] < lims[1] < lims[2]
+    assert math.isclose(lims[2] / lims[0], 16.0, rel_tol=1e-9)
+
+
+def test_memory_granularity_refinement():
+    """§5.4: the access-granularity term reduces effective bandwidth, and
+    saturates at one memory word per edge."""
+    a = pm.PAPER_ALGOS["wcc"]
+    wl = pm.Workload(2 ** 20, 2 * 2 ** 20)  # avg degree 2: worst case
+    base = pm.limits(pm.PAPER_PLATFORM, a, wl, n_nodes=4,
+                     granularity=False)["L_mem"]
+    refined = pm.limits(pm.PAPER_PLATFORM, a, wl, n_nodes=4, n_pe=9,
+                        granularity=True)["L_mem"]
+    assert refined < base
+    floor = 4 * pm.PAPER_PLATFORM.bw_mem / pm.PAPER_PLATFORM.m_memword
+    assert refined >= floor * 0.99
+
+
+def test_optimizer_picks_paper_configuration():
+    """§5.7 on the paper's platform picks 4 FPGAs and full 9 PEs for WCC
+    (compute-bound) at edgefactor 32."""
+    out = pm.optimize(pm.PAPER_PLATFORM, pm.PAPER_ALGOS["wcc"], WL_PEAK)
+    assert out["n_nodes"] == 4
+    assert out["n_pe"] == 9
+
+
+def test_optimizer_power_reduction_when_network_bound():
+    """For a sparse graph (network-bound), §5.7 lowers n_PE below max."""
+    wl = pm.Workload(2 ** 22, 2 * 2 ** 22)  # degree 2
+    out = pm.optimize(pm.PAPER_PLATFORM, pm.PAPER_ALGOS["wcc"], wl,
+                      mode="gravf")
+    if out["bottleneck"] in ("L_if", "L_net"):
+        assert out["n_pe"] < pm.PAPER_PLATFORM.n_pe_max
+
+
+def test_min_nodes_for_memory():
+    a = pm.PAPER_ALGOS["wcc"]
+    wl = pm.Workload(10 ** 9, 16 * 10 ** 9)  # too big for one 4GB board
+    assert pm.min_nodes_for_memory(pm.PAPER_PLATFORM, a, wl) > 1
+
+
+def test_tpu_profile_mxu_flips_bottleneck():
+    """The VPU mask kernel is compute-limited; the one-hot MXU variant
+    moves the bottleneck to network/memory — the §Perf hillclimb axis."""
+    wl = WL_PEAK
+    vpu = pm.limits(pm.TPU_V5E, pm.tpu_algo("wcc", tile_r=256), wl,
+                    n_nodes=256, n_pe=1)
+    mxu = pm.limits(pm.TPU_V5E, pm.tpu_algo("wcc", tile_r=256, mxu=True),
+                    wl, n_nodes=256, n_pe=1)
+    assert vpu["bottleneck"] == "L_PE"
+    assert mxu["bottleneck"] != "L_PE"
+    assert mxu["T_sys"] > vpu["T_sys"]

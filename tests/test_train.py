@@ -1,0 +1,157 @@
+"""Training substrate: loss-decrease, checkpoint/restart fault tolerance,
+microbatch equivalence, optimizer math, gradient compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import layers as L
+from repro.models import lm as LM
+from repro.train import checkpoint as CKPT
+from repro.train import compress as CMP
+from repro.train.loop import TrainConfig, Trainer, make_train_step
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   clip_by_global_norm, warmup_cosine)
+
+
+def _mini():
+    cfg = configs.get("qwen3-4b", reduced=True)
+    dc = DataConfig(vocab=cfg.vocab, global_batch=8, seq_len=32)
+    oc = AdamWConfig(lr_peak=1e-3, warmup_steps=3, total_steps=30)
+    return cfg, dc, oc
+
+
+def test_loss_decreases():
+    cfg, dc, oc = _mini()
+    out = Trainer(cfg, dc, oc, TrainConfig(steps=25, log_every=4)).run()
+    assert out["losses"][0][1] > out["losses"][-1][1]
+
+
+def test_crash_resume_reaches_end():
+    cfg, dc, oc = _mini()
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(steps=20, ckpt_every=5, ckpt_dir=d, log_every=5)
+        with pytest.raises(RuntimeError):
+            Trainer(cfg, dc, oc, tc).run(fail_at_step=12)
+        out = Trainer(cfg, dc, oc, tc).run()  # resumes from step 10
+        assert out["final_step"] == 19
+        # checkpoint directory only keeps the retention window
+        kept = [x for x in os.listdir(d) if x.startswith("step_")]
+        assert 0 < len(kept) <= 3
+
+
+def test_checkpoint_roundtrip_preserves_dtypes():
+    cfg, _, _ = _mini()
+    params = L.init_params(jax.random.PRNGKey(0), LM.lm_spec(cfg))
+    opt = adamw_init(params)
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save(d, 7, {"params": params, "opt": opt})
+        restored, meta = CKPT.restore_latest(
+            d, {"params": params, "opt": opt})
+        assert meta["step"] == 7
+        for a, b in zip(jax.tree.leaves(restored),
+                        jax.tree.leaves({"params": params, "opt": opt})):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_resume_with_reshard_template():
+    """A checkpoint restores into a template regardless of how it will be
+    re-sharded (elastic resume): restore is by logical name + shape."""
+    cfg, _, _ = _mini()
+    params = L.init_params(jax.random.PRNGKey(0), LM.lm_spec(cfg))
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save(d, 1, {"params": params})
+        template = {"params": jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)}
+        restored, _ = CKPT.restore_latest(d, template)
+        assert restored is not None
+
+
+def test_microbatch_equivalence():
+    """Gradient accumulation (mb=4) must match the single-batch step."""
+    cfg, dc, oc = _mini()
+    params = L.init_params(jax.random.PRNGKey(1), LM.lm_spec(cfg))
+    opt = adamw_init(params)
+    data = SyntheticTokens(dc).batch(0)
+    s1 = jax.jit(make_train_step(cfg, oc))
+    s4 = jax.jit(make_train_step(cfg, oc, microbatch=4))
+    p1, _, m1 = s1(params, opt, data, jnp.int32(0))
+    p4, _, m4 = s4(params, opt, data, jnp.int32(0))
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 0.05
+    diffs = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()), p1, p4))
+    assert max(diffs) < 0.05  # bf16 params: one-ulp-scale differences ok
+
+
+def test_warmup_cosine_schedule():
+    oc = AdamWConfig(lr_peak=1e-3, lr_min=1e-5, warmup_steps=10,
+                     total_steps=100)
+    assert float(warmup_cosine(oc, jnp.int32(0))) == 0.0
+    assert abs(float(warmup_cosine(oc, jnp.int32(10))) - 1e-3) < 1e-9
+    assert float(warmup_cosine(oc, jnp.int32(100))) <= 1e-5 + 1e-9
+    # monotone decay after warmup
+    lrs = [float(warmup_cosine(oc, jnp.int32(s))) for s in range(10, 101, 10)]
+    assert all(a >= b for a, b in zip(lrs, lrs[1:]))
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 10.0) < 1e-5
+    total = np.sqrt(sum(float(jnp.sum(x ** 2))
+                        for x in jax.tree.leaves(clipped)))
+    assert abs(total - 1.0) < 1e-5
+
+
+def test_adamw_decoupled_decay():
+    """Weight decay applies to matrices, not vectors/norms."""
+    oc = AdamWConfig(lr_peak=1e-2, warmup_steps=0, total_steps=10,
+                     weight_decay=0.5)
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    grads = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    st = adamw_init(params)
+    p2, _ = adamw_update(grads, st, params, oc, jnp.int32(5))
+    assert float(p2["w"][0, 0]) < 1.0   # decayed
+    assert float(p2["b"][0]) == 1.0     # untouched
+
+
+# --- gradient compression -------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(1, 5000))
+def test_int8_quantizer_error_bound(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32)) * 10
+    q, s, cnt = CMP.quantize_int8(x, jax.random.PRNGKey(seed))
+    back = CMP.dequantize_int8(q, s, cnt, x.shape, jnp.float32)
+    # per-block absmax scaling: error <= scale (1/127 of block max)
+    blocks = np.asarray(x).reshape(-1)
+    err = np.abs(np.asarray(back) - blocks[:n] if False else
+                 np.abs(np.asarray(back) - np.asarray(x)))
+    assert float(err.max()) <= float(jnp.abs(x).max()) / 127.0 + 1e-6
+
+
+def test_int8_quantizer_unbiased():
+    """Stochastic rounding: mean dequantized value converges to x."""
+    x = jnp.full((CMP.BLOCK,), 0.31337, jnp.float32)
+    acc = np.zeros(CMP.BLOCK)
+    K = 200
+    for i in range(K):
+        q, s, n = CMP.quantize_int8(x, jax.random.PRNGKey(i))
+        acc += np.asarray(CMP.dequantize_int8(q, s, n, x.shape,
+                                              jnp.float32))
+    assert abs(acc.mean() / K - 0.31337) < 1e-3
+
+
+def test_wire_bytes_model():
+    wb = CMP.wire_bytes(1_000_000)
+    assert wb["ratio"] > 3.5  # ~4x reduction vs f32
