@@ -8,6 +8,7 @@ import sys
 
 from . import paper_figures as PF
 from . import roofline_table as RT
+from . import service as SVC
 from . import substrate as SUB
 
 ALL = {
@@ -23,6 +24,7 @@ ALL = {
     "compress": SUB.compression_wire,
     "frontier": SUB.frontier_vs_dense_words,
     "roofline": RT.roofline_table,
+    "service": SVC.service_throughput,
 }
 
 

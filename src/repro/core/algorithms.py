@@ -57,7 +57,13 @@ def wcc() -> GasKernel:
 # ---------------------------------------------------------------------------
 
 def bfs(root: int = 0) -> GasKernel:
-    def init_state(vert_gid, out_deg, valid, **_):
+    # ``root`` is a *query parameter*: init_state accepts it as a traced
+    # scalar (overridable per call / per batch lane), with the factory
+    # argument as the default — so `bfs(7)` and `bfs().init_state(...,
+    # root=7)` agree and the engine can vmap a batch of roots through one
+    # superstep loop without re-tracing.
+    def init_state(vert_gid, out_deg, valid, *, root=root, **_):
+        root = jnp.asarray(root, jnp.int32)
         is_root = vert_gid == root
         return {
             "parent": jnp.where(is_root, root, -1).astype(jnp.int32),
@@ -83,7 +89,7 @@ def bfs(root: int = 0) -> GasKernel:
     return GasKernel(
         name="bfs", init_state=init_state, apply=apply, scatter=scatter,
         gather=gather, combiner="min", msg_dtype=jnp.int32,
-        update_bits=32, message_bits=32)
+        update_bits=32, message_bits=32, query_params=("root",))
 
 
 # ---------------------------------------------------------------------------
@@ -123,7 +129,8 @@ def pagerank(num_supersteps: int = 30, damping: float = 0.85) -> GasKernel:
 # ---------------------------------------------------------------------------
 
 def sssp(root: int = 0) -> GasKernel:
-    def init_state(vert_gid, out_deg, valid, **_):
+    def init_state(vert_gid, out_deg, valid, *, root=root, **_):
+        root = jnp.asarray(root, jnp.int32)
         is_root = vert_gid == root
         dist = jnp.where(is_root, 0.0, jnp.inf).astype(jnp.float32)
         return {
@@ -157,7 +164,7 @@ def sssp(root: int = 0) -> GasKernel:
         name="sssp", init_state=init_state, apply=apply, scatter=scatter,
         gather=gather, combiner="min", msg_dtype=jnp.float32,
         carry_dtype=jnp.int32, scatter_carry=scatter_carry,
-        update_bits=32, message_bits=64)
+        update_bits=32, message_bits=64, query_params=("root",))
 
 
 # ---------------------------------------------------------------------------

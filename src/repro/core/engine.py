@@ -124,7 +124,18 @@ class Engine:
         else:
             self._data = self._build_gravf(flt_cnt)
 
-        self._step = jax.jit(self._make_loop())
+        # Trace accounting: the loop body bumps this Python counter, which
+        # only executes while JAX is *tracing* — so it counts compilations,
+        # not calls. The service plan cache asserts steady-state serving
+        # performs zero re-traces against this.
+        self.traces = 0
+        loop = self._make_loop()
+        self._step = jax.jit(loop)
+        # Batched variant: a leading query axis on the per-query kwargs.
+        # vmap of the while_loop freezes finished queries' carries (their
+        # cond is False), so quiescent queries ride along at zero semantic
+        # cost until the whole batch terminates.
+        self._batch_step = jax.jit(jax.vmap(loop, in_axes=(None, None, 0)))
 
     # ------------------------------------------------------------------
     def _build_gravfm(self, flt_cnt, tile_e, tile_r) -> _GravfmData:
@@ -306,9 +317,11 @@ class Engine:
             active = active & data.vert_valid
             return state, payload, active
 
-        def loop(data, cap):
+        def loop(data, cap, query_kwargs):
+            self.traces += 1  # Python side effect: runs at trace time only
             state = k.init_state(data.vert_gid, data.out_deg,
-                                 data.vert_valid, **self.params)
+                                 data.vert_valid,
+                                 **{**self.params, **query_kwargs})
             state, payload, active = apply_masked(state, data, 0)
 
             stats0 = {
@@ -355,9 +368,25 @@ class Engine:
         return loop
 
     # ------------------------------------------------------------------
-    def run(self, max_supersteps: Optional[int] = None) -> EngineResult:
+    def _check_query_kwargs(self, kwargs: Dict[str, Any]) -> None:
+        # A misspelled name would be swallowed by init_state's **_ and the
+        # kernel would silently run with its defaults — reject instead.
+        unknown = set(kwargs) - set(self.kernel.query_params)
+        if unknown:
+            raise ValueError(
+                f"kernel {self.kernel.name!r} takes query params "
+                f"{tuple(self.kernel.query_params)}, got unexpected "
+                f"{sorted(unknown)}")
+
+    def run(self, max_supersteps: Optional[int] = None,
+            **query_kwargs) -> EngineResult:
+        """Single query. ``query_kwargs`` (e.g. ``root=7``) are traced
+        scalars forwarded to the kernel's ``init_state`` — they override
+        the constructor ``params`` without re-tracing."""
         cap = max_supersteps or self.kernel.max_supersteps or HARD_SUPERSTEP_CAP
-        state, s, stats = self._step(self._data, jnp.int32(cap))
+        self._check_query_kwargs(query_kwargs)
+        qkw = {kk: jnp.asarray(v) for kk, v in query_kwargs.items()}
+        state, s, stats = self._step(self._data, jnp.int32(cap), qkw)
         state = jax.tree.map(np.asarray, state)
         comm_scheme = ("gravfm_broadcast" if self.mode == "gravfm"
                        else "gravf_unicast")
@@ -371,3 +400,47 @@ class Engine:
             comm=comm,
             raw_state=state,
         )
+
+    def run_batch(self, max_supersteps: Optional[int] = None,
+                  **query_arrays) -> "list[EngineResult]":
+        """One superstep loop over a leading query-batch axis.
+
+        ``query_arrays`` maps per-query kernel parameters (the kernel's
+        ``query_params``, e.g. BFS/SSSP ``root``) to (B,) arrays. All B
+        queries share every per-superstep broadcast/exchange; per-query
+        termination masks (the vmapped while_loop carry select) let
+        finished queries go quiescent without stalling the batch.
+        Returns one :class:`EngineResult` per query, bit-identical to B
+        sequential :meth:`run` calls.
+        """
+        if not query_arrays:
+            raise ValueError(
+                "run_batch needs at least one per-query array, e.g. "
+                "root=np.array([...]); see GasKernel.query_params")
+        self._check_query_kwargs(query_arrays)
+        cap = max_supersteps or self.kernel.max_supersteps or HARD_SUPERSTEP_CAP
+        qkw = {kk: jnp.atleast_1d(jnp.asarray(v))
+               for kk, v in query_arrays.items()}
+        sizes = {kk: v.shape[0] for kk, v in qkw.items()}
+        batch = next(iter(sizes.values()))
+        if any(b != batch for b in sizes.values()):
+            raise ValueError(f"inconsistent query batch sizes: {sizes}")
+        state, s, stats = self._batch_step(self._data, jnp.int32(cap), qkw)
+        state = jax.tree.map(np.asarray, state)
+        s = np.asarray(s)
+        stats = jax.tree.map(np.asarray, stats)
+        comm_scheme = ("gravfm_broadcast" if self.mode == "gravfm"
+                       else "gravf_unicast")
+        results = []
+        for q in range(batch):
+            state_q = jax.tree.map(lambda a: a[q], state)
+            comm = {kk: float(v[q]) for kk, v in stats.items()}
+            comm["scheme"] = comm_scheme
+            results.append(EngineResult(
+                state=collect(self.pg, state_q),
+                supersteps=int(s[q]),
+                messages=int(stats["messages"][q]),
+                comm=comm,
+                raw_state=state_q,
+            ))
+        return results

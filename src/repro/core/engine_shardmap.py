@@ -53,6 +53,17 @@ __all__ = ["ShardEngine", "build_shard_data", "ShardData"]
 
 AXIS = "graph"
 
+if hasattr(jax, "shard_map"):          # jax >= 0.6 public API
+    def _shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:                                  # 0.4.x experimental API
+    from jax.experimental.shard_map import shard_map as _sm_legacy
+
+    def _shard_map(f, *, mesh, in_specs, out_specs):
+        return _sm_legacy(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
 
 class ShardData(NamedTuple):
     """All arrays carry a leading shard axis sharded over mesh axis
@@ -263,6 +274,10 @@ class ShardEngine:
             self._data = None
         self.params.setdefault("num_vertices", self.meta.num_vertices)
         self._interpret = jax.default_backend() != "tpu"
+        # jitted program cache (per superstep cap) + trace counter; see
+        # Engine.traces for the counting trick.
+        self.traces = 0
+        self._run_cache: Dict[Any, Any] = {}
 
     # ---------------- per-shard delivery kernels ----------------------
     def _local_combine(self, masked, d, combiner):
@@ -501,9 +516,12 @@ class ShardEngine:
         return state, payload2, active2, n_msgs, words
 
     def _make_run(self, cap: int):
+        if ("single", cap) in self._run_cache:
+            return self._run_cache[("single", cap)]
         k = self.kernel
 
         def shard_fn(d: ShardData):
+            self.traces += 1  # trace-time side effect (see Engine.traces)
             # shard_map blocks keep a size-1 leading (sharded) axis
             d = jax.tree.map(lambda a: a[0], d)
             state = k.init_state(d.vert_gid, d.out_deg, d.vert_valid,
@@ -538,12 +556,92 @@ class ShardEngine:
         in_specs = jax.tree.map(lambda _: P(AXIS), self._data,
                                 is_leaf=lambda x: x is None)
         state_spec = P(AXIS)
-        fn = jax.shard_map(
+        fn = _shard_map(
             shard_fn, mesh=self.mesh,
             in_specs=(in_specs,),
-            out_specs=(state_spec, P(), P(), P()),
-            check_vma=False)
-        return jax.jit(fn)
+            out_specs=(state_spec, P(), P(), P()))
+        fn = jax.jit(fn)
+        self._run_cache[("single", cap)] = fn
+        return fn
+
+    def _make_run_batch(self, cap: int, qkeys: tuple):
+        """Query-batched shard_map program: the per-superstep exchange is
+        shared by all B queries (one collective moves the (B, ·) payload);
+        finished queries are frozen lane-wise so state/stats stay
+        bit-identical to B sequential runs."""
+        ck = ("batch", cap, qkeys)
+        if ck in self._run_cache:
+            return self._run_cache[ck]
+        k = self.kernel
+
+        def shard_fn(d: ShardData, qkw):
+            self.traces += 1  # trace-time side effect
+            d = jax.tree.map(lambda a: a[0], d)
+
+            def init_q(kw):
+                state = k.init_state(d.vert_gid, d.out_deg, d.vert_valid,
+                                     **{**self.params, **kw})
+                state, payload, active = k.apply(state, d.vert_gid,
+                                                 d.out_deg, 0)
+                return state, payload, active & d.vert_valid
+
+            state, payload, active = jax.vmap(init_q)(qkw)
+
+            step = jax.vmap(
+                lambda p, a, st, s: self._shard_step(d, p, a, st, s),
+                in_axes=(0, 0, 0, None))
+
+            def alive_of(act):
+                # per-query distributed termination bit (§4.3, per lane)
+                loc = jnp.any(act, axis=-1).astype(jnp.int32)   # (B,)
+                return jax.lax.pmax(loc, AXIS) > 0
+
+            def cond(c):
+                _, _, active, s, _, _, _ = c
+                any_local = jnp.any(active).astype(jnp.int32)
+                return (jax.lax.pmax(any_local, AXIS) > 0) & (s < cap)
+
+            def body(c):
+                state, payload, active, s, sq, msgs, words = c
+                alive = alive_of(active)
+                nstate, npayload, nactive, n_q, w_q = step(
+                    payload, active, state, s)
+
+                def sel(new, old):
+                    b = alive.reshape(
+                        (alive.shape[0],) + (1,) * (new.ndim - 1))
+                    return jnp.where(b, new, old)
+
+                state = jax.tree.map(sel, nstate, state)
+                payload = sel(npayload, payload)
+                active = sel(nactive, active)
+                msgs = msgs + jnp.where(alive, n_q, 0)
+                words = words + jnp.sum(jnp.where(alive, w_q, 0.0))
+                sq = sq + alive.astype(jnp.int32)
+                return (state, payload, active, s + 1, sq, msgs, words)
+
+            B = payload.shape[0]
+            init = (state, payload, active, jnp.int32(0),
+                    jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+                    jnp.float32(0.0))
+            state, payload, active, s, sq, msgs, words = jax.lax.while_loop(
+                cond, body, init)
+            total_msgs = jax.lax.psum(msgs, AXIS)          # (B,)
+            total_words = jax.lax.psum(words, AXIS)
+            # re-add shard axis leading so out spec P(AXIS) shards it
+            state = jax.tree.map(lambda a: a[None], state)  # (1, B, ...)
+            return state, sq, total_msgs, total_words
+
+        in_specs = jax.tree.map(lambda _: P(AXIS), self._data,
+                                is_leaf=lambda x: x is None)
+        qspec = {kk: P() for kk in qkeys}
+        fn = _shard_map(
+            shard_fn, mesh=self.mesh,
+            in_specs=(in_specs, qspec),
+            out_specs=(P(AXIS), P(), P(), P()))
+        fn = jax.jit(fn)
+        self._run_cache[ck] = fn
+        return fn
 
     def run(self, max_supersteps: Optional[int] = None):
         cap = (max_supersteps or self.kernel.max_supersteps or 100_000)
@@ -558,6 +656,41 @@ class ShardEngine:
             "exchange_words": float(np.asarray(words).reshape(-1)[0]),
             "exchange": self.exchange,
         }
+
+    def run_batch(self, max_supersteps: Optional[int] = None,
+                  **query_arrays):
+        """Batched multi-query run (see ``Engine.run_batch``). Returns a
+        list of per-query result dicts; ``exchange_words`` is reported for
+        the whole batch on each entry (the queries share the wire)."""
+        if not query_arrays:
+            raise ValueError("run_batch needs at least one per-query array")
+        unknown = set(query_arrays) - set(self.kernel.query_params)
+        if unknown:
+            raise ValueError(
+                f"kernel {self.kernel.name!r} takes query params "
+                f"{tuple(self.kernel.query_params)}, got unexpected "
+                f"{sorted(unknown)}")
+        cap = (max_supersteps or self.kernel.max_supersteps or 100_000)
+        qkw = {kk: jnp.atleast_1d(jnp.asarray(v))
+               for kk, v in query_arrays.items()}
+        fn = self._make_run_batch(cap, tuple(sorted(qkw)))
+        state, sq, msgs, words = fn(self._data, qkw)
+        from .engine import collect
+        state_np = jax.tree.map(np.asarray, state)   # leaves (P, B, ...)
+        sq = np.asarray(sq).reshape(-1, np.asarray(sq).shape[-1])[0]
+        msgs = np.asarray(msgs).reshape(-1, np.asarray(msgs).shape[-1])[0]
+        words = float(np.asarray(words).reshape(-1)[0])
+        out = []
+        for q in range(sq.shape[0]):
+            state_q = jax.tree.map(lambda a: a[:, q], state_np)
+            out.append({
+                "state": collect(self.pg, state_q) if self.pg else state_q,
+                "supersteps": int(sq[q]),
+                "messages": int(msgs[q]),
+                "exchange_words": words,
+                "exchange": self.exchange,
+            })
+        return out
 
     # ---------------- dry-run hooks ------------------------------------
     def superstep_fn(self):

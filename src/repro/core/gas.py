@@ -87,6 +87,13 @@ class GasKernel:
     # packing (SSSP uses this for parent pointers).
     carry_dtype: Any = None
     scatter_carry: Callable[..., jnp.ndarray] = None
+    # Names of ``init_state`` keyword parameters that are *per-query* and
+    # traceable (accepted as JAX scalars, e.g. BFS/SSSP ``root``). The
+    # engine's ``run_batch`` maps these over a leading query-batch axis and
+    # the query service uses them to validate batching compatibility.
+    # Kernels with an empty tuple (WCC, PageRank) answer one global
+    # question, so batching them only duplicates work.
+    query_params: tuple = ()
 
     @property
     def identity(self):
@@ -100,6 +107,7 @@ class GasKernel:
             "max_supersteps": self.max_supersteps,
             "update_bits": self.update_bits,
             "message_bits": self.message_bits,
+            "query_params": list(self.query_params),
         }
 
 

@@ -16,26 +16,34 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_graph_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_graph_mesh", "make_local_mesh",
+           "compat_make_mesh"]
+
+
+def compat_make_mesh(shape, axes) -> Mesh:
+    """jax.make_mesh across versions: newer jax wants explicit Auto
+    axis_types; 0.4.x has no AxisType (Auto is the only behaviour)."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except AttributeError:
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_graph_mesh(*, multi_pod: bool = False) -> Mesh:
     """All chips on one 'graph' axis for the GraVF-M engine."""
     n = 512 if multi_pod else 256
-    return jax.make_mesh(
-        (n,), ("graph",), axis_types=(jax.sharding.AxisType.Auto,))
+    return compat_make_mesh((n,), ("graph",))
 
 
 def make_local_mesh(axes=("graph",)) -> Mesh:
     """Whatever devices exist locally (tests / reduced runs)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n,), axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh((n,), axes)

@@ -1,0 +1,22 @@
+"""Graph query service: batched multi-query execution over the GraVF-M
+engine, with a compiled-plan cache and a deadline-aware scheduler.
+
+    from repro.service import GraphQueryService, QueryRequest
+
+    svc = GraphQueryService(num_shards=4, max_batch=32)
+    svc.add_graph("social", graph)
+    svc.warm("social", "bfs")                 # optional: pre-trace plans
+    res = svc.query("social", "bfs", root=7)  # one EngineResult
+    print(svc.stats_snapshot())               # qps / p95 / TEPS / cache
+"""
+from .batching import (BATCH_BUCKETS, Batcher, QueryClass, QueryRequest,
+                       bucket_for)
+from .plans import CompiledPlan, PlanCache, PlanKey
+from .server import GraphQueryService
+from .stats import ServiceStats, percentile
+
+__all__ = [
+    "BATCH_BUCKETS", "Batcher", "QueryClass", "QueryRequest", "bucket_for",
+    "CompiledPlan", "PlanCache", "PlanKey",
+    "GraphQueryService", "ServiceStats", "percentile",
+]

@@ -1,0 +1,179 @@
+"""Compiled-plan cache for the graph query service.
+
+A *plan* is everything needed to answer a class of queries with zero
+per-query setup cost: the partitioned, device-resident graph arrays plus
+the jitted (batched) superstep program for one
+
+    (graph id, kernel, mode, num_shards, batch size, backend)
+
+query class. Building a plan is expensive (partitioning is O(E) host
+work, tracing/compiling the superstep loop is seconds); executing one is
+a single dispatch. The cache therefore has three levels, each shared by
+the level below:
+
+  graphs   keyed (graph_id, num_shards, method)     — partition once
+  engines  keyed (graph_id, kernel, mode, shards, backend)
+                                                    — device arrays once
+  plans    keyed PlanKey (adds batch_size)          — traced program once
+
+Steady-state serving hits the plan level only; the ``plan_traces``
+counter (fed by the engines' trace-time side effect) proves repeated
+submissions of the same class re-trace nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.algorithms import ALGORITHMS
+from ..core.engine import Engine, EngineResult
+from ..core.graph import Graph
+from ..core.partition import PartitionedGraph, partition_graph
+from .stats import ServiceStats
+
+__all__ = ["PlanKey", "CompiledPlan", "PlanCache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Identity of one compiled query class."""
+    graph_id: str
+    kernel: str          # name in core.algorithms.ALGORITHMS
+    mode: str            # "gravfm" | "gravf"
+    num_shards: int
+    batch_size: int      # leading query axis (1 = unbatched program)
+    backend: str = "ref"
+
+
+class CompiledPlan:
+    """A cached (engine, batch size) pair ready to execute."""
+
+    def __init__(self, key: PlanKey, engine: Engine):
+        self.key = key
+        self.engine = engine
+        self.executions = 0
+
+    @property
+    def query_params(self) -> Tuple[str, ...]:
+        return tuple(self.engine.kernel.query_params)
+
+    def execute(self, **query_arrays) -> "list[EngineResult]":
+        """Run the plan on arrays already padded to ``key.batch_size``
+        (scalars allowed when batch_size == 1). Returns per-query
+        results in input order."""
+        self.executions += 1
+        if self.key.batch_size == 1:
+            scalars = {k: np.asarray(v).reshape(()) for k, v
+                       in query_arrays.items()}
+            return [self.engine.run(**scalars)]
+        for k, v in query_arrays.items():
+            n = np.asarray(v).shape[0]
+            if n != self.key.batch_size:
+                raise ValueError(
+                    f"plan expects batch {self.key.batch_size}, got {n} "
+                    f"for {k!r}")
+        return self.engine.run_batch(**query_arrays)
+
+    def warmup(self) -> "CompiledPlan":
+        """Trace + compile now (first root of the graph) so the first real
+        query pays dispatch cost only."""
+        if self.query_params:
+            dummy = {p: np.zeros((self.key.batch_size,), np.int32)
+                     for p in self.query_params}
+        elif self.key.batch_size == 1:
+            dummy = {}
+        else:
+            raise ValueError(
+                f"kernel {self.key.kernel!r} has no query_params; "
+                "only batch_size=1 plans are meaningful")
+        self.execute(**dummy)
+        return self
+
+
+class PlanCache:
+    """Three-level cache: partitioned graphs, device-resident engines,
+    compiled plans. Thread-compatible (callers serialize dispatch; the
+    server holds its scheduler lock across get_plan + execute)."""
+
+    def __init__(self, stats: Optional[ServiceStats] = None):
+        self.stats = stats or ServiceStats()
+        self._graphs: Dict[Tuple[str, int, str], PartitionedGraph] = {}
+        self._graph_meta: Dict[str, Graph] = {}
+        self._engines: Dict[Tuple[str, str, str, int, str], Engine] = {}
+        self._plans: Dict[PlanKey, CompiledPlan] = {}
+
+    # ---------------- graphs ------------------------------------------
+    def register_graph(self, graph_id: str, graph: Graph, *,
+                       num_shards: int = 4, method: str = "greedy",
+                       pad_multiple: int = 256) -> PartitionedGraph:
+        """Partition ``graph`` once and pin the layout for reuse by every
+        plan over it. Re-registering the same (id, shards) is a no-op."""
+        gk = (graph_id, num_shards, method)
+        if gk not in self._graphs:
+            self._graphs[gk] = partition_graph(
+                graph, num_shards, method=method, pad_multiple=pad_multiple)
+            self._graph_meta[graph_id] = graph
+        return self._graphs[gk]
+
+    def graph(self, graph_id: str, num_shards: int,
+              method: str = "greedy") -> PartitionedGraph:
+        gk = (graph_id, num_shards, method)
+        if gk not in self._graphs:
+            raise KeyError(
+                f"graph {graph_id!r} not registered for {num_shards} "
+                f"shards (method={method!r}); call register_graph first")
+        return self._graphs[gk]
+
+    # ---------------- engines / plans ---------------------------------
+    def _engine_for(self, key: PlanKey, method: str) -> Engine:
+        ek = (key.graph_id, key.kernel, key.mode, key.num_shards,
+              key.backend)
+        eng = self._engines.get(ek)
+        if eng is None:
+            if key.kernel not in ALGORITHMS:
+                raise KeyError(f"unknown kernel {key.kernel!r}; have "
+                               f"{sorted(ALGORITHMS)}")
+            pg = self.graph(key.graph_id, key.num_shards, method)
+            eng = Engine(ALGORITHMS[key.kernel](), pg, mode=key.mode,
+                         backend=key.backend)
+            self._engines[ek] = eng
+        return eng
+
+    def get_plan(self, key: PlanKey, *, method: str = "greedy",
+                 warm: bool = False) -> CompiledPlan:
+        """Fetch (hit) or build (miss) the plan for ``key``."""
+        plan = self._plans.get(key)
+        hit = plan is not None
+        self.stats.record_cache(hit)
+        if not hit:
+            engine = self._engine_for(key, method)
+            if key.batch_size > 1 and not engine.kernel.query_params:
+                raise ValueError(
+                    f"kernel {key.kernel!r} declares no query_params; "
+                    "it cannot be query-batched (batch_size must be 1)")
+            plan = CompiledPlan(key, engine)
+            if warm:
+                plan.warmup()
+            self._plans[key] = plan
+        return plan
+
+    def sync_trace_counters(self) -> int:
+        """Fold every engine's trace count into the shared stats; returns
+        the current total. Call after dispatches to keep the stats
+        endpoint's ``plan_traces`` exact."""
+        total = sum(e.traces for e in self._engines.values())
+        delta = total - self.stats.plan_traces
+        if delta:
+            self.stats.record_traces(delta)
+        return total
+
+    # ---------------- introspection -----------------------------------
+    def describe(self) -> Dict[str, Any]:
+        return {
+            "graphs": sorted(f"{g}/{p}shards/{m}" for g, p, m in self._graphs),
+            "engines": len(self._engines),
+            "plans": [dataclasses.asdict(k) for k in self._plans],
+            "plan_traces": self.sync_trace_counters(),
+        }

@@ -1,0 +1,266 @@
+"""The graph query service: accept single queries, batch compatible
+ones under their latency deadlines, dispatch to cached compiled plans,
+return per-query :class:`EngineResult`\\ s.
+
+Two operating modes share all the machinery:
+
+  synchronous — ``submit()`` queues and returns a Future; dispatch
+      happens when a batch fills, when ``poll()`` observes a due
+      deadline, or on ``flush()``. Deterministic; what the tests and
+      benchmarks drive.
+
+  async — ``start()`` spawns a scheduler thread that sleeps until the
+      earliest pending flush time (or a new arrival) and dispatches due
+      batches; ``submit()`` then behaves like a fire-and-forget RPC whose
+      Future resolves within the request's deadline budget.
+
+The paper's engine answers one traversal per elaborated design; this
+server is the ROADMAP's "heavy traffic" counterpart — many BFS/SSSP
+roots per superstep loop, one broadcast per superstep shared by the
+whole batch, and steady-state serving that never re-partitions or
+re-traces (see plans.py).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..core.algorithms import ALGORITHMS
+from ..core.engine import EngineResult
+from ..core.graph import Graph
+from .batching import (BATCH_BUCKETS, Batcher, QueryClass, QueryRequest,
+                       bucket_for)
+from .plans import PlanCache, PlanKey
+from .stats import ServiceStats
+
+__all__ = ["GraphQueryService"]
+
+
+class GraphQueryService:
+    """Batched multi-query front-end over the GraVF-M engine."""
+
+    def __init__(self, *, num_shards: int = 4, max_batch: int = 32,
+                 backend: str = "ref", partition_method: str = "greedy",
+                 slack_ms: float = 5.0,
+                 plan_cache: Optional[PlanCache] = None,
+                 stats: Optional[ServiceStats] = None):
+        self.num_shards = num_shards
+        self.max_batch = max_batch
+        self.backend = backend
+        self.partition_method = partition_method
+        self.stats = stats or (plan_cache.stats if plan_cache
+                               else ServiceStats())
+        self.plans = plan_cache or PlanCache(stats=self.stats)
+        # One shared counter object, or the cache-level hits/misses/traces
+        # split off from the endpoint and under-report.
+        self.plans.stats = self.stats
+        self._batcher = Batcher(max_batch=max_batch, slack_ms=slack_ms)
+        self._lock = threading.RLock()
+        self._wake = threading.Condition(self._lock)
+        # Serializes plan lookup + execution: PlanCache is not internally
+        # locked (its contract is "callers serialize dispatch"), and a
+        # full-batch submit() can race the scheduler thread's poll().
+        self._dispatch_lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
+
+    # ---------------- admission ---------------------------------------
+    def add_graph(self, graph_id: str, graph: Graph,
+                  **kwargs) -> "GraphQueryService":
+        """Register + partition a graph for serving (idempotent)."""
+        kwargs.setdefault("num_shards", self.num_shards)
+        kwargs.setdefault("method", self.partition_method)
+        self.plans.register_graph(graph_id, graph, **kwargs)
+        return self
+
+    def warm(self, graph_id: str, kernel: str, *, mode: str = "gravfm",
+             batch_sizes: Optional[List[int]] = None) -> None:
+        """Pre-trace plans for a query class so first requests don't pay
+        compile latency (steady-state serving then re-traces nothing).
+        Defaults to EVERY bucket up to max_batch — deadline flushes
+        dispatch partial batches, so intermediate buckets are hot paths
+        too."""
+        if batch_sizes is None:
+            sizes = sorted({bucket_for(n, self.max_batch)
+                            for n in BATCH_BUCKETS if n <= self.max_batch}
+                           | {1, self.max_batch})
+        else:
+            sizes = batch_sizes
+        for b in sizes:
+            self.plans.get_plan(self._plan_key(graph_id, kernel, mode, b),
+                                method=self.partition_method, warm=True)
+        self.plans.sync_trace_counters()
+
+    def submit(self, req: QueryRequest) -> "Future[EngineResult]":
+        """Queue one query; the Future resolves to its EngineResult."""
+        kernel = ALGORITHMS.get(req.kernel)
+        if kernel is None:
+            raise KeyError(f"unknown kernel {req.kernel!r}")
+        kernel = kernel()
+        # Exact-match validation: a missing param would make the outcome
+        # traffic-dependent (kernel default when dispatched solo, KeyError
+        # when co-batched), so require the full declared set up front.
+        got, want = set(req.query_kwargs), set(kernel.query_params)
+        if got != want:
+            raise ValueError(
+                f"{req.kernel} takes query params "
+                f"{tuple(kernel.query_params)}; got "
+                f"{sorted(got) or 'none'}"
+                + (f" (missing {sorted(want - got)})" if want - got else ""))
+        fut: "Future[EngineResult]" = Future()
+        qclass = QueryClass.of(req, self.num_shards, self.backend)
+        batchable = (bool(kernel.query_params) and self.max_batch > 1)
+        self.stats.record_submit()
+        with self._wake:
+            ready = self._batcher.add(qclass, (req, fut), batchable)
+            self._wake.notify()
+        if ready is not None:
+            self._dispatch(*ready)
+        return fut
+
+    def query(self, graph_id: str, kernel: str, *, mode: str = "gravfm",
+              deadline_ms: float = 50.0, **query_kwargs) -> EngineResult:
+        """Synchronous convenience: submit one query and wait (flushing
+        immediately, so latency = execution time)."""
+        req = QueryRequest(
+            graph_id=graph_id, kernel=kernel, query_kwargs=query_kwargs,
+            mode=mode, deadline_ms=deadline_ms)
+        fut = self.submit(req)
+        # flush only this query's class — other clients' half-filled
+        # batches keep accumulating toward their own deadlines
+        self.flush(QueryClass.of(req, self.num_shards, self.backend))
+        return fut.result()
+
+    # ---------------- dispatch ----------------------------------------
+    def _plan_key(self, graph_id: str, kernel: str, mode: str,
+                  batch_size: int) -> PlanKey:
+        return PlanKey(graph_id=graph_id, kernel=kernel, mode=mode,
+                       num_shards=self.num_shards, batch_size=batch_size,
+                       backend=self.backend)
+
+    def _dispatch(self, qclass: QueryClass, items: List[Any]) -> None:
+        """Execute one formed batch: pad to the plan bucket, run, resolve
+        futures, account stats."""
+        # Transition every future to RUNNING; ones the client cancelled
+        # while queued drop out here (and can no longer be cancelled, so
+        # set_result below cannot raise InvalidStateError).
+        live = [(r, f) for r, f in items if f.set_running_or_notify_cancel()]
+        if not live:
+            return
+        reqs = [it[0] for it in live]
+        futs = [it[1] for it in live]
+        n = len(reqs)
+        t0 = time.perf_counter()
+        with self._dispatch_lock:
+            self._dispatch_locked(qclass, reqs, futs, n, t0)
+
+    def _dispatch_locked(self, qclass: QueryClass, reqs, futs, n: int,
+                         t0: float) -> None:
+        try:
+            plan = self.plans.get_plan(
+                self._plan_key(qclass.graph_id, qclass.kernel, qclass.mode,
+                               bucket_for(n, self.max_batch)),
+                method=self.partition_method)
+            bucket = plan.key.batch_size
+            if bucket == 1:
+                results = []
+                for r in reqs:
+                    results.extend(plan.execute(**{
+                        k: np.asarray(v) for k, v in r.query_kwargs.items()}))
+            else:
+                arrays = {}
+                for p in plan.query_params:
+                    col = [r.query_kwargs[p] for r in reqs]
+                    col += [col[0]] * (bucket - n)   # pad lanes
+                    arrays[p] = np.asarray(col)
+                results = plan.execute(**arrays)[:n]
+        except Exception as exc:   # noqa: BLE001 — fail the whole batch
+            for f in futs:
+                f.set_exception(exc)
+            return
+        now = time.perf_counter()
+        wall = now - t0
+        for f, res in zip(futs, results):
+            f.set_result(res)
+        self.plans.sync_trace_counters()
+        self.stats.record_batch(
+            n_queries=n, n_pad=max(0, bucket - n) if bucket > 1 else 0,
+            wall_s=wall,
+            messages=sum(r.messages for r in results),
+            supersteps=max((r.supersteps for r in results), default=0),
+            latencies_ms=[(now - r.arrival_s) * 1e3 for r in reqs])
+
+    # ---------------- scheduling --------------------------------------
+    def poll(self, now_s: Optional[float] = None) -> int:
+        """Dispatch every batch whose deadline-driven flush time has
+        arrived; returns the number of batches dispatched."""
+        with self._wake:
+            due = self._batcher.due(now_s)
+        for qc, items in due:
+            self._dispatch(qc, items)
+        return len(due)
+
+    def flush(self, qclass: Optional[QueryClass] = None) -> int:
+        """Dispatch pending batches regardless of deadlines — all of them,
+        or only ``qclass``'s."""
+        with self._wake:
+            if qclass is None:
+                batches = self._batcher.flush_all()
+            else:
+                items = self._batcher.pop_class(qclass)
+                batches = [(qclass, items)] if items else []
+        for qc, items in batches:
+            self._dispatch(qc, items)
+        return len(batches)
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._batcher)
+
+    # ---------------- async scheduler thread --------------------------
+    def start(self) -> "GraphQueryService":
+        with self._lock:
+            if self._running:
+                return self
+            self._running = True
+            self._thread = threading.Thread(
+                target=self._loop, name="gravfm-query-scheduler",
+                daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        with self._wake:
+            self._running = False
+            self._wake.notify()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+        if drain:
+            self.flush()
+
+    def _loop(self) -> None:
+        while True:
+            with self._wake:
+                if not self._running:
+                    return
+                nxt = self._batcher.next_flush_s()
+                timeout = (None if nxt is None
+                           else max(0.0, nxt - time.perf_counter()))
+                if timeout is None or timeout > 0:
+                    self._wake.wait(timeout=timeout)
+                if not self._running:
+                    return
+            self.poll()
+
+    # ---------------- stats endpoint ----------------------------------
+    def stats_snapshot(self) -> Dict[str, float]:
+        """The service's /stats payload: throughput (qps, TEPS), latency
+        percentiles, batch occupancy, and plan-cache counters."""
+        snap = self.stats.snapshot()
+        snap["pending"] = self.pending()
+        return snap

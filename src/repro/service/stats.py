@@ -1,0 +1,109 @@
+"""Service observability: counters + latency/throughput accounting.
+
+One :class:`ServiceStats` instance is shared by the plan cache, the
+batcher, and the server, so a single ``snapshot()`` is the service's
+stats endpoint: queries/sec, p50/p95 latency, TEPS (traversed edges per
+second — the paper's §6 throughput metric, here aggregated over every
+query the service executed), and the plan-cache hit/miss/trace counters
+the zero-retrace guarantee is asserted against.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Dict, List
+
+__all__ = ["ServiceStats", "percentile"]
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input."""
+    if not values:
+        return 0.0
+    vs = sorted(values)
+    idx = min(len(vs) - 1, max(0, int(round(q / 100.0 * (len(vs) - 1)))))
+    return vs[idx]
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Thread-safe rolling counters for the query service."""
+
+    queries_submitted: int = 0
+    queries_completed: int = 0
+    batches_dispatched: int = 0
+    batch_pad_queries: int = 0      # padding lanes added to hit a bucket
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    plan_traces: int = 0            # jit traces across all cached engines
+    supersteps_total: int = 0
+    messages_total: int = 0         # traversed edges (TEPS numerator)
+    busy_time_s: float = 0.0        # wall time spent inside dispatch
+
+    # Percentiles come from a bounded window of recent latencies so a
+    # long-running service neither leaks memory nor pays O(total-queries)
+    # sorts in snapshot().
+    latency_window: int = 8192
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+        self._latencies_ms = collections.deque(maxlen=self.latency_window)
+        self._started_at = time.perf_counter()
+
+    # ------------------------------------------------------------------
+    def record_submit(self, n: int = 1) -> None:
+        with self._lock:
+            self.queries_submitted += n
+
+    def record_batch(self, n_queries: int, n_pad: int, wall_s: float,
+                     messages: int, supersteps: int,
+                     latencies_ms: List[float]) -> None:
+        with self._lock:
+            self.batches_dispatched += 1
+            self.queries_completed += n_queries
+            self.batch_pad_queries += n_pad
+            self.busy_time_s += wall_s
+            self.messages_total += messages
+            self.supersteps_total += supersteps
+            self._latencies_ms.extend(latencies_ms)
+
+    def record_cache(self, hit: bool) -> None:
+        with self._lock:
+            if hit:
+                self.plan_cache_hits += 1
+            else:
+                self.plan_cache_misses += 1
+
+    def record_traces(self, n: int) -> None:
+        with self._lock:
+            self.plan_traces += n
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict[str, float]:
+        """The stats endpoint payload."""
+        with self._lock:
+            lat = list(self._latencies_ms)
+            elapsed = max(time.perf_counter() - self._started_at, 1e-9)
+            busy = max(self.busy_time_s, 1e-9)
+            return {
+                "queries_submitted": self.queries_submitted,
+                "queries_completed": self.queries_completed,
+                "batches_dispatched": self.batches_dispatched,
+                "batch_pad_queries": self.batch_pad_queries,
+                "avg_batch_size": (self.queries_completed
+                                   / max(self.batches_dispatched, 1)),
+                "plan_cache_hits": self.plan_cache_hits,
+                "plan_cache_misses": self.plan_cache_misses,
+                "plan_traces": self.plan_traces,
+                "supersteps_total": self.supersteps_total,
+                "messages_total": self.messages_total,
+                "qps": self.queries_completed / elapsed,
+                "qps_busy": self.queries_completed / busy,
+                "teps": self.messages_total / busy,
+                "latency_p50_ms": percentile(lat, 50),
+                "latency_p95_ms": percentile(lat, 95),
+                "latency_max_ms": percentile(lat, 100),
+                "uptime_s": elapsed,
+            }

@@ -20,8 +20,8 @@ from repro.core import graph as G, partition as PT, algorithms as ALG
 from repro.core.engine import Engine
 from repro.core.engine_shardmap import ShardEngine
 
-mesh = jax.make_mesh((8,), ("graph",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((8,), ("graph",))
 g = G.uniform(300, 6.0, seed=3).symmetrized()
 pg = PT.partition_graph(g, 8, method="greedy", pad_multiple=16)
 
@@ -60,6 +60,19 @@ compact = ShardEngine(ALG.bfs(0), pgl, mesh=mesh, exchange="frontier",
 assert np.array_equal(dense["state"]["parent"], compact["state"]["parent"])
 assert compact["exchange_words"] < dense["exchange_words"], (
     compact["exchange_words"], dense["exchange_words"])
+
+# batched multi-query execution through the explicit collectives: every
+# exchange must match per-root single-query Engine runs exactly
+roots = np.array([0, 5, 17, 100, 250, 7, 99, 3], np.int32)
+for exch in ("allgather", "ring", "frontier", "unicast"):
+    se = ShardEngine(ALG.bfs(), pg, mesh=mesh, exchange=exch, backend="ref")
+    outs = se.run_batch(root=roots)
+    for i, r in enumerate(roots):
+        rr = Engine(ALG.bfs(int(r)), pg, mode="gravfm", backend="ref").run()
+        assert np.array_equal(outs[i]["state"]["parent"],
+                              rr.state["parent"]), (exch, r)
+        assert outs[i]["supersteps"] == rr.supersteps, (exch, r)
+        assert outs[i]["messages"] == rr.messages, (exch, r)
 print("SHARDMAP-SUBPROCESS-OK")
 """
 

@@ -6,6 +6,8 @@ combiner; these tests check the built-in kernels' combiners are genuinely
 commutative/associative monoids and that results are delivery-order
 independent end-to-end (by permuting edge insertion order)."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't abort collection
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -2,6 +2,7 @@
 properties against the pure-jnp oracle (ref.py)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't abort collection
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -6,6 +6,7 @@ filter correctness, and the balance claims of Fig. 12.
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't abort collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import graph as G
