@@ -1,0 +1,106 @@
+"""Continuous vs bucketed scheduling under a mixed-depth workload.
+
+The dataset is the serving-scale uniform-16 graph with a disconnected
+deep "probe tail" (a line component, the Fig. 10/11 latency-probe idea):
+BFS rooted in the uniform core quiesces in ~4 supersteps, BFS rooted at
+the tail head runs ~tail-length supersteps. The request stream mixes
+them 3:1.
+
+Both schedulers answer the SAME stream with the same parallel width
+(max_batch == slots), so throughput is comparable; the metric that
+separates them is latency. Bucketed batching runs every batch to its
+slowest member's depth — a short query co-batched with a tail query
+pays the whole tail. The continuous scheduler retires each query the
+superstep its own termination mask flips and splices queued roots into
+the freed slots, so p50 (short-query-dominated) drops while the deep
+queries proceed undisturbed.
+
+``GRAVFM_BENCH_CI=1`` shrinks the workload, applies a tight superstep
+cap, and exits non-zero if continuous p50 fails to beat bucketed p50 —
+the CI smoke gate against scheduler regressions.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.service import GraphQueryService, QueryRequest
+
+from .common import emit
+
+
+def _mixed_graph(n_core: int, avg_degree: float, tail: int,
+                 seed: int = 0) -> G.Graph:
+    """uniform(n_core, avg_degree) plus a DISCONNECTED line of ``tail``
+    vertices — core roots are shallow, tail roots are deep."""
+    core = G.uniform(n_core, avg_degree, seed=seed).symmetrized()
+    n = n_core + tail
+    cs = np.arange(n_core, n - 1, dtype=np.int32)
+    src = np.concatenate([core.src, cs, cs + 1]).astype(np.int32)
+    dst = np.concatenate([core.dst, cs + 1, cs]).astype(np.int32)
+    return G.Graph(n, src, dst)
+
+
+def continuous_vs_bucketed():
+    ci = bool(os.environ.get("GRAVFM_BENCH_CI"))
+    # the tail must be MUCH deeper than the core (that asymmetry is the
+    # workload continuous batching exists for); the CI cap bounds
+    # runtime while keeping the ~5:24 depth mix
+    n_core, deg, tail = (1024, 8.0, 24) if ci else (4096, 16.0, 48)
+    cap = 24 if ci else None
+    n_queries = 32 if ci else 64
+    width = 16
+
+    g = _mixed_graph(n_core, deg, tail)
+    rng = np.random.default_rng(0)
+    short_roots = rng.integers(0, n_core, size=n_queries).astype(np.int32)
+    roots = [int(r) for r in short_roots]
+    for i in range(0, n_queries, 4):
+        roots[i] = n_core            # every 4th query starts the deep tail
+
+    def measure(sched: str) -> dict:
+        svc = GraphQueryService(num_shards=4, max_batch=width, slots=width,
+                                scheduling=sched, max_supersteps=cap,
+                                result_cache_size=0)   # pure scheduling
+        svc.add_graph("uniform-16-tail", g)
+        svc.warm("uniform-16-tail", "bfs")
+        # open-loop arrival: every request is stamped BEFORE any
+        # dispatch, so queue wait behind earlier batches counts into
+        # latency for both schedulers alike
+        reqs = [QueryRequest("uniform-16-tail", "bfs", {"root": r},
+                             deadline_ms=60_000) for r in roots]
+        t0 = time.perf_counter()
+        futs = [svc.submit(r) for r in reqs]
+        svc.flush()
+        for f in futs:
+            f.result()
+        wall = time.perf_counter() - t0
+        snap = svc.stats_snapshot()
+        emit(f"service_bfs_{sched}_mixed", wall / n_queries * 1e6,
+             f"qps={n_queries / wall:.1f};"
+             f"p50_ms={snap['latency_p50_ms']:.1f};"
+             f"p95_ms={snap['latency_p95_ms']:.1f};"
+             f"p99_ms={snap['latency_p99_ms']:.1f};"
+             f"supersteps={snap['supersteps_total']}")
+        return snap
+
+    # wall-clock comparison on shared runners is noisy; the structural
+    # advantage is large (multiples), so retry once before declaring a
+    # regression and require only a clear win, not a fixed ratio
+    attempts = 2 if ci else 1
+    for attempt in range(attempts):
+        p50 = {s: measure(s)["latency_p50_ms"]
+               for s in ("bucketed", "continuous")}
+        speedup = p50["bucketed"] / max(p50["continuous"], 1e-9)
+        emit("service_bfs_continuous_p50_speedup", 0.0, f"x{speedup:.2f}")
+        if p50["continuous"] < p50["bucketed"]:
+            break
+    else:
+        if ci:
+            raise SystemExit(
+                f"continuous p50 {p50['continuous']:.1f}ms did not beat "
+                f"bucketed p50 {p50['bucketed']:.1f}ms in {attempts} "
+                f"attempts — scheduler regression")

@@ -6,6 +6,7 @@ micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows.
 """
 import sys
 
+from . import continuous as CONT
 from . import paper_figures as PF
 from . import roofline_table as RT
 from . import service as SVC
@@ -25,6 +26,7 @@ ALL = {
     "frontier": SUB.frontier_vs_dense_words,
     "roofline": RT.roofline_table,
     "service": SVC.service_throughput,
+    "continuous": CONT.continuous_vs_bucketed,
 }
 
 

@@ -5,6 +5,7 @@
 - ``gas``        : §3 three-stage programming model.
 - ``algorithms`` : BFS / WCC / PageRank (+ SSSP, degree).
 - ``engine``     : §4 superstep executor (GraVF baseline + GraVF-M).
+- ``stepper``    : step-granular superstep core (one-superstep programs).
 - ``perfmodel``  : §5 analytical performance model.
 """
 from . import algorithms, gas, graph, partition
@@ -12,9 +13,11 @@ from .engine import Engine, EngineResult, collect
 from .gas import GasKernel
 from .graph import Graph
 from .partition import PartitionedGraph, partition_graph
+from .stepper import LaneStepper, StepCarry, SuperstepProgram
 
 __all__ = [
     "algorithms", "gas", "graph", "partition",
     "Engine", "EngineResult", "collect", "GasKernel", "Graph",
     "PartitionedGraph", "partition_graph",
+    "LaneStepper", "StepCarry", "SuperstepProgram",
 ]

@@ -39,6 +39,7 @@ from ..kernels import ops as kops
 from ..kernels import ref as kref
 from .gas import GasKernel
 from .partition import PartitionedGraph
+from .stepper import LaneStepper, SuperstepProgram
 
 __all__ = ["Engine", "EngineResult", "collect"]
 
@@ -129,6 +130,8 @@ class Engine:
         # not calls. The service plan cache asserts steady-state serving
         # performs zero re-traces against this.
         self.traces = 0
+        self._prog = self._make_program()
+        self._steppers: Dict[int, LaneStepper] = {}
         loop = self._make_loop()
         self._step = jax.jit(loop)
         # Batched variant: a leading query axis on the per-query kwargs.
@@ -252,7 +255,7 @@ class Engine:
 
         n_msgs = jnp.sum(act.astype(jnp.int32))
         n_remote_msgs = jnp.sum((act & data.lane_remote).astype(jnp.int32))
-        return acc, got, carry, n_msgs, n_remote_msgs
+        return acc, got, carry, {"n_msgs": n_msgs, "n_remote": n_remote_msgs}
 
     def _deliver_gravf(self, data: _GravfData, payload, active):
         """Source-side scatter, unicast exchange (paper Fig. 4 left)."""
@@ -302,68 +305,53 @@ class Engine:
         n_msgs = jnp.sum(act.astype(jnp.int32))
         cross = ~jnp.eye(P, dtype=bool)[:, :, None]
         n_remote = jnp.sum((act & cross).astype(jnp.int32))
-        return acc, got, carry, n_msgs, n_remote
+        return acc, got, carry, {"n_msgs": n_msgs, "n_remote": n_remote}
 
     # ------------------------------------------------------------------
-    def _make_loop(self):
-        k = self.kernel
+    def _make_program(self) -> SuperstepProgram:
+        """The step-granular core: one superstep = deliver -> gather ->
+        stats -> apply, factored so run/run_batch (while_loop over it)
+        and the service's continuous scheduler (host-driven, one step at
+        a time) execute the exact same traced computation."""
         deliver = (self._deliver_gravfm if self.mode == "gravfm"
                    else self._deliver_gravf)
-        cap_default = k.max_supersteps or HARD_SUPERSTEP_CAP
+        P = self._P
 
-        def apply_masked(state, data, superstep):
-            state, payload, active = k.apply(state, data.vert_gid,
-                                             data.out_deg, superstep)
-            active = active & data.vert_valid
-            return state, payload, active
-
-        def loop(data, cap, query_kwargs):
-            self.traces += 1  # Python side effect: runs at trace time only
-            state = k.init_state(data.vert_gid, data.out_deg,
-                                 data.vert_valid,
-                                 **{**self.params, **query_kwargs})
-            state, payload, active = apply_masked(state, data, 0)
-
-            stats0 = {
+        def init_stats():
+            return {
                 "messages": jnp.int32(0),
                 "unicast_words": jnp.float32(0.0),
                 "bcast_naive_words": jnp.float32(0.0),
                 "bcast_filtered_words": jnp.float32(0.0),
             }
 
-            def cond(carry):
-                state, payload, active, s, stats = carry
-                return jnp.any(active) & (s < cap)
+        def update_stats(stats, data, active, aux):
+            n_act = jnp.sum(active.astype(jnp.int32))
+            n_flt = jnp.sum(jnp.where(active, data.flt_cnt, 0))
+            return {
+                "messages": stats["messages"] + aux["n_msgs"],
+                "unicast_words":
+                    stats["unicast_words"]
+                    + aux["n_remote"].astype(jnp.float32),
+                "bcast_naive_words":
+                    stats["bcast_naive_words"]
+                    + (n_act * (P - 1)).astype(jnp.float32),
+                "bcast_filtered_words":
+                    stats["bcast_filtered_words"]
+                    + n_flt.astype(jnp.float32),
+            }
 
-            def body(carry):
-                state, payload, active, s, stats = carry
-                acc, got, carry_v, n_msgs, n_remote = deliver(
-                    data, payload, active)
-                if k.carry_dtype is not None:
-                    state = k.gather(state, acc, carry_v, got, s)
-                else:
-                    state = k.gather(state, acc, got, s)
-                n_act = jnp.sum(active.astype(jnp.int32))
-                n_flt = jnp.sum(jnp.where(active, data.flt_cnt, 0))
-                P = self._P
-                stats = {
-                    "messages": stats["messages"] + n_msgs,
-                    "unicast_words":
-                        stats["unicast_words"] + n_remote.astype(jnp.float32),
-                    "bcast_naive_words":
-                        stats["bcast_naive_words"]
-                        + (n_act * (P - 1)).astype(jnp.float32),
-                    "bcast_filtered_words":
-                        stats["bcast_filtered_words"]
-                        + n_flt.astype(jnp.float32),
-                }
-                state, payload, active = apply_masked(state, data, s + 1)
-                return (state, payload, active, s + 1, stats)
+        return SuperstepProgram(self.kernel, deliver,
+                                init_stats=init_stats,
+                                update_stats=update_stats)
 
-            init = (state, payload, active, jnp.int32(0), stats0)
-            state, payload, active, s, stats = jax.lax.while_loop(
-                cond, body, init)
-            return state, s, stats
+    def _make_loop(self):
+        prog = self._prog
+
+        def loop(data, cap, query_kwargs):
+            self.traces += 1  # Python side effect: runs at trace time only
+            c = prog.while_run(data, cap, self.params, query_kwargs)
+            return c.state, c.superstep, c.stats
 
         return loop
 
@@ -444,3 +432,40 @@ class Engine:
                 raw_state=state_q,
             ))
         return results
+
+    # ------------------------------------------------------------------
+    def make_stepper(self, width: int) -> LaneStepper:
+        """A host-drivable ``width``-lane slot array over this engine's
+        superstep program — the step-granular entry point the continuous
+        scheduler drives (admit / one-superstep / probe / retire). Lanes
+        run the same vmapped computation as :meth:`run_batch`, so a lane
+        is bit-identical to a solo :meth:`run` of its query regardless
+        of which superstep it was spliced in at. Cached per width: the
+        jitted admit/step programs trace once, then recycle slots
+        forever with zero re-traces."""
+        assert width >= 1
+        st = self._steppers.get(width)
+        if st is None:
+            st = LaneStepper(self._prog, self._data, self.params, width,
+                             trace_hook=self._bump_traces)
+            self._steppers[width] = st
+        return st
+
+    def _bump_traces(self) -> None:
+        self.traces += 1
+
+    def lane_result(self, carry_host, lane: int) -> EngineResult:
+        """Package one retired lane of a host-fetched stepper carry as an
+        :class:`EngineResult` (same fields as :meth:`run`)."""
+        state_q = jax.tree.map(lambda a: np.asarray(a[lane]),
+                               carry_host.state)
+        comm = {kk: float(v[lane]) for kk, v in carry_host.stats.items()}
+        comm["scheme"] = ("gravfm_broadcast" if self.mode == "gravfm"
+                          else "gravf_unicast")
+        return EngineResult(
+            state=collect(self.pg, state_q),
+            supersteps=int(carry_host.superstep[lane]),
+            messages=int(carry_host.stats["messages"][lane]),
+            comm=comm,
+            raw_state=state_q,
+        )

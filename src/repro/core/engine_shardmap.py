@@ -48,8 +48,11 @@ from ..kernels import ops as kops
 from ..kernels import ref as kref
 from .gas import GasKernel
 from .partition import PartitionedGraph
+from .stepper import (LaneStepperBase, StepCarry, SuperstepProgram,
+                      select_lanes)
 
-__all__ = ["ShardEngine", "build_shard_data", "ShardData"]
+__all__ = ["ShardEngine", "ShardLaneStepper", "build_shard_data",
+           "ShardData"]
 
 AXIS = "graph"
 
@@ -278,6 +281,33 @@ class ShardEngine:
         # Engine.traces for the counting trick.
         self.traces = 0
         self._run_cache: Dict[Any, Any] = {}
+        self._prog = self._make_program()
+        self._steppers: Dict[int, "ShardLaneStepper"] = {}
+
+    def _make_program(self) -> SuperstepProgram:
+        """Per-shard step-granular program (runs inside shard_map blocks;
+        termination uses the §4.3 distributed activity bit)."""
+        deliver = {
+            "allgather": self._deliver_allgather,
+            "ring": self._deliver_ring,
+            "frontier": self._deliver_frontier,
+            "unicast": self._deliver_unicast,
+        }[self.exchange]
+
+        def init_stats():
+            return {"messages": jnp.int32(0), "words": jnp.float32(0.0)}
+
+        def update_stats(stats, d, active, aux):
+            return {"messages": stats["messages"] + aux["n_msgs"],
+                    "words": stats["words"] + aux["words"]}
+
+        def global_any(b):
+            return jax.lax.pmax(b.astype(jnp.int32), AXIS) > 0
+
+        return SuperstepProgram(self.kernel, deliver,
+                                init_stats=init_stats,
+                                update_stats=update_stats,
+                                global_any=global_any)
 
     # ---------------- per-shard delivery kernels ----------------------
     def _local_combine(self, masked, d, combiner):
@@ -331,7 +361,9 @@ class ShardEngine:
         act = jax.lax.all_gather(active, AXIS)
         # actual wire: the DENSE padded update array goes to every peer
         words = jnp.float32(m.v_max * (m.P - 1))
-        return (*self._consume(d, upd.reshape(-1), act.reshape(-1)), words)
+        acc, got, carry, n_msgs = self._consume(
+            d, upd.reshape(-1), act.reshape(-1))
+        return acc, got, carry, {"n_msgs": n_msgs, "words": words}
 
     def _deliver_frontier(self, d, payload, active):
         """Compact ACTIVE updates to (id, payload) pairs; broadcast the
@@ -373,7 +405,8 @@ class ShardEngine:
         sel = jnp.minimum(sel, len(caps) - 1)
         pf, af, words = jax.lax.switch(sel, [branch(c) for c in caps],
                                        operand=None)
-        return (*self._consume(d, pf, af), words)
+        acc, got, carry, n_msgs = self._consume(d, pf, af)
+        return acc, got, carry, {"n_msgs": n_msgs, "words": words}
 
     def _deliver_ring(self, d, payload, active):
         """P-hop ppermute ring; each arriving chunk is consumed against the
@@ -454,7 +487,7 @@ class ShardEngine:
         carry = ccar if k.carry_dtype is not None else None
         # ring moves the same dense bytes as allgather, in P-1 hops
         words = jnp.float32(m.v_max * (m.P - 1))
-        return acc, got, carry, n_msgs, words
+        return acc, got, carry, {"n_msgs": n_msgs, "words": words}
 
     def _deliver_unicast(self, d, payload, active):
         """GraVF baseline: source-side scatter + all_to_all blocks."""
@@ -494,63 +527,32 @@ class ShardEngine:
         n_msgs = jnp.sum(act.astype(jnp.int32))
         # actual wire: all_to_all ships the PADDED per-pair blocks
         words = jnp.float32(m.e_pair_max * (m.P - 1))
-        return acc, got, carry, n_msgs, words
+        return acc, got, carry, {"n_msgs": n_msgs, "words": words}
 
     # ---------------- superstep + loop ---------------------------------
     def _shard_step(self, d: ShardData, payload, active, state, superstep):
-        k = self.kernel
-        deliver = {
-            "allgather": self._deliver_allgather,
-            "ring": self._deliver_ring,
-            "frontier": self._deliver_frontier,
-            "unicast": self._deliver_unicast,
-        }[self.exchange]
-        acc, got, carry, n_msgs, words = deliver(d, payload, active)
-        if k.carry_dtype is not None:
-            state = k.gather(state, acc, carry, got, superstep)
-        else:
-            state = k.gather(state, acc, got, superstep)
-        state, payload2, active2 = k.apply(state, d.vert_gid, d.out_deg,
-                                           superstep + 1)
-        active2 = active2 & d.vert_valid
-        return state, payload2, active2, n_msgs, words
+        """One superstep as a plain function (kept for the dry-run /
+        roofline hooks); thin shim over the SuperstepProgram step."""
+        c = self._prog.step(d, StepCarry(state, payload, active, superstep,
+                                         self._prog.init_stats()))
+        return (c.state, c.payload, c.active, c.stats["messages"],
+                c.stats["words"])
 
     def _make_run(self, cap: int):
         if ("single", cap) in self._run_cache:
             return self._run_cache[("single", cap)]
-        k = self.kernel
+        prog = self._prog
 
         def shard_fn(d: ShardData):
             self.traces += 1  # trace-time side effect (see Engine.traces)
             # shard_map blocks keep a size-1 leading (sharded) axis
             d = jax.tree.map(lambda a: a[0], d)
-            state = k.init_state(d.vert_gid, d.out_deg, d.vert_valid,
-                                 **self.params)
-            state, payload, active = k.apply(state, d.vert_gid, d.out_deg, 0)
-            active = active & d.vert_valid
-
-            def cond(c):
-                _, _, active, s, _, _ = c
-                any_local = jnp.any(active)
-                # distributed termination: §4.3 barrier activity bit
-                any_global = jax.lax.pmax(any_local.astype(jnp.int32), AXIS)
-                return (any_global > 0) & (s < cap)
-
-            def body(c):
-                state, payload, active, s, msgs, words = c
-                state, payload, active, n, w_ = self._shard_step(
-                    d, payload, active, state, s)
-                return (state, payload, active, s + 1, msgs + n,
-                        words + w_)
-
-            init = (state, payload, active, jnp.int32(0), jnp.int32(0),
-                    jnp.float32(0.0))
-            state, payload, active, s, msgs, words = jax.lax.while_loop(
-                cond, body, init)
-            total_msgs = jax.lax.psum(msgs, AXIS)
-            total_words = jax.lax.psum(words, AXIS)
-            state = jax.tree.map(lambda a: a[None], state)  # re-add shard axis
-            return state, s, total_msgs, total_words
+            c = prog.while_run(d, cap, self.params, {})
+            total_msgs = jax.lax.psum(c.stats["messages"], AXIS)
+            total_words = jax.lax.psum(c.stats["words"], AXIS)
+            # re-add shard axis
+            state = jax.tree.map(lambda a: a[None], c.state)
+            return state, c.superstep, total_msgs, total_words
 
         m = self.meta
         in_specs = jax.tree.map(lambda _: P(AXIS), self._data,
@@ -572,65 +574,42 @@ class ShardEngine:
         ck = ("batch", cap, qkeys)
         if ck in self._run_cache:
             return self._run_cache[ck]
-        k = self.kernel
+        prog = self._prog
 
         def shard_fn(d: ShardData, qkw):
             self.traces += 1  # trace-time side effect
             d = jax.tree.map(lambda a: a[0], d)
 
-            def init_q(kw):
-                state = k.init_state(d.vert_gid, d.out_deg, d.vert_valid,
-                                     **{**self.params, **kw})
-                state, payload, active = k.apply(state, d.vert_gid,
-                                                 d.out_deg, 0)
-                return state, payload, active & d.vert_valid
+            carry = jax.vmap(
+                lambda kw: prog.init_carry(d, self.params, kw))(qkw)
+            step_v = jax.vmap(lambda c: prog.step(d, c))
 
-            state, payload, active = jax.vmap(init_q)(qkw)
-
-            step = jax.vmap(
-                lambda p, a, st, s: self._shard_step(d, p, a, st, s),
-                in_axes=(0, 0, 0, None))
-
-            def alive_of(act):
+            def alive_of(c):
                 # per-query distributed termination bit (§4.3, per lane)
-                loc = jnp.any(act, axis=-1).astype(jnp.int32)   # (B,)
+                loc = jnp.any(c.active, axis=-1).astype(jnp.int32)  # (B,)
                 return jax.lax.pmax(loc, AXIS) > 0
 
-            def cond(c):
-                _, _, active, s, _, _, _ = c
-                any_local = jnp.any(active).astype(jnp.int32)
+            def cond(st):
+                s, c = st
+                any_local = jnp.any(c.active).astype(jnp.int32)
                 return (jax.lax.pmax(any_local, AXIS) > 0) & (s < cap)
 
-            def body(c):
-                state, payload, active, s, sq, msgs, words = c
-                alive = alive_of(active)
-                nstate, npayload, nactive, n_q, w_q = step(
-                    payload, active, state, s)
+            def body(st):
+                s, c = st
+                # finished lanes are frozen (select), so their state,
+                # superstep count and stats stay bit-identical to a solo
+                # run while the batch keeps stepping
+                c = select_lanes(alive_of(c), step_v(c), c)
+                return s + 1, c
 
-                def sel(new, old):
-                    b = alive.reshape(
-                        (alive.shape[0],) + (1,) * (new.ndim - 1))
-                    return jnp.where(b, new, old)
-
-                state = jax.tree.map(sel, nstate, state)
-                payload = sel(npayload, payload)
-                active = sel(nactive, active)
-                msgs = msgs + jnp.where(alive, n_q, 0)
-                words = words + jnp.sum(jnp.where(alive, w_q, 0.0))
-                sq = sq + alive.astype(jnp.int32)
-                return (state, payload, active, s + 1, sq, msgs, words)
-
-            B = payload.shape[0]
-            init = (state, payload, active, jnp.int32(0),
-                    jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
-                    jnp.float32(0.0))
-            state, payload, active, s, sq, msgs, words = jax.lax.while_loop(
-                cond, body, init)
-            total_msgs = jax.lax.psum(msgs, AXIS)          # (B,)
-            total_words = jax.lax.psum(words, AXIS)
+            _, carry = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), carry))
+            total_msgs = jax.lax.psum(carry.stats["messages"], AXIS)  # (B,)
+            total_words = jax.lax.psum(
+                jnp.sum(carry.stats["words"]), AXIS)
             # re-add shard axis leading so out spec P(AXIS) shards it
-            state = jax.tree.map(lambda a: a[None], state)  # (1, B, ...)
-            return state, sq, total_msgs, total_words
+            state = jax.tree.map(lambda a: a[None], carry.state)  # (1, B, ·)
+            return state, carry.superstep, total_msgs, total_words
 
         in_specs = jax.tree.map(lambda _: P(AXIS), self._data,
                                 is_leaf=lambda x: x is None)
@@ -692,6 +671,36 @@ class ShardEngine:
             })
         return out
 
+    # ---------------- step-granular entry point ------------------------
+    def make_stepper(self, width: int) -> "ShardLaneStepper":
+        """Host-drivable ``width``-lane slot array over the explicit
+        collectives (see ``Engine.make_stepper``): one jitted shard_map
+        call per superstep, with admit/retire between supersteps."""
+        if self._data is None:
+            raise ValueError("make_stepper needs device data; this engine "
+                             "was built meta-only (dry-run)")
+        st = self._steppers.get(width)
+        if st is None:
+            st = ShardLaneStepper(self, width)
+            self._steppers[width] = st
+        return st
+
+    def lane_result(self, carry_host, lane: int) -> Dict[str, Any]:
+        """Package one retired stepper lane as a result dict (same fields
+        as :meth:`run`); per-shard stats are folded across the shard axis
+        (the host-side psum)."""
+        from .engine import collect
+        state_q = jax.tree.map(lambda a: np.asarray(a[:, lane]),
+                               carry_host.state)
+        return {
+            "state": collect(self.pg, state_q) if self.pg else state_q,
+            "supersteps": int(carry_host.superstep[0, lane]),
+            "messages": int(carry_host.stats["messages"][:, lane].sum()),
+            "exchange_words":
+                float(carry_host.stats["words"][:, lane].sum()),
+            "exchange": self.exchange,
+        }
+
     # ---------------- dry-run hooks ------------------------------------
     def superstep_fn(self):
         """One full superstep (deliver + gather + apply) as a jittable fn
@@ -701,3 +710,107 @@ class ShardEngine:
             return self._shard_step(d, payload, active, state, superstep)
 
         return shard_fn
+
+
+class ShardLaneStepper(LaneStepperBase):
+    """W-lane continuous-stepping handle over a :class:`ShardEngine`.
+
+    Mirrors ``core.stepper.LaneStepper`` but every carry leaf keeps a
+    leading shard axis (global shape ``(P, W, ...)`` sharded over the
+    mesh ``graph`` axis), and admit/step are shard_map programs so each
+    superstep runs the engine's explicit collective exactly once for all
+    W lanes. The shard_map wrappers are built lazily on the first
+    ``init`` (the carry pytree structure — hence the in/out spec trees —
+    depends on the kernel's state dict and the query kwarg dtypes), then
+    reused forever: steady-state admit/step/retire re-traces nothing.
+    """
+
+    def __init__(self, eng: ShardEngine, width: int):
+        self.eng = eng
+        self.width = width
+        self._fns = None  # (init, admit, step) jitted shard_map programs
+        self._probe = jax.jit(self._probe_of)
+
+    @staticmethod
+    def _probe_of(carry):
+        # on the GLOBAL carry (outside shard_map): lane-alive is the
+        # host-side form of the §4.3 pmax'd activity bit
+        return jnp.any(carry.active, axis=(0, 2)), carry.superstep[0]
+
+    def _build(self, qkw):
+        eng, prog = self.eng, self.eng._prog
+        data_spec = jax.tree.map(lambda _: P(AXIS), eng._data,
+                                 is_leaf=lambda x: x is None)
+        qspec = {k: P() for k in qkw}
+        lane_spec = P()
+
+        def strip(t):
+            return jax.tree.map(lambda a: a[0], t)
+
+        def readd(t):
+            return jax.tree.map(lambda a: a[None], t)
+
+        def init_local(d, kw_arrays):
+            return jax.vmap(
+                lambda kw: prog.init_carry(d, eng.params, kw))(kw_arrays)
+
+        # Carry structure (and so the spec trees) via eval_shape of the
+        # collective-free local init.
+        d_local = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), eng._data)
+        qkw_struct = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                      for k, v in qkw.items()}
+        carry_struct = jax.eval_shape(init_local, d_local, qkw_struct)
+        carry_spec = jax.tree.map(lambda _: P(AXIS), carry_struct)
+
+        def init_fn(d, kw):
+            eng.traces += 1  # trace-time side effect (see Engine.traces)
+            return readd(init_local(strip(d), kw))
+
+        def admit_fn(d, carry, kw, fresh):
+            eng.traces += 1
+            d = strip(d)
+            return readd(select_lanes(fresh, init_local(d, kw),
+                                      strip(carry)))
+
+        def step_fn(d, carry, alive):
+            eng.traces += 1
+            d, c = strip(d), strip(carry)
+            return readd(select_lanes(
+                alive, jax.vmap(lambda cc: prog.step(d, cc))(c), c))
+
+        init_sm = _shard_map(init_fn, mesh=eng.mesh,
+                             in_specs=(data_spec, qspec),
+                             out_specs=carry_spec)
+        admit_sm = _shard_map(admit_fn, mesh=eng.mesh,
+                              in_specs=(data_spec, carry_spec, qspec,
+                                        lane_spec),
+                              out_specs=carry_spec)
+        step_sm = _shard_map(step_fn, mesh=eng.mesh,
+                             in_specs=(data_spec, carry_spec, lane_spec),
+                             out_specs=carry_spec)
+
+        # fuse the lane probe into the same dispatch (see LaneStepper)
+        def with_probe(sm):
+            def f(*args):
+                c = sm(*args)
+                return (c, *self._probe_of(c))
+            return jax.jit(f)
+
+        self._fns = (with_probe(init_sm), with_probe(admit_sm),
+                     with_probe(step_sm))
+
+    def init(self, qkw):
+        q = self._qdev(qkw)
+        if self._fns is None:
+            self._build(q)
+        return self._unpack(self._fns[0](self.eng._data, q))
+
+    def admit(self, carry, qkw, fresh):
+        return self._unpack(self._fns[1](self.eng._data, carry,
+                                         self._qdev(qkw),
+                                         jnp.asarray(fresh)))
+
+    def step(self, carry, alive):
+        return self._unpack(self._fns[2](self.eng._data, carry,
+                                         jnp.asarray(alive)))

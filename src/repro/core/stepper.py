@@ -1,0 +1,226 @@
+"""Step-granular superstep core.
+
+The engines used to bake the whole superstep iteration into one opaque
+``jax.lax.while_loop``: you could run a query to completion, but nothing
+could observe or intervene *between* supersteps. :class:`SuperstepProgram`
+factors that loop into three small pure functions over an explicit
+:class:`StepCarry`:
+
+  init_carry(data, params, query_kwargs) -> carry
+      kernel ``init_state`` + the superstep-0 ``apply`` (paper §4.3: "the
+      barrier is injected into the apply modules to begin execution").
+  step(data, carry) -> carry
+      exactly ONE superstep: deliver (broadcast/exchange + receiver-side
+      scatter + gather-combine) -> gather -> stats -> next apply.
+  alive(carry)
+      the per-program termination bit (any vertex still active).
+
+The same traced ``step`` is then driven three ways:
+
+  * ``while_run`` — a ``lax.while_loop`` over ``step``: the engines'
+    fast path, bit-identical to the pre-refactor monolithic loop (same
+    ops in the same order, same trace counts).
+  * ``jax.vmap`` of ``while_run`` / of ``step`` — the query-batched
+    paths (``run_batch`` and the shard_map batched program).
+  * :class:`LaneStepper` — a host-drivable W-lane handle (jitted
+    admit/step/probe) that the service's continuous scheduler uses to
+    retire finished queries mid-flight and splice newly arrived roots
+    into freed lanes between supersteps.
+
+Both engines parameterize the program with their own ``deliver`` (which
+collective moves the updates) and stats fold; the loop structure lives
+here once.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["StepCarry", "SuperstepProgram", "LaneStepper",
+           "LaneStepperBase", "select_lanes"]
+
+
+class StepCarry(NamedTuple):
+    """Everything one in-flight query owns between supersteps."""
+    state: Any              # kernel state pytree of per-vertex arrays
+    payload: jnp.ndarray    # pending update values (apply output)
+    active: jnp.ndarray     # pending update mask
+    superstep: jnp.ndarray  # int32 supersteps completed
+    stats: Dict[str, jnp.ndarray]
+
+
+def select_lanes(mask, new, old):
+    """Per-lane carry select: lanes where ``mask`` is True take ``new``,
+    the rest keep ``old`` (the explicit form of the freeze that vmap of
+    while_loop performs on finished lanes)."""
+    def sel(n, o):
+        b = mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(b, n, o)
+    return jax.tree.map(sel, new, old)
+
+
+class SuperstepProgram:
+    """init/step/alive for one (kernel, graph layout, deliver) triple.
+
+    ``deliver(data, payload, active)`` returns ``(acc, got, carry_vals,
+    aux)`` where ``aux`` is a dict of per-superstep scalars folded into
+    the running stats by ``update_stats(stats, data, active, aux)``
+    (``active`` is the pre-apply mask of the superstep being folded).
+    ``global_any`` reduces the local activity bit across shards
+    (identity for the global-array engine, ``pmax`` inside shard_map).
+    """
+
+    def __init__(self, kernel, deliver: Callable[..., Any], *,
+                 init_stats: Callable[[], Dict[str, jnp.ndarray]],
+                 update_stats: Callable[..., Dict[str, jnp.ndarray]],
+                 global_any: Optional[Callable[[jnp.ndarray],
+                                               jnp.ndarray]] = None):
+        self.kernel = kernel
+        self.deliver = deliver
+        self.init_stats = init_stats
+        self.update_stats = update_stats
+        self.global_any = global_any or (lambda b: b)
+
+    # ------------------------------------------------------------------
+    def init_carry(self, data, params: Dict[str, Any],
+                   query_kwargs: Dict[str, Any]) -> StepCarry:
+        k = self.kernel
+        state = k.init_state(data.vert_gid, data.out_deg, data.vert_valid,
+                             **{**params, **query_kwargs})
+        state, payload, active = k.apply(state, data.vert_gid,
+                                         data.out_deg, 0)
+        active = active & data.vert_valid
+        return StepCarry(state, payload, active, jnp.int32(0),
+                         self.init_stats())
+
+    def step(self, data, carry: StepCarry) -> StepCarry:
+        k = self.kernel
+        state, payload, active, s, stats = carry
+        acc, got, carry_v, aux = self.deliver(data, payload, active)
+        if k.carry_dtype is not None:
+            state = k.gather(state, acc, carry_v, got, s)
+        else:
+            state = k.gather(state, acc, got, s)
+        stats = self.update_stats(stats, data, active, aux)
+        state, payload, active = k.apply(state, data.vert_gid,
+                                         data.out_deg, s + 1)
+        active = active & data.vert_valid
+        return StepCarry(state, payload, active, s + 1, stats)
+
+    def alive(self, carry: StepCarry) -> jnp.ndarray:
+        return self.global_any(jnp.any(carry.active))
+
+    def is_done(self, carry: StepCarry) -> jnp.ndarray:
+        return ~self.alive(carry)
+
+    # ------------------------------------------------------------------
+    def while_run(self, data, cap, params: Dict[str, Any],
+                  query_kwargs: Dict[str, Any]) -> StepCarry:
+        """The fast path: run to quiescence (or ``cap``) in one
+        ``lax.while_loop`` over ``step``."""
+        carry = self.init_carry(data, params, query_kwargs)
+
+        def cond(c):
+            return self.alive(c) & (c.superstep < cap)
+
+        def body(c):
+            return self.step(data, c)
+
+        return jax.lax.while_loop(cond, body, carry)
+
+
+class LaneStepperBase:
+    """Host-side plumbing shared by every lane stepper (the global-array
+    LaneStepper below and engine_shardmap's ShardLaneStepper): the
+    (carry, lane_active, supersteps) return contract, kwarg upload, and
+    host fetch. Subclasses provide the jitted ``_init``/``_admit``/
+    ``_step``/``_probe`` programs."""
+
+    @staticmethod
+    def _unpack(out):
+        carry, act, steps = out
+        return carry, np.asarray(act), np.asarray(steps)
+
+    @staticmethod
+    def _qdev(qkw: Dict[str, np.ndarray]):
+        return {k: jnp.asarray(v) for k, v in qkw.items()}
+
+    def probe(self, carry: StepCarry):
+        act, steps = self._probe(carry)
+        return np.asarray(act), np.asarray(steps)
+
+    def fetch(self, carry: StepCarry) -> StepCarry:
+        return jax.tree.map(np.asarray, carry)
+
+
+class LaneStepper(LaneStepperBase):
+    """Host-drivable fixed-width slot array over a SuperstepProgram.
+
+    All functions are jitted once per (width, dtypes) signature; the
+    fresh/alive masks are traced values, so steady-state slot recycling
+    re-traces nothing (``trace_hook`` — usually the owning engine's
+    trace counter bump — fires at trace time only, which the service's
+    plan cache asserts against).
+
+    ``init``/``admit``/``step`` return ``(carry, lane_active (W,),
+    supersteps (W,))`` — the probe is fused into the same device call,
+    so the continuous scheduler's steady state costs exactly ONE
+    dispatch per superstep (and blocks on only 2·W scalars, not the
+    vertex state).
+
+      init(qkw)                -> all W lanes initialized
+      admit(carry, qkw, fresh) -> ``fresh`` lanes re-initialized
+      step(carry, alive)       -> one superstep for ``alive`` lanes,
+                                  everything else frozen
+      probe(carry)             -> host (lane_active (W,), supersteps (W,))
+      fetch(carry)             -> host copy of the whole carry
+    """
+
+    def __init__(self, prog: SuperstepProgram, data, params: Dict[str, Any],
+                 width: int, *, trace_hook: Callable[[], None] = None):
+        self.width = width
+        hook = trace_hook or (lambda: None)
+
+        def probe_of(carry):
+            return (jax.vmap(lambda c: jnp.any(c.active))(carry),
+                    carry.superstep)
+
+        def init_fn(d, qkw):
+            hook()
+            c = jax.vmap(lambda kw: prog.init_carry(d, params, kw))(qkw)
+            return (c, *probe_of(c))
+
+        def admit_fn(d, carry, qkw, fresh):
+            hook()
+            new = jax.vmap(
+                lambda kw: prog.init_carry(d, params, kw))(qkw)
+            c = select_lanes(fresh, new, carry)
+            return (c, *probe_of(c))
+
+        def step_fn(d, carry, alive):
+            hook()
+            new = jax.vmap(lambda c: prog.step(d, c))(carry)
+            c = select_lanes(alive, new, carry)
+            return (c, *probe_of(c))
+
+        self._data = data
+        self._init = jax.jit(init_fn)
+        self._admit = jax.jit(admit_fn)
+        self._step = jax.jit(step_fn)
+        self._probe = jax.jit(probe_of)
+
+    def init(self, qkw: Dict[str, np.ndarray]):
+        return self._unpack(self._init(self._data, self._qdev(qkw)))
+
+    def admit(self, carry: StepCarry, qkw: Dict[str, np.ndarray],
+              fresh: np.ndarray):
+        return self._unpack(self._admit(self._data, carry,
+                                        self._qdev(qkw),
+                                        jnp.asarray(fresh)))
+
+    def step(self, carry: StepCarry, alive: np.ndarray):
+        return self._unpack(self._step(self._data, carry,
+                                       jnp.asarray(alive)))

@@ -1,22 +1,28 @@
 """Graph query service: batched multi-query execution over the GraVF-M
-engine, with a compiled-plan cache and a deadline-aware scheduler.
+engine, with a compiled-plan cache and a deadline-aware scheduler —
+bucketed (run each batch to completion) or continuous (per-superstep
+slot array with mid-flight retirement and admission of new roots).
 
     from repro.service import GraphQueryService, QueryRequest
 
-    svc = GraphQueryService(num_shards=4, max_batch=32)
+    svc = GraphQueryService(num_shards=4, max_batch=32,
+                            scheduling="continuous")
     svc.add_graph("social", graph)
     svc.warm("social", "bfs")                 # optional: pre-trace plans
     res = svc.query("social", "bfs", root=7)  # one EngineResult
     print(svc.stats_snapshot())               # qps / p95 / TEPS / cache
 """
-from .batching import (BATCH_BUCKETS, Batcher, QueryClass, QueryRequest,
-                       bucket_for)
-from .plans import CompiledPlan, PlanCache, PlanKey
+from .batching import (BATCH_BUCKETS, AdmissionError, Batcher, QueryClass,
+                       QueryRequest, bucket_for)
+from .continuous import ContinuousScheduler, class_key
+from .plans import CompiledPlan, PlanCache, PlanKey, StepperPlan
 from .server import GraphQueryService
 from .stats import ServiceStats, percentile
 
 __all__ = [
-    "BATCH_BUCKETS", "Batcher", "QueryClass", "QueryRequest", "bucket_for",
-    "CompiledPlan", "PlanCache", "PlanKey",
+    "BATCH_BUCKETS", "AdmissionError", "Batcher", "QueryClass",
+    "QueryRequest", "bucket_for",
+    "CompiledPlan", "PlanCache", "PlanKey", "StepperPlan",
+    "ContinuousScheduler", "class_key",
     "GraphQueryService", "ServiceStats", "percentile",
 ]

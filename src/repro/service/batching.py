@@ -23,9 +23,16 @@ import time
 from typing import Any, Dict, List, Optional, Tuple
 
 __all__ = ["QueryRequest", "QueryClass", "Batcher", "bucket_for",
-           "BATCH_BUCKETS"]
+           "BATCH_BUCKETS", "AdmissionError"]
 
 BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+class AdmissionError(RuntimeError):
+    """Raised (via the request's Future) when admission control sheds a
+    query whose deadline is already infeasible given the backlog and the
+    class's observed per-superstep cost — failing fast instead of
+    burning a slot on an answer nobody will wait for."""
 
 _qid_counter = itertools.count(1)
 
@@ -127,6 +134,10 @@ class Batcher:
     def pop_class(self, qclass: QueryClass) -> List[Any]:
         """Remove and return one class's pending items ([] when none)."""
         return self._pending.pop(qclass, [])
+
+    def pending_in_class(self, qclass: QueryClass) -> int:
+        """Queued depth for one class (admission control's backlog)."""
+        return len(self._pending.get(qclass, ()))
 
     def flush_all(self) -> List[Tuple[QueryClass, List[Any]]]:
         out = [(qc, items) for qc, items in self._pending.items() if items]

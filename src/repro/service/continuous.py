@@ -1,0 +1,280 @@
+"""Continuous batching: an in-flight superstep loop queries join and
+leave without draining it.
+
+The bucketed batcher (batching.py) forms a batch, runs it to
+completion, and only then looks at the queue again — so a BFS that
+quiesces in 3 supersteps waits for the batch's 12-superstep straggler,
+and new arrivals wait for the whole loop to drain. This module instead
+holds a fixed-width *slot array* per query class and drives the
+engine's step-granular :class:`~repro.core.stepper.LaneStepper` one
+superstep at a time:
+
+  * after every superstep, slots whose per-query termination mask
+    flipped are **retired** — their Futures resolve immediately, at
+    their own depth, not the batch maximum;
+  * freed slots are **refilled** from the class queue between
+    supersteps by re-running ``init_carry`` for just those lanes (a
+    lane-masked select — the device never sees a shape change, so
+    steady-state recycling re-traces nothing).
+
+Each lane's computation is the same vmapped program ``run_batch``
+executes, so a query spliced in at in-flight superstep t is
+bit-identical to a solo ``Engine.run`` (asserted in
+tests/test_continuous.py).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .batching import QueryClass, QueryRequest
+from .plans import StepperPlan
+
+__all__ = ["ContinuousScheduler", "class_key"]
+
+
+def class_key(qclass: QueryClass) -> str:
+    """Stable string key for per-class cost-model stats."""
+    return f"{qclass.graph_id}/{qclass.kernel}/{qclass.mode}"
+
+
+def _lane_dtype(value) -> np.dtype:
+    """Canonical lane-array dtype for a query kwarg (matches the int32 /
+    float32 the kernels trace with, so admits never change signature)."""
+    a = np.asarray(value)
+    if a.dtype.kind in "iub":
+        return np.dtype(np.int32)
+    if a.dtype.kind == "f":
+        return np.dtype(np.float32)
+    return a.dtype
+
+
+class _ClassRun:
+    """One query class's slot array + queue."""
+
+    def __init__(self, splan: StepperPlan, slots: int, cap: int):
+        self.splan = splan
+        self.slots = slots
+        self.cap = cap
+        self.carry = None                       # device StepCarry or None
+        self.act: Optional[np.ndarray] = None   # (W,) lane-alive probe
+        self.steps: Optional[np.ndarray] = None  # (W,) lane supersteps
+        self.lanes: List[Optional[Tuple[QueryRequest, Any]]] = \
+            [None] * slots
+        self.queue: "collections.deque" = collections.deque()
+        self.qkw: Optional[Dict[str, np.ndarray]] = None
+
+    @property
+    def occupied(self) -> np.ndarray:
+        return np.array([ln is not None for ln in self.lanes], bool)
+
+    def in_flight(self) -> int:
+        return sum(ln is not None for ln in self.lanes)
+
+
+class ContinuousScheduler:
+    """Slot-array scheduler over step-granular engine plans.
+
+    ``pump()`` advances every class with work by exactly one superstep
+    (admit -> step -> retire); callers loop it — synchronously
+    (``drain``) or from the service's scheduler thread. Not re-entrant:
+    all public methods serialize on one lock, so a ``submit`` racing a
+    ``pump`` just lands in the queue for the next inter-superstep
+    admission window.
+    """
+
+    def __init__(self, *, slots: int = 16,
+                 max_supersteps: Optional[int] = None,
+                 stats=None,
+                 get_stepper: Callable[[QueryClass], StepperPlan] = None,
+                 on_result: Callable[[QueryRequest, Any], None] = None):
+        assert slots >= 1
+        self.slots = slots
+        self.max_supersteps = max_supersteps
+        self.stats = stats
+        self._get_stepper = get_stepper
+        self._on_result = on_result or (lambda req, res: None)
+        self._classes: Dict[QueryClass, _ClassRun] = {}
+        self._lock = threading.RLock()
+
+    # ---------------- admission ---------------------------------------
+    def submit(self, qclass: QueryClass, req: QueryRequest, fut) -> None:
+        with self._lock:
+            cr = self._classes.get(qclass)
+            if cr is None:
+                splan = self._get_stepper(qclass)
+                from ..core.engine import HARD_SUPERSTEP_CAP
+                cap = (self.max_supersteps
+                       or splan.engine.kernel.max_supersteps
+                       or HARD_SUPERSTEP_CAP)
+                cr = _ClassRun(splan, self.slots, cap)
+                self._classes[qclass] = cr
+            cr.queue.append((req, fut))
+
+    def backlog(self, qclass: QueryClass) -> int:
+        """Queued (not yet admitted) depth for one class."""
+        with self._lock:
+            cr = self._classes.get(qclass)
+            return len(cr.queue) if cr else 0
+
+    def pending(self) -> int:
+        """Queued + in-flight queries across all classes."""
+        with self._lock:
+            return sum(len(cr.queue) + cr.in_flight()
+                       for cr in self._classes.values())
+
+    def has_work(self) -> bool:
+        return self.pending() > 0
+
+    # ---------------- the superstep pump ------------------------------
+    def pump(self) -> int:
+        """One superstep for every class with work; returns the number
+        of queries retired."""
+        retired = 0
+        with self._lock:
+            for qclass, cr in list(self._classes.items()):
+                retired += self._pump_class(qclass, cr)
+        return retired
+
+    def drain(self, qclass: Optional[QueryClass] = None,
+              max_pumps: int = 1_000_000) -> int:
+        """Pump until ``qclass`` (or everything) has no queued or
+        in-flight queries; returns total retired."""
+        total = 0
+        with self._lock:
+            for _ in range(max_pumps):
+                if qclass is None:
+                    if not self.has_work():
+                        break
+                    total += self.pump()
+                else:
+                    cr = self._classes.get(qclass)
+                    if cr is None or (not cr.queue
+                                      and cr.in_flight() == 0):
+                        break
+                    total += self._pump_class(qclass, cr)
+        return total
+
+    # ---------------- internals ---------------------------------------
+    def _pump_class(self, qclass: QueryClass, cr: _ClassRun) -> int:
+        if not cr.queue and cr.in_flight() == 0:
+            return 0
+        try:
+            return self._pump_class_inner(qclass, cr)
+        except Exception as exc:    # noqa: BLE001 — fail the slot array
+            # Mirror the bucketed batcher's contract: a device/program
+            # error must resolve every affected Future, not strand them
+            # (and not kill the async scheduler thread). The class state
+            # resets; the next submit starts clean.
+            self._fail_class(cr, exc)
+            return 0
+
+    def _fail_class(self, cr: _ClassRun, exc: Exception) -> None:
+        for i, ln in enumerate(cr.lanes):
+            if ln is not None:
+                ln[1].set_exception(exc)
+                cr.lanes[i] = None
+        while cr.queue:
+            _, fut = cr.queue.popleft()
+            if fut.set_running_or_notify_cancel():
+                fut.set_exception(exc)
+        cr.carry = cr.act = cr.steps = None
+
+    def _pump_class_inner(self, qclass: QueryClass, cr: _ClassRun) -> int:
+        # retire everything the previous pump's step finished, FIRST,
+        # so its freed slots are refilled and stepped in this very pump
+        # (no lane idles a superstep while the queue is non-empty)
+        retired = self._retire(qclass, cr) if cr.carry is not None else 0
+        self._admit(cr)
+        if cr.carry is None or cr.in_flight() == 0:
+            return retired
+        # fresh lanes come back from admit with their probe bits, so a
+        # dead-on-arrival query is excluded here and retired below at 0
+        # supersteps — the stepper analogue of Engine.run's pre-loop
+        # cond check
+        alive = cr.occupied & cr.act & (cr.steps < cr.cap)
+        if not alive.any():
+            return retired + self._retire(qclass, cr)
+        eng = cr.splan.engine
+        traces0 = eng.traces
+        t0 = time.perf_counter()
+        cr.carry, cr.act, cr.steps = cr.splan.stepper.step(cr.carry, alive)
+        wall = time.perf_counter() - t0   # probe return synced the device
+        if self.stats is not None:
+            self.stats.record_busy(wall)
+            self.stats.record_pump_step()
+            if eng.traces == traces0:
+                # compile-time walls would poison the cost model (and,
+                # with admission control on, shed the class forever)
+                self.stats.record_superstep_time(class_key(qclass), wall)
+        return retired
+
+    def _admit(self, cr: _ClassRun) -> None:
+        """Splice queued queries into free lanes (one admit call for all
+        fresh lanes — re-runs init_carry lane-masked)."""
+        if not cr.queue:
+            return
+        fresh = np.zeros(cr.slots, bool)
+        for i in range(cr.slots):
+            if cr.lanes[i] is not None:
+                continue
+            while cr.queue:
+                req, fut = cr.queue.popleft()
+                if fut.set_running_or_notify_cancel():
+                    break
+            else:
+                break   # queue exhausted (cancelled stragglers dropped)
+            cr.lanes[i] = (req, fut)
+            if cr.qkw is None:
+                # lane arrays keyed by the kernel's DECLARED params
+                # (not this request's keys), seeded with its values —
+                # idle lanes then hold a valid query, like the bucketed
+                # batcher's padding lanes
+                cr.qkw = {p: np.full((cr.slots,), req.query_kwargs[p],
+                                     dtype=_lane_dtype(req.query_kwargs[p]))
+                          for p in cr.splan.query_params}
+            for p in cr.qkw:
+                # a missing declared param raises here and fails the
+                # class loudly (pump's guard) instead of silently
+                # reusing the slot's previous occupant's value
+                cr.qkw[p][i] = req.query_kwargs[p]
+            fresh[i] = True
+        if fresh.any():
+            if cr.carry is None:
+                cr.carry, cr.act, cr.steps = cr.splan.stepper.init(cr.qkw)
+            else:
+                cr.carry, cr.act, cr.steps = cr.splan.stepper.admit(
+                    cr.carry, cr.qkw, fresh)
+
+    def _retire(self, qclass: QueryClass, cr: _ClassRun) -> int:
+        """Resolve every occupied lane whose termination mask flipped
+        (or that hit the superstep cap); free its slot."""
+        act, steps = cr.act, cr.steps
+        done = [i for i in range(cr.slots)
+                if cr.lanes[i] is not None
+                and (not act[i] or steps[i] >= cr.cap)]
+        if not done:
+            return 0
+        host = cr.splan.stepper.fetch(cr.carry)
+        now = time.perf_counter()
+        for i in done:
+            req, fut = cr.lanes[i]
+            cr.lanes[i] = None
+            try:
+                res = cr.splan.engine.lane_result(host, i)
+            except Exception as exc:    # noqa: BLE001 — fail one lane
+                fut.set_exception(exc)
+                continue
+            fut.set_result(res)
+            if self.stats is not None:
+                self.stats.record_retire(
+                    messages=res.messages,
+                    latency_ms=(now - req.arrival_s) * 1e3)
+                self.stats.record_query_depth(class_key(qclass),
+                                              res.supersteps)
+            self._on_result(req, res)
+        return len(done)

@@ -15,10 +15,12 @@ the level below:
   engines  keyed (graph_id, kernel, mode, shards, backend)
                                                     — device arrays once
   plans    keyed PlanKey (adds batch_size)          — traced program once
+  steppers keyed PlanKey (batch_size = slot width)  — the step-granular
+           LaneStepper programs the continuous scheduler drives
 
-Steady-state serving hits the plan level only; the ``plan_traces``
-counter (fed by the engines' trace-time side effect) proves repeated
-submissions of the same class re-trace nothing.
+Steady-state serving hits the plan/stepper level only; the
+``plan_traces`` counter (fed by the engines' trace-time side effect)
+proves repeated submissions of the same class re-trace nothing.
 """
 from __future__ import annotations
 
@@ -31,9 +33,10 @@ from ..core.algorithms import ALGORITHMS
 from ..core.engine import Engine, EngineResult
 from ..core.graph import Graph
 from ..core.partition import PartitionedGraph, partition_graph
+from ..core.stepper import LaneStepper
 from .stats import ServiceStats
 
-__all__ = ["PlanKey", "CompiledPlan", "PlanCache"]
+__all__ = ["PlanKey", "CompiledPlan", "PlanCache", "StepperPlan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,22 +62,24 @@ class CompiledPlan:
     def query_params(self) -> Tuple[str, ...]:
         return tuple(self.engine.kernel.query_params)
 
-    def execute(self, **query_arrays) -> "list[EngineResult]":
+    def execute(self, max_supersteps: "Optional[int]" = None,
+                **query_arrays) -> "list[EngineResult]":
         """Run the plan on arrays already padded to ``key.batch_size``
         (scalars allowed when batch_size == 1). Returns per-query
-        results in input order."""
+        results in input order. ``max_supersteps`` is traced, so varying
+        it costs no re-trace."""
         self.executions += 1
         if self.key.batch_size == 1:
             scalars = {k: np.asarray(v).reshape(()) for k, v
                        in query_arrays.items()}
-            return [self.engine.run(**scalars)]
+            return [self.engine.run(max_supersteps, **scalars)]
         for k, v in query_arrays.items():
             n = np.asarray(v).shape[0]
             if n != self.key.batch_size:
                 raise ValueError(
                     f"plan expects batch {self.key.batch_size}, got {n} "
                     f"for {k!r}")
-        return self.engine.run_batch(**query_arrays)
+        return self.engine.run_batch(max_supersteps, **query_arrays)
 
     def warmup(self) -> "CompiledPlan":
         """Trace + compile now (first root of the graph) so the first real
@@ -92,10 +97,25 @@ class CompiledPlan:
         return self
 
 
+@dataclasses.dataclass
+class StepperPlan:
+    """A cached (engine, slot width) LaneStepper ready for continuous
+    driving. ``engine`` packages retired lanes (``lane_result``) and
+    owns the trace counter the stepper's jits bump."""
+    key: PlanKey
+    engine: Engine
+    stepper: LaneStepper
+
+    @property
+    def query_params(self) -> Tuple[str, ...]:
+        return tuple(self.engine.kernel.query_params)
+
+
 class PlanCache:
-    """Three-level cache: partitioned graphs, device-resident engines,
-    compiled plans. Thread-compatible (callers serialize dispatch; the
-    server holds its scheduler lock across get_plan + execute)."""
+    """Multi-level cache: partitioned graphs, device-resident engines,
+    compiled plans, lane steppers. Thread-compatible (callers serialize
+    dispatch; the server holds its scheduler lock across get_plan +
+    execute)."""
 
     def __init__(self, stats: Optional[ServiceStats] = None):
         self.stats = stats or ServiceStats()
@@ -103,6 +123,7 @@ class PlanCache:
         self._graph_meta: Dict[str, Graph] = {}
         self._engines: Dict[Tuple[str, str, str, int, str], Engine] = {}
         self._plans: Dict[PlanKey, CompiledPlan] = {}
+        self._steppers: Dict[PlanKey, StepperPlan] = {}
 
     # ---------------- graphs ------------------------------------------
     def register_graph(self, graph_id: str, graph: Graph, *,
@@ -159,6 +180,27 @@ class PlanCache:
             self._plans[key] = plan
         return plan
 
+    def get_stepper(self, key: PlanKey, *,
+                    method: str = "greedy") -> StepperPlan:
+        """Fetch or build the step-granular plan for ``key`` —
+        ``key.batch_size`` is the continuous scheduler's slot width.
+        Shares the graph/engine tiers with :meth:`get_plan`, so a class
+        served both bucketed and continuously partitions and uploads
+        once."""
+        splan = self._steppers.get(key)
+        hit = splan is not None
+        self.stats.record_cache(hit)
+        if not hit:
+            engine = self._engine_for(key, method)
+            if not engine.kernel.query_params:
+                raise ValueError(
+                    f"kernel {key.kernel!r} declares no query_params; "
+                    "it cannot be continuously batched")
+            splan = StepperPlan(key, engine,
+                                engine.make_stepper(key.batch_size))
+            self._steppers[key] = splan
+        return splan
+
     def sync_trace_counters(self) -> int:
         """Fold every engine's trace count into the shared stats; returns
         the current total. Call after dispatches to keep the stats
@@ -175,5 +217,6 @@ class PlanCache:
             "graphs": sorted(f"{g}/{p}shards/{m}" for g, p, m in self._graphs),
             "engines": len(self._engines),
             "plans": [dataclasses.asdict(k) for k in self._plans],
+            "steppers": [dataclasses.asdict(k) for k in self._steppers],
             "plan_traces": self.sync_trace_counters(),
         }

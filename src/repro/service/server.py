@@ -2,17 +2,37 @@
 ones under their latency deadlines, dispatch to cached compiled plans,
 return per-query :class:`EngineResult`\\ s.
 
-Two operating modes share all the machinery:
+Two scheduling policies share the admission/plan/stats machinery
+(``scheduling=`` constructor arg):
+
+  bucketed   — form a batch, run its whole superstep loop to
+      completion, return to the queue (batching.py). Simple, maximal
+      sharing, but every member pays the slowest member's depth.
+
+  continuous — a fixed-width slot array per class steps one superstep
+      at a time; finished queries retire mid-flight and new arrivals
+      splice into freed slots between supersteps (continuous.py, built
+      on the engines' step-granular SuperstepProgram). Short queries
+      stop paying long-query latency.
+
+Two operating modes as well:
 
   synchronous — ``submit()`` queues and returns a Future; dispatch
       happens when a batch fills, when ``poll()`` observes a due
-      deadline, or on ``flush()``. Deterministic; what the tests and
-      benchmarks drive.
+      deadline (or pumps a superstep), or on ``flush()``.
+      Deterministic; what the tests and benchmarks drive.
 
   async — ``start()`` spawns a scheduler thread that sleeps until the
       earliest pending flush time (or a new arrival) and dispatches due
-      batches; ``submit()`` then behaves like a fire-and-forget RPC whose
-      Future resolves within the request's deadline budget.
+      batches / pumps in-flight supersteps; ``submit()`` then behaves
+      like a fire-and-forget RPC whose Future resolves within the
+      request's deadline budget.
+
+On top of both sit a bounded-LRU **result cache** (identical
+(graph, kernel, mode, query kwargs) hits resolve without touching the
+scheduler) and optional **admission control** (requests whose deadline
+is already infeasible given the backlog and the class's observed
+per-superstep cost fail fast with :class:`AdmissionError`).
 
 The paper's engine answers one traversal per elaborated design; this
 server is the ROADMAP's "heavy traffic" counterpart — many BFS/SSSP
@@ -22,18 +42,21 @@ re-traces (see plans.py).
 """
 from __future__ import annotations
 
+import collections
 import threading
 import time
 from concurrent.futures import Future
 from typing import Any, Dict, List, Optional
 
+import jax
 import numpy as np
 
 from ..core.algorithms import ALGORITHMS
 from ..core.engine import EngineResult
 from ..core.graph import Graph
-from .batching import (BATCH_BUCKETS, Batcher, QueryClass, QueryRequest,
-                       bucket_for)
+from .batching import (BATCH_BUCKETS, AdmissionError, Batcher, QueryClass,
+                       QueryRequest, bucket_for)
+from .continuous import ContinuousScheduler, class_key
 from .plans import PlanCache, PlanKey
 from .stats import ServiceStats
 
@@ -46,12 +69,22 @@ class GraphQueryService:
     def __init__(self, *, num_shards: int = 4, max_batch: int = 32,
                  backend: str = "ref", partition_method: str = "greedy",
                  slack_ms: float = 5.0,
+                 scheduling: str = "bucketed",
+                 slots: Optional[int] = None,
+                 max_supersteps: Optional[int] = None,
+                 result_cache_size: int = 256,
+                 admission_control: bool = False,
                  plan_cache: Optional[PlanCache] = None,
                  stats: Optional[ServiceStats] = None):
+        assert scheduling in ("bucketed", "continuous")
         self.num_shards = num_shards
         self.max_batch = max_batch
         self.backend = backend
         self.partition_method = partition_method
+        self.scheduling = scheduling
+        self.max_supersteps = max_supersteps
+        self.result_cache_size = result_cache_size
+        self.admission_control = admission_control
         self.stats = stats or (plan_cache.stats if plan_cache
                                else ServiceStats())
         self.plans = plan_cache or PlanCache(stats=self.stats)
@@ -59,6 +92,19 @@ class GraphQueryService:
         # split off from the endpoint and under-report.
         self.plans.stats = self.stats
         self._batcher = Batcher(max_batch=max_batch, slack_ms=slack_ms)
+        self._slots = slots or max_batch
+        self._continuous: Optional[ContinuousScheduler] = None
+        if scheduling == "continuous":
+            self._continuous = ContinuousScheduler(
+                slots=self._slots, max_supersteps=max_supersteps,
+                stats=self.stats, get_stepper=self._stepper_for,
+                on_result=self._store_result)
+        self._result_cache: "collections.OrderedDict[Any, EngineResult]" \
+            = collections.OrderedDict()
+        # Leaf lock: _store_result is called from the scheduler thread
+        # while it holds the continuous scheduler's lock, so the cache
+        # must never share the service lock (ABBA deadlock with submit).
+        self._rc_lock = threading.Lock()
         self._lock = threading.RLock()
         self._wake = threading.Condition(self._lock)
         # Serializes plan lookup + execution: PlanCache is not internally
@@ -84,6 +130,21 @@ class GraphQueryService:
         Defaults to EVERY bucket up to max_batch — deadline flushes
         dispatch partial batches, so intermediate buckets are hot paths
         too."""
+        kern = ALGORITHMS[kernel]() if kernel in ALGORITHMS else None
+        if (self._continuous is not None and kern is not None
+                and kern.query_params):
+            # continuous serving compiles exactly one slot-width stepper
+            # per class; pre-trace its init/admit/step/probe programs
+            splan = self._stepper_for(QueryClass(
+                graph_id, kernel, mode, self.num_shards, self.backend))
+            qkw = {p: np.zeros((self._slots,), np.int32)
+                   for p in splan.query_params}
+            carry, _, _ = splan.stepper.init(qkw)
+            carry, _, _ = splan.stepper.admit(
+                carry, qkw, np.zeros(self._slots, bool))
+            splan.stepper.step(carry, np.zeros(self._slots, bool))
+            self.plans.sync_trace_counters()
+            return
         if batch_sizes is None:
             sizes = sorted({bucket_for(n, self.max_batch)
                             for n in BATCH_BUCKETS if n <= self.max_batch}
@@ -115,12 +176,111 @@ class GraphQueryService:
         qclass = QueryClass.of(req, self.num_shards, self.backend)
         batchable = (bool(kernel.query_params) and self.max_batch > 1)
         self.stats.record_submit()
+        # Result cache: an identical completed query resolves right here,
+        # without touching either scheduler.
+        cached = self._lookup_result(req)
+        if cached is not None:
+            if fut.set_running_or_notify_cancel():
+                fut.set_result(cached)
+            self.stats.record_result_hit(
+                (time.perf_counter() - req.arrival_s) * 1e3)
+            return fut
+        # Admission control: shed what cannot meet its deadline anyway.
+        if self._should_shed(req, qclass):
+            self.stats.record_shed()
+            fut.set_exception(AdmissionError(
+                f"deadline {req.deadline_ms:.1f}ms infeasible for "
+                f"{class_key(qclass)} given current backlog"))
+            return fut
+        if self._continuous is not None and batchable:
+            # enqueue OUTSIDE the service lock: the scheduler thread
+            # takes the scheduler lock first (pump), so nesting it
+            # under self._wake here would invert the lock order
+            self._continuous.submit(qclass, req, fut)
+            with self._wake:
+                self._wake.notify()
+            return fut
         with self._wake:
             ready = self._batcher.add(qclass, (req, fut), batchable)
             self._wake.notify()
         if ready is not None:
             self._dispatch(*ready)
         return fut
+
+    # ---------------- result cache / admission control ----------------
+    def _result_key(self, req: QueryRequest):
+        try:
+            kw = tuple(sorted((k, np.asarray(v).item())
+                              for k, v in req.query_kwargs.items()))
+        except (TypeError, ValueError):
+            return None    # non-scalar / unhashable kwargs: don't cache
+        return (req.graph_id, req.kernel, req.mode, kw)
+
+    @staticmethod
+    def _copy_result(res: EngineResult) -> EngineResult:
+        """Defensive copy: cached entries and cache hits must not alias
+        a caller's (mutable numpy) state arrays — a client editing its
+        result in place would otherwise poison every later hit."""
+        return EngineResult(
+            state={k: np.array(v) for k, v in res.state.items()},
+            supersteps=res.supersteps,
+            messages=res.messages,
+            comm=dict(res.comm),
+            raw_state=jax.tree.map(np.array, res.raw_state),
+        )
+
+    def _lookup_result(self, req: QueryRequest) -> Optional[EngineResult]:
+        if self.result_cache_size <= 0:
+            return None
+        key = self._result_key(req)
+        if key is None:
+            return None
+        with self._rc_lock:
+            res = self._result_cache.get(key)
+            if res is not None:
+                self._result_cache.move_to_end(key)
+        return self._copy_result(res) if res is not None else None
+
+    def _store_result(self, req: QueryRequest, res: EngineResult) -> None:
+        if self.result_cache_size <= 0:
+            return
+        key = self._result_key(req)
+        if key is None:
+            return
+        res = self._copy_result(res)
+        with self._rc_lock:
+            self._result_cache[key] = res
+            self._result_cache.move_to_end(key)
+            while len(self._result_cache) > self.result_cache_size:
+                self._result_cache.popitem(last=False)
+
+    def _should_shed(self, req: QueryRequest, qclass: QueryClass) -> bool:
+        """Deadline-infeasibility test from the class's observed cost
+        model (EWMA superstep wall time × EWMA depth × backlog waves).
+        Conservative by construction: sheds nothing until both EWMAs
+        have been observed."""
+        if not self.admission_control:
+            return False
+        step_ms, depth = self.stats.class_cost_model(class_key(qclass))
+        if step_ms is None or depth is None:
+            return False
+        if self._continuous is not None:
+            backlog = self._continuous.backlog(qclass)
+            width = self._slots
+        else:
+            with self._wake:
+                backlog = self._batcher.pending_in_class(qclass)
+            width = self.max_batch
+        waves = 1 + backlog // max(width, 1)
+        est_ms = step_ms * depth * waves
+        return time.perf_counter() + est_ms / 1e3 > req.deadline_s
+
+    def _stepper_for(self, qclass: QueryClass):
+        with self._dispatch_lock:
+            return self.plans.get_stepper(
+                self._plan_key(qclass.graph_id, qclass.kernel, qclass.mode,
+                               self._slots),
+                method=self.partition_method)
 
     def query(self, graph_id: str, kernel: str, *, mode: str = "gravfm",
               deadline_ms: float = 50.0, **query_kwargs) -> EngineResult:
@@ -160,16 +320,18 @@ class GraphQueryService:
 
     def _dispatch_locked(self, qclass: QueryClass, reqs, futs, n: int,
                          t0: float) -> None:
+        traces_before = self.plans.sync_trace_counters()
         try:
             plan = self.plans.get_plan(
                 self._plan_key(qclass.graph_id, qclass.kernel, qclass.mode,
                                bucket_for(n, self.max_batch)),
                 method=self.partition_method)
             bucket = plan.key.batch_size
+            cap = self.max_supersteps
             if bucket == 1:
                 results = []
                 for r in reqs:
-                    results.extend(plan.execute(**{
+                    results.extend(plan.execute(cap, **{
                         k: np.asarray(v) for k, v in r.query_kwargs.items()}))
             else:
                 arrays = {}
@@ -177,7 +339,7 @@ class GraphQueryService:
                     col = [r.query_kwargs[p] for r in reqs]
                     col += [col[0]] * (bucket - n)   # pad lanes
                     arrays[p] = np.asarray(col)
-                results = plan.execute(**arrays)[:n]
+                results = plan.execute(cap, **arrays)[:n]
         except Exception as exc:   # noqa: BLE001 — fail the whole batch
             for f in futs:
                 f.set_exception(exc)
@@ -186,27 +348,45 @@ class GraphQueryService:
         wall = now - t0
         for f, res in zip(futs, results):
             f.set_result(res)
-        self.plans.sync_trace_counters()
+        traces_after = self.plans.sync_trace_counters()
         self.stats.record_batch(
             n_queries=n, n_pad=max(0, bucket - n) if bucket > 1 else 0,
             wall_s=wall,
             messages=sum(r.messages for r in results),
             supersteps=max((r.supersteps for r in results), default=0),
             latencies_ms=[(now - r.arrival_s) * 1e3 for r in reqs])
+        # feed the admission-control cost model + the result cache;
+        # dispatches that traced (compiled) are excluded from the cost
+        # model — a compile wall would poison the EWMA and, with
+        # admission control on, shed the class forever
+        ck = class_key(qclass)
+        batch_depth = max((r.supersteps for r in results), default=0)
+        if batch_depth > 0 and traces_after == traces_before:
+            self.stats.record_superstep_time(ck, wall, n_steps=batch_depth)
+        for r, res in zip(reqs, results):
+            self.stats.record_query_depth(ck, res.supersteps)
+            self._store_result(r, res)
 
     # ---------------- scheduling --------------------------------------
     def poll(self, now_s: Optional[float] = None) -> int:
-        """Dispatch every batch whose deadline-driven flush time has
-        arrived; returns the number of batches dispatched."""
+        """Make one unit of scheduler progress: dispatch every batch
+        whose deadline-driven flush time has arrived, and (continuous
+        scheduling) pump one superstep across the in-flight slot arrays.
+        Returns batches dispatched + queries retired."""
         with self._wake:
             due = self._batcher.due(now_s)
         for qc, items in due:
             self._dispatch(qc, items)
-        return len(due)
+        n = len(due)
+        if self._continuous is not None:
+            n += self._continuous.pump()
+        return n
 
     def flush(self, qclass: Optional[QueryClass] = None) -> int:
-        """Dispatch pending batches regardless of deadlines — all of them,
-        or only ``qclass``'s."""
+        """Run pending work to completion regardless of deadlines — all
+        of it, or only ``qclass``'s: dispatch queued batches, and drain
+        the continuous slot arrays (pump until queued + in-flight
+        queries of the scope all retire)."""
         with self._wake:
             if qclass is None:
                 batches = self._batcher.flush_all()
@@ -215,11 +395,17 @@ class GraphQueryService:
                 batches = [(qclass, items)] if items else []
         for qc, items in batches:
             self._dispatch(qc, items)
-        return len(batches)
+        n = len(batches)
+        if self._continuous is not None:
+            n += self._continuous.drain(qclass)
+        return n
 
     def pending(self) -> int:
         with self._lock:
-            return len(self._batcher)
+            n = len(self._batcher)
+        if self._continuous is not None:
+            n += self._continuous.pending()
+        return n
 
     # ---------------- async scheduler thread --------------------------
     def start(self) -> "GraphQueryService":
@@ -248,10 +434,13 @@ class GraphQueryService:
             with self._wake:
                 if not self._running:
                     return
+                busy = (self._continuous is not None
+                        and self._continuous.has_work())
                 nxt = self._batcher.next_flush_s()
                 timeout = (None if nxt is None
                            else max(0.0, nxt - time.perf_counter()))
-                if timeout is None or timeout > 0:
+                # with in-flight continuous lanes, don't sleep — pump
+                if not busy and (timeout is None or timeout > 0):
                     self._wake.wait(timeout=timeout)
                 if not self._running:
                     return
@@ -263,4 +452,5 @@ class GraphQueryService:
         percentiles, batch occupancy, and plan-cache counters."""
         snap = self.stats.snapshot()
         snap["pending"] = self.pending()
+        snap["scheduling"] = self.scheduling
         return snap

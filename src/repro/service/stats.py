@@ -19,12 +19,18 @@ __all__ = ["ServiceStats", "percentile"]
 
 
 def percentile(values: List[float], q: float) -> float:
-    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input."""
+    """Linearly interpolated percentile (q in [0, 100]); 0.0 on empty
+    input. (The previous nearest-rank form used ``int(round(...))``,
+    whose banker's rounding made e.g. p50 of two samples unstable —
+    flipping between the lower and upper sample as the window grew.)"""
     if not values:
         return 0.0
     vs = sorted(values)
-    idx = min(len(vs) - 1, max(0, int(round(q / 100.0 * (len(vs) - 1)))))
-    return vs[idx]
+    pos = min(max(q, 0.0), 100.0) / 100.0 * (len(vs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(vs) - 1)
+    frac = pos - lo
+    return vs[lo] * (1.0 - frac) + vs[hi] * frac
 
 
 @dataclasses.dataclass
@@ -33,11 +39,13 @@ class ServiceStats:
 
     queries_submitted: int = 0
     queries_completed: int = 0
+    queries_shed: int = 0           # rejected by admission control
     batches_dispatched: int = 0
     batch_pad_queries: int = 0      # padding lanes added to hit a bucket
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
     plan_traces: int = 0            # jit traces across all cached engines
+    result_cache_hits: int = 0      # memoized EngineResults served
     supersteps_total: int = 0
     messages_total: int = 0         # traversed edges (TEPS numerator)
     busy_time_s: float = 0.0        # wall time spent inside dispatch
@@ -46,11 +54,19 @@ class ServiceStats:
     # long-running service neither leaks memory nor pays O(total-queries)
     # sorts in snapshot().
     latency_window: int = 8192
+    # EWMA smoothing for the per-class superstep wall-time / depth
+    # estimates that admission control extrapolates from.
+    ewma_alpha: float = 0.2
 
     def __post_init__(self):
         self._lock = threading.Lock()
         self._latencies_ms = collections.deque(maxlen=self.latency_window)
         self._started_at = time.perf_counter()
+        # per query-class key: EWMA of one superstep's wall time (ms) and
+        # of supersteps-per-query — the service's cost model for deciding
+        # whether a deadline is still feasible given the backlog.
+        self._step_ms_ewma: Dict[str, float] = {}
+        self._depth_ewma: Dict[str, float] = {}
 
     # ------------------------------------------------------------------
     def record_submit(self, n: int = 1) -> None:
@@ -80,6 +96,67 @@ class ServiceStats:
         with self._lock:
             self.plan_traces += n
 
+    def record_result_hit(self, latency_ms: float) -> None:
+        """A memoized result resolved a query without execution."""
+        with self._lock:
+            self.result_cache_hits += 1
+            self.queries_completed += 1
+            self._latencies_ms.append(latency_ms)
+
+    def record_shed(self, n: int = 1) -> None:
+        with self._lock:
+            self.queries_shed += n
+
+    # ---- per-class cost model (admission control / continuous) --------
+    def _ewma(self, table: Dict[str, float], key: str, x: float) -> None:
+        prev = table.get(key)
+        table[key] = x if prev is None else (
+            self.ewma_alpha * x + (1.0 - self.ewma_alpha) * prev)
+
+    def record_busy(self, wall_s: float) -> None:
+        """Wall time spent driving the engine (continuous pump steps —
+        bucketed dispatch accounts its own via record_batch)."""
+        with self._lock:
+            self.busy_time_s += wall_s
+
+    def record_superstep_time(self, class_key: str, wall_s: float,
+                              n_steps: int = 1) -> None:
+        """One (or ``n_steps`` uniform) superstep dispatches of
+        ``class_key`` took ``wall_s`` seconds of wall time (EWMA feed
+        only; busy time is accounted separately)."""
+        with self._lock:
+            if n_steps > 0:
+                self._ewma(self._step_ms_ewma, class_key,
+                           wall_s * 1e3 / n_steps)
+
+    def record_query_depth(self, class_key: str, supersteps: int) -> None:
+        with self._lock:
+            self._ewma(self._depth_ewma, class_key, float(supersteps))
+
+    def class_cost_model(self, class_key: str):
+        """(EWMA superstep wall ms, EWMA supersteps per query); either is
+        None until observed — admission control then admits everything."""
+        with self._lock:
+            return (self._step_ms_ewma.get(class_key),
+                    self._depth_ewma.get(class_key))
+
+    def record_pump_step(self) -> None:
+        """One device superstep executed by the continuous scheduler —
+        the same unit record_batch's ``supersteps`` accumulates for
+        bucketed dispatch (batch max = device supersteps run), so
+        ``supersteps_total`` is comparable across schedulers."""
+        with self._lock:
+            self.supersteps_total += 1
+
+    def record_retire(self, messages: int, latency_ms: float) -> None:
+        """One query retired mid-flight by the continuous scheduler.
+        (Device supersteps are counted per pump via record_pump_step,
+        not per query — W lanes share each superstep.)"""
+        with self._lock:
+            self.queries_completed += 1
+            self.messages_total += messages
+            self._latencies_ms.append(latency_ms)
+
     # ------------------------------------------------------------------
     def snapshot(self) -> Dict[str, float]:
         """The stats endpoint payload."""
@@ -90,13 +167,16 @@ class ServiceStats:
             return {
                 "queries_submitted": self.queries_submitted,
                 "queries_completed": self.queries_completed,
+                "queries_shed": self.queries_shed,
                 "batches_dispatched": self.batches_dispatched,
                 "batch_pad_queries": self.batch_pad_queries,
-                "avg_batch_size": (self.queries_completed
-                                   / max(self.batches_dispatched, 1)),
+                "avg_batch_size": (
+                    self.queries_completed / self.batches_dispatched
+                    if self.batches_dispatched else 0.0),
                 "plan_cache_hits": self.plan_cache_hits,
                 "plan_cache_misses": self.plan_cache_misses,
                 "plan_traces": self.plan_traces,
+                "result_cache_hits": self.result_cache_hits,
                 "supersteps_total": self.supersteps_total,
                 "messages_total": self.messages_total,
                 "qps": self.queries_completed / elapsed,
@@ -104,6 +184,7 @@ class ServiceStats:
                 "teps": self.messages_total / busy,
                 "latency_p50_ms": percentile(lat, 50),
                 "latency_p95_ms": percentile(lat, 95),
+                "latency_p99_ms": percentile(lat, 99),
                 "latency_max_ms": percentile(lat, 100),
                 "uptime_s": elapsed,
             }

@@ -1,0 +1,436 @@
+"""Continuous batching: a query spliced into an in-flight superstep
+loop at any step t must be bit-identical to a solo ``Engine.run`` (state,
+superstep count, message count); steady-state slot recycling must
+re-trace nothing; the service-level scheduler must retire finished
+queries mid-flight, serve the result cache, and shed infeasible
+deadlines. Plus the linear-interpolation ``percentile`` fix."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as ALG
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core.engine import Engine
+from repro.service import (AdmissionError, GraphQueryService, QueryClass,
+                           QueryRequest, ServiceStats, percentile)
+
+
+@pytest.fixture(scope="module")
+def deep_graph():
+    # ladder: BFS depth varies strongly with the root's rank, so lanes
+    # genuinely retire at different supersteps
+    return G.ladder(2, 30, 1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return G.uniform(500, 8.0, seed=11, weighted=True).symmetrized()
+
+
+def drive_continuous(eng, width, arrivals, cap=100_000):
+    """Host-drive a LaneStepper: ``arrivals`` is a list of
+    (join_at_global_superstep, query_kwargs); queries join the in-flight
+    loop at (or after, when no slot is free) their step. Returns results
+    in arrival order."""
+    st = eng.make_stepper(width)
+    lanes = [None] * width          # arrival index or None
+    results = {}
+    qkw = None
+    carry = None
+    pending = sorted(range(len(arrivals)), key=lambda i: arrivals[i][0])
+    gstep = 0
+    for _ in range(10_000):
+        # admit everything due whose slot exists
+        fresh = np.zeros(width, bool)
+        for slot in range(width):
+            if lanes[slot] is not None or not pending:
+                continue
+            if arrivals[pending[0]][0] > gstep:
+                break
+            idx = pending.pop(0)
+            kw = arrivals[idx][1]
+            if qkw is None:
+                qkw = {p: np.full((width,), v, np.int32)
+                       for p, v in kw.items()}
+            for p, v in kw.items():
+                qkw[p][slot] = v
+            lanes[slot] = idx
+            fresh[slot] = True
+        if fresh.any():
+            carry, act, steps = (st.init(qkw) if carry is None
+                                 else st.admit(carry, qkw, fresh))
+        occupied = np.array([ln is not None for ln in lanes], bool)
+        if not occupied.any():
+            if not pending:
+                break
+            gstep += 1
+            continue
+        act, steps = st.probe(carry)
+        done = occupied & (~act | (steps >= cap))
+        if done.any():
+            host = st.fetch(carry)
+            for slot in np.nonzero(done)[0]:
+                results[lanes[slot]] = eng.lane_result(host, int(slot))
+                lanes[slot] = None
+            continue   # freed slots admit before the next step
+        alive = occupied & act
+        carry, act, steps = st.step(carry, alive)
+        gstep += 1
+    assert len(results) == len(arrivals), "scheduler failed to drain"
+    return [results[i] for i in range(len(arrivals))]
+
+
+# ---------------------------------------------------------------------------
+# mid-flight join == solo run, across modes and backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["gravfm", "gravf"])
+def test_join_midflight_matches_solo_ref(deep_graph, mode):
+    pg = PT.partition_graph(deep_graph, 4, method="greedy", pad_multiple=16)
+    eng = Engine(ALG.bfs(), pg, mode=mode, backend="ref")
+    n = deep_graph.num_vertices
+    # root 0 runs ~31 supersteps; the others join at steps 3/7/15 with
+    # varying depths (roots near the far end quiesce almost immediately)
+    arrivals = [(0, {"root": 0}), (3, {"root": n - 1}),
+                (7, {"root": n // 2}), (15, {"root": 5})]
+    outs = drive_continuous(eng, 3, arrivals)
+    for (_, kw), res in zip(arrivals, outs):
+        ref = Engine(ALG.bfs(int(kw["root"])), pg, mode=mode,
+                     backend="ref").run()
+        assert np.array_equal(res.state["parent"], ref.state["parent"])
+        assert res.supersteps == ref.supersteps
+        assert res.messages == ref.messages
+
+
+def test_join_midflight_matches_solo_pallas(deep_graph):
+    pg = PT.partition_graph(deep_graph, 4, method="greedy", pad_multiple=16)
+    eng = Engine(ALG.bfs(), pg, mode="gravfm", backend="pallas",
+                 tile_e=64, tile_r=32)
+    n = deep_graph.num_vertices
+    arrivals = [(0, {"root": 0}), (4, {"root": n - 2}), (9, {"root": 17})]
+    outs = drive_continuous(eng, 2, arrivals)
+    for (_, kw), res in zip(arrivals, outs):
+        ref = Engine(ALG.bfs(int(kw["root"])), pg, mode="gravfm",
+                     backend="pallas", tile_e=64, tile_r=32).run()
+        assert np.array_equal(res.state["parent"], ref.state["parent"])
+        assert res.supersteps == ref.supersteps
+
+
+def test_join_midflight_sssp_carry(graph):
+    """The argmin carry path (SSSP parent pointers) through the stepper."""
+    pg = PT.partition_graph(graph, 4, method="greedy", pad_multiple=16)
+    eng = Engine(ALG.sssp(), pg, mode="gravfm", backend="ref")
+    arrivals = [(0, {"root": 0}), (2, {"root": 250}), (4, {"root": 77})]
+    outs = drive_continuous(eng, 2, arrivals)
+    for (_, kw), res in zip(arrivals, outs):
+        ref = Engine(ALG.sssp(int(kw["root"])), pg, mode="gravfm",
+                     backend="ref").run()
+        assert np.array_equal(res.state["dist"].view(np.int32),
+                              ref.state["dist"].view(np.int32))
+        assert np.array_equal(res.state["parent"], ref.state["parent"])
+
+
+def test_join_midflight_property(deep_graph):
+    """Property form: random roots joining at random in-flight steps."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st_
+
+    pg = PT.partition_graph(deep_graph, 4, method="greedy", pad_multiple=16)
+    eng = Engine(ALG.bfs(), pg, mode="gravfm", backend="ref")
+    n = deep_graph.num_vertices
+    solo_cache = {}
+
+    def solo(root):
+        if root not in solo_cache:
+            solo_cache[root] = Engine(ALG.bfs(int(root)), pg, mode="gravfm",
+                                      backend="ref").run()
+        return solo_cache[root]
+
+    @settings(max_examples=10, deadline=None)
+    @given(st_.lists(
+        st_.tuples(st_.integers(0, 25), st_.integers(0, n - 1)),
+        min_size=1, max_size=5))
+    def check(joins):
+        arrivals = [(t, {"root": r}) for t, r in sorted(joins)]
+        outs = drive_continuous(eng, 2, arrivals)
+        for (_, kw), res in zip(arrivals, outs):
+            ref = solo(kw["root"])
+            assert np.array_equal(res.state["parent"], ref.state["parent"])
+            assert res.supersteps == ref.supersteps
+            assert res.messages == ref.messages
+
+    check()
+
+
+def test_steady_state_slot_recycling_zero_retrace(graph):
+    """After the first full admit/step/retire cycle, recycling slots
+    through arbitrarily many queries must re-trace nothing."""
+    pg = PT.partition_graph(graph, 4, method="greedy", pad_multiple=16)
+    eng = Engine(ALG.bfs(), pg, mode="gravfm", backend="ref")
+    drive_continuous(eng, 2, [(0, {"root": 0}), (1, {"root": 9})])
+    traces0 = eng.traces
+    assert traces0 >= 3   # init + admit + step
+    drive_continuous(eng, 2, [(0, {"root": 3}), (2, {"root": 88}),
+                              (5, {"root": 123}), (6, {"root": 200})])
+    assert eng.traces == traces0
+
+
+# ---------------------------------------------------------------------------
+# service-level continuous scheduling
+# ---------------------------------------------------------------------------
+
+def test_service_continuous_end_to_end(graph):
+    pg = PT.partition_graph(graph, 4, method="greedy", pad_multiple=16)
+    svc = GraphQueryService(num_shards=4, max_batch=8,
+                            scheduling="continuous", slots=4)
+    svc.add_graph("g", graph, pad_multiple=16)
+    futs = [svc.submit(QueryRequest("g", "bfs", {"root": int(r)}))
+            for r in range(10)]
+    svc.flush()
+    for r, f in enumerate(futs):
+        ref = Engine(ALG.bfs(r), pg, mode="gravfm", backend="ref").run()
+        res = f.result(timeout=0)
+        assert np.array_equal(res.state["parent"], ref.state["parent"])
+        assert res.supersteps == ref.supersteps
+    snap = svc.stats_snapshot()
+    assert snap["queries_completed"] == 10
+    assert snap["scheduling"] == "continuous"
+
+
+def test_service_continuous_zero_retrace_and_mixed_retire(graph):
+    svc = GraphQueryService(num_shards=4, max_batch=8,
+                            scheduling="continuous", slots=4)
+    svc.add_graph("g", graph, pad_multiple=16)
+    svc.warm("g", "bfs")
+    traces0 = svc.stats_snapshot()["plan_traces"]
+    for wave in range(3):
+        futs = [svc.submit(QueryRequest("g", "bfs",
+                                        {"root": wave * 16 + r}))
+                for r in range(8)]
+        svc.flush()
+        assert all(f.done() for f in futs)
+    snap = svc.stats_snapshot()
+    assert snap["plan_traces"] == traces0    # acceptance: zero re-traces
+    assert snap["queries_completed"] == 24
+
+
+def test_service_continuous_retires_midflight_and_admits(deep_graph):
+    """Short queries must resolve while a deep query is still in
+    flight, and the freed slots must take queued work."""
+    pg = PT.partition_graph(deep_graph, 4, method="greedy", pad_multiple=16)
+    svc = GraphQueryService(num_shards=4, max_batch=8,
+                            scheduling="continuous", slots=2)
+    svc.add_graph("g", deep_graph, pad_multiple=16)
+    n = deep_graph.num_vertices
+    deep_f = svc.submit(QueryRequest("g", "bfs", {"root": 0}))
+    short_f = svc.submit(QueryRequest("g", "bfs", {"root": n - 1}))
+    queued_f = svc.submit(QueryRequest("g", "bfs", {"root": n - 3}))
+    # pump a few supersteps: the short query retires, the deep one
+    # doesn't, and the queued query takes the freed slot
+    for _ in range(8):
+        svc.poll()
+    assert short_f.done() and not deep_f.done()
+    svc.flush()
+    for root, f in ((0, deep_f), (n - 1, short_f), (n - 3, queued_f)):
+        ref = Engine(ALG.bfs(int(root)), pg, mode="gravfm",
+                     backend="ref").run()
+        assert np.array_equal(f.result().state["parent"],
+                              ref.state["parent"])
+
+
+def test_service_continuous_respects_superstep_cap(deep_graph):
+    svc = GraphQueryService(num_shards=4, max_batch=8,
+                            scheduling="continuous", slots=2,
+                            max_supersteps=3)
+    svc.add_graph("g", deep_graph, pad_multiple=16)
+    f = svc.submit(QueryRequest("g", "bfs", {"root": 0}))
+    svc.flush()
+    assert f.result().supersteps == 3
+
+
+def test_service_continuous_step_failure_fails_futures(graph):
+    """A device/program error mid-pump must resolve every affected
+    Future with the exception (bucketed-batch contract), not strand
+    them or kill the scheduler."""
+    svc = GraphQueryService(num_shards=4, max_batch=8,
+                            scheduling="continuous", slots=2)
+    svc.add_graph("g", graph, pad_multiple=16)
+    splan = svc.plans.get_stepper(svc._plan_key("g", "bfs", "gravfm", 2))
+
+    def boom(carry, alive):
+        raise RuntimeError("injected step failure")
+
+    orig = splan.stepper.step
+    splan.stepper.step = boom
+    try:
+        f1 = svc.submit(QueryRequest("g", "bfs", {"root": 0}))
+        f2 = svc.submit(QueryRequest("g", "bfs", {"root": 1}))
+        svc.poll()
+        with pytest.raises(RuntimeError, match="injected"):
+            f1.result(timeout=0)
+        with pytest.raises(RuntimeError, match="injected"):
+            f2.result(timeout=0)
+        assert svc.pending() == 0
+    finally:
+        splan.stepper.step = orig
+    # the class recovers on the next submit
+    f3 = svc.submit(QueryRequest("g", "bfs", {"root": 2}))
+    svc.flush()
+    assert f3.result() is not None
+
+
+# ---------------------------------------------------------------------------
+# result cache
+# ---------------------------------------------------------------------------
+
+def test_result_cache_hits_skip_execution(graph):
+    svc = GraphQueryService(num_shards=4, max_batch=4)
+    svc.add_graph("g", graph, pad_multiple=16)
+    for r in range(4):
+        svc.submit(QueryRequest("g", "bfs", {"root": r}))
+    snap0 = svc.stats_snapshot()
+    assert snap0["batches_dispatched"] == 1
+    # identical resubmission: resolved from the cache, no dispatch
+    f = svc.submit(QueryRequest("g", "bfs", {"root": 2}))
+    assert f.done()
+    snap = svc.stats_snapshot()
+    assert snap["result_cache_hits"] == 1
+    assert snap["batches_dispatched"] == 1
+    assert svc.pending() == 0
+    # a different root misses
+    f2 = svc.submit(QueryRequest("g", "bfs", {"root": 99}))
+    assert not f2.done()
+    svc.flush()
+    assert svc.stats_snapshot()["result_cache_hits"] == 1
+
+
+def test_result_cache_hits_do_not_alias(graph, pg=None):
+    """A client mutating its result in place must not poison the cache
+    or later hits (store and lookup both copy)."""
+    svc = GraphQueryService(num_shards=4, max_batch=1)
+    svc.add_graph("g", graph, pad_multiple=16)
+    r1 = svc.query("g", "bfs", root=3)
+    clean = r1.state["parent"].copy()
+    r1.state["parent"][:] = -99          # client scribbles on its copy
+    f = svc.submit(QueryRequest("g", "bfs", {"root": 3}))
+    r2 = f.result(timeout=0)
+    assert svc.stats_snapshot()["result_cache_hits"] == 1
+    assert np.array_equal(r2.state["parent"], clean)
+    # and a hit's mutation doesn't leak back either
+    r2.state["parent"][:] = -7
+    r3 = svc.submit(QueryRequest("g", "bfs", {"root": 3})).result(timeout=0)
+    assert np.array_equal(r3.state["parent"], clean)
+
+
+def test_result_cache_lru_bound(graph):
+    svc = GraphQueryService(num_shards=4, max_batch=1,
+                            result_cache_size=2)
+    svc.add_graph("g", graph, pad_multiple=16)
+    for r in (0, 1, 2):     # evicts root 0
+        svc.query("g", "bfs", root=r)
+    assert len(svc._result_cache) == 2
+    b0 = svc.stats_snapshot()["batches_dispatched"]
+    svc.query("g", "bfs", root=0)   # evicted -> re-executed
+    assert svc.stats_snapshot()["result_cache_hits"] == 0
+    assert svc.stats_snapshot()["batches_dispatched"] == b0 + 1
+    svc.query("g", "bfs", root=2)   # still resident -> hit, no dispatch
+    snap = svc.stats_snapshot()
+    assert snap["result_cache_hits"] == 1
+    assert snap["batches_dispatched"] == b0 + 1
+
+
+def test_result_cache_disabled(graph):
+    svc = GraphQueryService(num_shards=4, max_batch=1,
+                            result_cache_size=0)
+    svc.add_graph("g", graph, pad_multiple=16)
+    svc.query("g", "bfs", root=1)
+    svc.query("g", "bfs", root=1)   # re-executed, not served from cache
+    snap = svc.stats_snapshot()
+    assert snap["result_cache_hits"] == 0
+    assert snap["batches_dispatched"] == 2
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_control_sheds_infeasible_deadline(graph):
+    svc = GraphQueryService(num_shards=4, max_batch=4,
+                            scheduling="continuous", slots=4,
+                            admission_control=True)
+    svc.add_graph("g", graph, pad_multiple=16)
+    # cold class: no cost model yet -> everything admitted
+    f = svc.submit(QueryRequest("g", "bfs", {"root": 0},
+                                deadline_ms=0.0001))
+    svc.flush()
+    assert f.result() is not None
+    # now the EWMA exists; an impossible deadline is shed immediately
+    f2 = svc.submit(QueryRequest("g", "bfs", {"root": 1},
+                                 deadline_ms=0.0001))
+    with pytest.raises(AdmissionError):
+        f2.result(timeout=0)
+    snap = svc.stats_snapshot()
+    assert snap["queries_shed"] == 1
+    # and a feasible one still goes through
+    f3 = svc.submit(QueryRequest("g", "bfs", {"root": 1},
+                                 deadline_ms=60_000))
+    svc.flush()
+    assert f3.result() is not None
+    assert svc.stats_snapshot()["queries_shed"] == 1
+
+
+def test_admission_control_bucketed_mode(graph):
+    svc = GraphQueryService(num_shards=4, max_batch=4,
+                            admission_control=True)
+    svc.add_graph("g", graph, pad_multiple=16)
+    # two waves: the first dispatch compiles (excluded from the cost
+    # model by design), the second feeds the superstep EWMA
+    for r in range(8):
+        svc.submit(QueryRequest("g", "bfs", {"root": r}))
+    f = svc.submit(QueryRequest("g", "bfs", {"root": 9},
+                                deadline_ms=0.0001))
+    with pytest.raises(AdmissionError):
+        f.result(timeout=0)
+    assert svc.stats_snapshot()["queries_shed"] == 1
+
+
+def test_admission_control_off_by_default(graph):
+    svc = GraphQueryService(num_shards=4, max_batch=4)
+    svc.add_graph("g", graph, pad_multiple=16)
+    for r in range(4):
+        svc.submit(QueryRequest("g", "bfs", {"root": r}))
+    f = svc.submit(QueryRequest("g", "bfs", {"root": 9},
+                                deadline_ms=0.0001))
+    svc.flush()
+    assert f.result() is not None   # late, but served
+
+
+# ---------------------------------------------------------------------------
+# percentile: linear interpolation + p99
+# ---------------------------------------------------------------------------
+
+def test_percentile_linear_interpolation():
+    assert percentile([], 50) == 0.0
+    assert percentile([7.0], 50) == 7.0
+    # the banker's-rounding bug made p50 of 2 samples return vs[0];
+    # linear interpolation gives the midpoint
+    assert percentile([1.0, 2.0], 50) == pytest.approx(1.5)
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == pytest.approx(2.5)
+    assert percentile([1.0, 2.0, 3.0], 50) == pytest.approx(2.0)
+    vs = list(map(float, range(1, 101)))
+    assert percentile(vs, 0) == 1.0
+    assert percentile(vs, 100) == 100.0
+    assert percentile(vs, 99) == pytest.approx(99.01)
+    assert percentile(vs, 95) == pytest.approx(95.05)
+
+
+def test_snapshot_has_p99():
+    stats = ServiceStats()
+    stats.record_batch(n_queries=1, n_pad=0, wall_s=0.01, messages=10,
+                       supersteps=2, latencies_ms=[1.0, 2.0, 3.0, 100.0])
+    snap = stats.snapshot()
+    assert "latency_p99_ms" in snap
+    assert snap["latency_p50_ms"] == pytest.approx(2.5)
+    assert snap["latency_p99_ms"] <= snap["latency_max_ms"]

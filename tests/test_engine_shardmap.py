@@ -73,6 +73,40 @@ for exch in ("allgather", "ring", "frontier", "unicast"):
                               rr.state["parent"]), (exch, r)
         assert outs[i]["supersteps"] == rr.supersteps, (exch, r)
         assert outs[i]["messages"] == rr.messages, (exch, r)
+
+# continuous stepping through the explicit collectives: a query spliced
+# into the in-flight slot array at superstep t must match a solo run
+# exactly, for every exchange schedule; slot recycling re-traces nothing
+for exch in ("allgather", "ring", "frontier", "unicast"):
+    se = ShardEngine(ALG.bfs(), pg, mesh=mesh, exchange=exch, backend="ref")
+    st = se.make_stepper(4)
+    qkw = {{"root": np.zeros(4, np.int32)}}
+    carry, act, steps = st.init(qkw)
+    occ = np.zeros(4, bool); occ[0] = True        # lane 0: root 0
+    for _ in range(2):
+        carry, act, steps = st.step(carry, occ)
+    qkw["root"][1] = 100                          # joins at superstep 2
+    fresh = np.zeros(4, bool); fresh[1] = True
+    carry, act, steps = st.admit(carry, qkw, fresh)
+    occ[1] = True
+    traces_steady = se.traces
+    for _ in range(1000):
+        occ &= act
+        if not occ.any():
+            break
+        carry, act, steps = st.step(carry, occ)
+    else:
+        raise AssertionError(exch + " did not quiesce")
+    host = st.fetch(carry)
+    for lane, root in ((0, 0), (1, 100)):
+        res = se.lane_result(host, lane)
+        rr = Engine(ALG.bfs(int(root)), pg, mode="gravfm",
+                    backend="ref").run()
+        assert np.array_equal(res["state"]["parent"],
+                              rr.state["parent"]), (exch, lane)
+        assert res["supersteps"] == rr.supersteps, (exch, lane)
+        assert res["messages"] == rr.messages, (exch, lane)
+    assert se.traces == traces_steady, exch      # zero steady-state traces
 print("SHARDMAP-SUBPROCESS-OK")
 """
 
