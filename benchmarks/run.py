@@ -11,6 +11,7 @@ from . import paper_figures as PF
 from . import roofline_table as RT
 from . import service as SVC
 from . import substrate as SUB
+from . import tenancy as TEN
 
 ALL = {
     "fig7": PF.fig7_scaling,
@@ -27,6 +28,7 @@ ALL = {
     "roofline": RT.roofline_table,
     "service": SVC.service_throughput,
     "continuous": CONT.continuous_vs_bucketed,
+    "tenancy": TEN.tenancy,
 }
 
 

@@ -1,0 +1,156 @@
+"""Multi-tenant serving under a device-memory budget.
+
+Two phases over one memory-budgeted service:
+
+  churn   — N tenant graphs round-robin through a budget that fits only
+            K of them. Every return to an evicted tenant *faults*: the
+            store re-materializes the layout and the plan cache
+            re-compiles against it, so the burst pays partition + trace
+            latency. Measures that fault cost directly.
+  steady  — the same service then serves only K tenants. Their graphs
+            stay resident: zero faults, zero re-traces, and per-burst
+            latency drops to pure execution.
+
+Then a **fair-share** phase: two tenants flood one query class at
+weights 2:1; while the slot array is contended, per-tenant completions
+must track the weights (the acceptance bound is ±20%).
+
+``GRAVFM_BENCH_CI=1`` shrinks the workload and exits non-zero unless
+(a) churn evicts and faults, (b) steady state faults and re-traces
+nothing, (c) the weighted throughput ratio lands within 20% of the
+configured 2:1.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.service import GraphQueryService, QueryRequest
+
+from .common import emit
+
+
+def _tenant_graphs(n_tenants: int, n_vertices: int, deg: float):
+    return {f"tenant{i}": G.uniform(n_vertices, deg, seed=10 + i)
+            .symmetrized() for i in range(n_tenants)}
+
+
+def _burst(svc, gid: str, roots, tenant: str) -> float:
+    """Submit one burst for ``tenant`` and drain it; returns wall s."""
+    t0 = time.perf_counter()
+    futs = [svc.submit(QueryRequest(gid, "bfs", {"root": int(r)},
+                                    tenant=tenant, deadline_ms=600_000))
+            for r in roots]
+    svc.flush()
+    for f in futs:
+        f.result()
+    return time.perf_counter() - t0
+
+
+def tenancy():
+    ci = bool(os.environ.get("GRAVFM_BENCH_CI"))
+    n_vertices, deg = (256, 4.0) if ci else (1024, 8.0)
+    n_tenants, keep = (3, 1) if ci else (4, 2)
+    slots = 4 if ci else 8
+    burst_q = 4 if ci else 8
+    rounds = 2 if ci else 3
+
+    graphs = _tenant_graphs(n_tenants, n_vertices, deg)
+    pad = 64
+    per_graph = PT.partition_graph(graphs["tenant0"], 4,
+                                   pad_multiple=pad).device_nbytes
+    budget = (keep + 0.5) * per_graph      # fits `keep` of `n_tenants`
+
+    svc = GraphQueryService(num_shards=4, max_batch=slots, slots=slots,
+                            scheduling="continuous",
+                            memory_budget=budget, result_cache_size=0)
+    for gid, g in graphs.items():
+        svc.add_graph(gid, g, pad_multiple=pad)
+    rng = np.random.default_rng(0)
+
+    # ---- churn: working set (= all tenants) exceeds the budget --------
+    churn_lat = []
+    for _ in range(rounds):
+        for gid in graphs:
+            roots = rng.integers(0, n_vertices, size=burst_q)
+            churn_lat.append(_burst(svc, gid, roots, tenant=gid))
+    churn_snap = svc.stats_snapshot()
+    churn_faults = churn_snap["store_faults"]
+    churn_evictions = churn_snap["store_evictions"]
+    churn_traces = churn_snap["plan_traces"]
+    emit("tenancy_churn_burst", float(np.mean(churn_lat)) * 1e6,
+         f"tenants={n_tenants};budget_fits={keep};"
+         f"faults={churn_faults};evictions={churn_evictions};"
+         f"resident_mb={churn_snap['store_resident_bytes'] / 1e6:.2f}")
+
+    # ---- steady state: working set fits — zero faults, zero re-traces -
+    hot = list(graphs)[:keep]
+    for gid in hot:                        # fault the hot set back in once
+        _burst(svc, gid, rng.integers(0, n_vertices, size=burst_q),
+               tenant=gid)
+    pre = svc.stats_snapshot()
+    steady_lat = []
+    for _ in range(rounds * 2):
+        for gid in hot:
+            roots = rng.integers(0, n_vertices, size=burst_q)
+            steady_lat.append(_burst(svc, gid, roots, tenant=gid))
+    post = svc.stats_snapshot()
+    steady_faults = post["store_faults"] - pre["store_faults"]
+    steady_traces = post["plan_traces"] - pre["plan_traces"]
+    emit("tenancy_steady_burst", float(np.mean(steady_lat)) * 1e6,
+         f"faults={steady_faults};retraces={steady_traces};"
+         f"fault_to_steady_x="
+         f"{np.mean(churn_lat) / max(np.mean(steady_lat), 1e-9):.1f}")
+
+    # ---- weighted fair share: 2:1 under contention --------------------
+    fair = GraphQueryService(num_shards=4, max_batch=slots, slots=slots,
+                             scheduling="continuous", result_cache_size=0)
+    gid = "shared"
+    fair.add_graph(gid, graphs["tenant0"], pad_multiple=pad)
+    fair.set_tenant("heavy", weight=2.0)
+    fair.set_tenant("light", weight=1.0)
+    fair.warm(gid, "bfs")
+    n_each = 6 * slots
+    futs = {"heavy": [], "light": []}
+    for _ in range(n_each):
+        for t in ("heavy", "light"):
+            futs[t].append(fair.submit(QueryRequest(
+                gid, "bfs", {"root": int(rng.integers(0, n_vertices))},
+                tenant=t, deadline_ms=600_000)))
+    done_h = done_l = 0
+    for _ in range(10_000):
+        fair.poll()
+        done_h = sum(f.done() for f in futs["heavy"])
+        done_l = sum(f.done() for f in futs["light"])
+        if done_h + done_l >= n_each:      # still contended at this point
+            break
+    ratio = done_h / max(done_l, 1)
+    fair.flush()
+    for fs in futs.values():
+        for f in fs:
+            f.result()
+    emit("tenancy_fair_share_ratio", 0.0,
+         f"target=2.0;measured={ratio:.2f};"
+         f"heavy={done_h};light={done_l}")
+
+    if ci:
+        errs = []
+        if churn_evictions <= 0 or churn_faults <= 0:
+            errs.append(f"churn did not exercise the budget "
+                        f"(evictions={churn_evictions}, "
+                        f"faults={churn_faults})")
+        if steady_faults != 0:
+            errs.append(f"steady state faulted {steady_faults}x "
+                        "with a resident working set")
+        if steady_traces != 0:
+            errs.append(f"steady state re-traced {steady_traces}x "
+                        "(plan cache regression)")
+        if not (2.0 * 0.8 <= ratio <= 2.0 * 1.25):
+            errs.append(f"fair-share ratio {ratio:.2f} outside 2.0 +/-20% "
+                        f"(heavy={done_h}, light={done_l})")
+        if errs:
+            raise SystemExit("tenancy benchmark failed: " + "; ".join(errs))

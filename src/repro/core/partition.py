@@ -184,6 +184,27 @@ class PartitionedGraph:
         return (self.part_of.astype(np.int64) * self.v_max
                 + self.local_of).astype(np.int32)
 
+    # -- byte-size accounting (the §5 model's m_board consumer) ------------
+    @property
+    def nbytes(self) -> int:
+        """Total bytes across every compiled array (host mirror of what an
+        engine uploads, plus the edge-list kept for stats)."""
+        return int(sum(getattr(self, f.name).nbytes
+                       for f in dataclasses.fields(self)
+                       if isinstance(getattr(self, f.name), np.ndarray)))
+
+    @property
+    def device_nbytes(self) -> int:
+        """Bytes of the per-shard layout arrays an engine turns into
+        device buffers — what a memory-budgeted GraphStore charges a
+        resident graph against ``Platform.m_board``. Excludes the
+        host-only ``src_for_stats``/``dst_for_stats`` accounting copies."""
+        skip = ("src_for_stats", "dst_for_stats")
+        return int(sum(getattr(self, f.name).nbytes
+                       for f in dataclasses.fields(self)
+                       if f.name not in skip
+                       and isinstance(getattr(self, f.name), np.ndarray)))
+
     # -- paper §4.3 accounting: how much the filter + broadcast save -------
     def comm_stats(self) -> Dict[str, float]:
         """Per-superstep worst-case traffic (units: payload words), for the

@@ -12,6 +12,8 @@ slot array with mid-flight retirement and admission of new roots).
     res = svc.query("social", "bfs", root=7)  # one EngineResult
     print(svc.stats_snapshot())               # qps / p95 / TEPS / cache
 """
+from ..store import (GraphLease, GraphStore, StoreError, TenantPolicy,
+                     TenantRegistry, TokenBucket)
 from .batching import (BATCH_BUCKETS, AdmissionError, Batcher, QueryClass,
                        QueryRequest, bucket_for)
 from .continuous import ContinuousScheduler, class_key
@@ -25,4 +27,6 @@ __all__ = [
     "CompiledPlan", "PlanCache", "PlanKey", "StepperPlan",
     "ContinuousScheduler", "class_key",
     "GraphQueryService", "ServiceStats", "percentile",
+    "GraphLease", "GraphStore", "StoreError",
+    "TenantPolicy", "TenantRegistry", "TokenBucket",
 ]

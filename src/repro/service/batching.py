@@ -49,13 +49,16 @@ def bucket_for(n: int, max_batch: int) -> int:
 class QueryRequest:
     """One user query. ``query_kwargs`` maps the kernel's declared
     ``query_params`` (e.g. ``{"root": 7}``) to scalars; ``deadline_ms``
-    is the end-to-end latency budget the scheduler batches under."""
+    is the end-to-end latency budget the scheduler batches under;
+    ``tenant`` selects the quota/fair-share policy the request is
+    admitted and scheduled under."""
 
     graph_id: str
     kernel: str
     query_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
     mode: str = "gravfm"
     deadline_ms: float = 50.0
+    tenant: str = "default"
     qid: int = dataclasses.field(default_factory=lambda: next(_qid_counter))
     arrival_s: float = dataclasses.field(default_factory=time.perf_counter)
 
@@ -67,17 +70,22 @@ class QueryRequest:
 @dataclasses.dataclass(frozen=True)
 class QueryClass:
     """Plan-compatibility key: requests in the same class can share one
-    batched engine invocation."""
+    batched engine invocation. ``version`` is the published graph
+    version the request bound at submit time — arrivals after a
+    ``publish`` land in a fresh class (N+1) while the old class drains
+    on N."""
     graph_id: str
     kernel: str
     mode: str
     num_shards: int
     backend: str
+    version: int = 0
 
     @classmethod
     def of(cls, req: QueryRequest, num_shards: int,
-           backend: str) -> "QueryClass":
-        return cls(req.graph_id, req.kernel, req.mode, num_shards, backend)
+           backend: str, version: int = 0) -> "QueryClass":
+        return cls(req.graph_id, req.kernel, req.mode, num_shards, backend,
+                   version)
 
 
 class Batcher:

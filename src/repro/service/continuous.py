@@ -12,7 +12,7 @@ superstep at a time:
   * after every superstep, slots whose per-query termination mask
     flipped are **retired** — their Futures resolve immediately, at
     their own depth, not the batch maximum;
-  * freed slots are **refilled** from the class queue between
+  * freed slots are **refilled** from the class queues between
     supersteps by re-running ``init_carry`` for just those lanes (a
     lane-masked select — the device never sees a shape change, so
     steady-state recycling re-traces nothing).
@@ -21,6 +21,20 @@ Each lane's computation is the same vmapped program ``run_batch``
 executes, so a query spliced in at in-flight superstep t is
 bit-identical to a solo ``Engine.run`` (asserted in
 tests/test_continuous.py).
+
+Multi-tenancy additions:
+
+  * queues are **per tenant** within a class, and free lanes are handed
+    out by weighted stride scheduling (each admission advances the
+    tenant's virtual pass by ``1/weight``; lowest pass wins, with a
+    soft per-tenant lane cap while others wait) — so a flood of one
+    tenant's deep queries cannot starve another tenant's shallow ones,
+    and per-tenant throughput tracks the configured weights;
+  * each active class holds a :class:`~repro.store.GraphLease` **pin**
+    on its graph version from first submit until the last lane retires,
+    so the memory-budgeted store can never evict a graph mid-query; the
+    pin is released (and the class state dropped) once the class goes
+    idle, making the graph evictable again.
 """
 from __future__ import annotations
 
@@ -39,7 +53,8 @@ __all__ = ["ContinuousScheduler", "class_key"]
 
 def class_key(qclass: QueryClass) -> str:
     """Stable string key for per-class cost-model stats."""
-    return f"{qclass.graph_id}/{qclass.kernel}/{qclass.mode}"
+    return (f"{qclass.graph_id}@v{qclass.version}/"
+            f"{qclass.kernel}/{qclass.mode}")
 
 
 def _lane_dtype(value) -> np.dtype:
@@ -54,18 +69,20 @@ def _lane_dtype(value) -> np.dtype:
 
 
 class _ClassRun:
-    """One query class's slot array + queue."""
+    """One query class's slot array + per-tenant queues + graph pin."""
 
-    def __init__(self, splan: StepperPlan, slots: int, cap: int):
+    def __init__(self, splan: StepperPlan, slots: int, cap: int, lease):
         self.splan = splan
         self.slots = slots
         self.cap = cap
+        self.lease = lease                      # GraphLease or None
         self.carry = None                       # device StepCarry or None
         self.act: Optional[np.ndarray] = None   # (W,) lane-alive probe
         self.steps: Optional[np.ndarray] = None  # (W,) lane supersteps
         self.lanes: List[Optional[Tuple[QueryRequest, Any]]] = \
             [None] * slots
-        self.queue: "collections.deque" = collections.deque()
+        self.queues: "Dict[str, collections.deque]" = {}
+        self.passes: Dict[str, float] = {}      # stride-scheduling state
         self.qkw: Optional[Dict[str, np.ndarray]] = None
 
     @property
@@ -74,6 +91,21 @@ class _ClassRun:
 
     def in_flight(self) -> int:
         return sum(ln is not None for ln in self.lanes)
+
+    def queued(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def lanes_of(self, tenant: str) -> int:
+        return sum(1 for ln in self.lanes
+                   if ln is not None and ln[0].tenant == tenant)
+
+    def idle(self) -> bool:
+        return self.queued() == 0 and self.in_flight() == 0
+
+    def close(self) -> None:
+        if self.lease is not None:
+            self.lease.release()
+            self.lease = None
 
 
 class ContinuousScheduler:
@@ -91,13 +123,17 @@ class ContinuousScheduler:
                  max_supersteps: Optional[int] = None,
                  stats=None,
                  get_stepper: Callable[[QueryClass], StepperPlan] = None,
-                 on_result: Callable[[QueryRequest, Any], None] = None):
+                 on_result: Callable[..., None] = None,
+                 tenant_weight: Callable[[str], float] = None,
+                 acquire: Callable[[QueryClass], Any] = None):
         assert slots >= 1
         self.slots = slots
         self.max_supersteps = max_supersteps
         self.stats = stats
         self._get_stepper = get_stepper
-        self._on_result = on_result or (lambda req, res: None)
+        self._on_result = on_result or (lambda req, res, version=0: None)
+        self._weight = tenant_weight or (lambda tenant: 1.0)
+        self._acquire = acquire or (lambda qclass: None)
         self._classes: Dict[QueryClass, _ClassRun] = {}
         self._lock = threading.RLock()
 
@@ -106,25 +142,46 @@ class ContinuousScheduler:
         with self._lock:
             cr = self._classes.get(qclass)
             if cr is None:
-                splan = self._get_stepper(qclass)
+                # pin the graph version BEFORE compiling against it: the
+                # lease both faults an evicted graph back in and blocks
+                # eviction for as long as this class has work
+                lease = self._acquire(qclass)
+                try:
+                    splan = self._get_stepper(qclass)
+                except Exception:
+                    if lease is not None:
+                        lease.release()
+                    raise
                 from ..core.engine import HARD_SUPERSTEP_CAP
                 cap = (self.max_supersteps
                        or splan.engine.kernel.max_supersteps
                        or HARD_SUPERSTEP_CAP)
-                cr = _ClassRun(splan, self.slots, cap)
+                cr = _ClassRun(splan, self.slots, cap, lease)
                 self._classes[qclass] = cr
-            cr.queue.append((req, fut))
+            q = cr.queues.get(req.tenant)
+            if q is None:
+                q = cr.queues[req.tenant] = collections.deque()
+            if not q:
+                # (re)activating tenant: sync its stride pass to the
+                # current frontier so it neither monopolizes lanes (pass
+                # stuck at 0) nor is penalized for having been idle
+                active = [cr.passes[t] for t, qq in cr.queues.items()
+                          if (qq or cr.lanes_of(t)) and t in cr.passes]
+                floor = min(active) if active else 0.0
+                cr.passes[req.tenant] = max(
+                    cr.passes.get(req.tenant, 0.0), floor)
+            q.append((req, fut))
 
     def backlog(self, qclass: QueryClass) -> int:
         """Queued (not yet admitted) depth for one class."""
         with self._lock:
             cr = self._classes.get(qclass)
-            return len(cr.queue) if cr else 0
+            return cr.queued() if cr else 0
 
     def pending(self) -> int:
         """Queued + in-flight queries across all classes."""
         with self._lock:
-            return sum(len(cr.queue) + cr.in_flight()
+            return sum(cr.queued() + cr.in_flight()
                        for cr in self._classes.values())
 
     def has_work(self) -> bool:
@@ -133,11 +190,14 @@ class ContinuousScheduler:
     # ---------------- the superstep pump ------------------------------
     def pump(self) -> int:
         """One superstep for every class with work; returns the number
-        of queries retired."""
+        of queries retired. Classes that go idle release their graph
+        pin (the store may then evict the graph under budget
+        pressure)."""
         retired = 0
         with self._lock:
             for qclass, cr in list(self._classes.items()):
                 retired += self._pump_class(qclass, cr)
+                self._reap_if_idle(qclass)
         return retired
 
     def drain(self, qclass: Optional[QueryClass] = None,
@@ -153,15 +213,22 @@ class ContinuousScheduler:
                     total += self.pump()
                 else:
                     cr = self._classes.get(qclass)
-                    if cr is None or (not cr.queue
-                                      and cr.in_flight() == 0):
+                    if cr is None or cr.idle():
+                        self._reap_if_idle(qclass)
                         break
                     total += self._pump_class(qclass, cr)
+                    self._reap_if_idle(qclass)
         return total
 
     # ---------------- internals ---------------------------------------
+    def _reap_if_idle(self, qclass: QueryClass) -> None:
+        cr = self._classes.get(qclass)
+        if cr is not None and cr.idle():
+            cr.close()
+            del self._classes[qclass]
+
     def _pump_class(self, qclass: QueryClass, cr: _ClassRun) -> int:
-        if not cr.queue and cr.in_flight() == 0:
+        if cr.idle():
             return 0
         try:
             return self._pump_class_inner(qclass, cr)
@@ -178,10 +245,11 @@ class ContinuousScheduler:
             if ln is not None:
                 ln[1].set_exception(exc)
                 cr.lanes[i] = None
-        while cr.queue:
-            _, fut = cr.queue.popleft()
-            if fut.set_running_or_notify_cancel():
-                fut.set_exception(exc)
+        for q in cr.queues.values():
+            while q:
+                _, fut = q.popleft()
+                if fut.set_running_or_notify_cancel():
+                    fut.set_exception(exc)
         cr.carry = cr.act = cr.steps = None
 
     def _pump_class_inner(self, qclass: QueryClass, cr: _ClassRun) -> int:
@@ -213,21 +281,52 @@ class ContinuousScheduler:
                 self.stats.record_superstep_time(class_key(qclass), wall)
         return retired
 
+    def _next_item(self, cr: _ClassRun):
+        """Weighted fair-share pick: among tenants with queued work, the
+        one with the lowest stride pass wins the free lane — subject to
+        a soft lane cap (its weighted share of the slot array, rounded
+        up) whenever other tenants are also waiting."""
+        while True:
+            nonempty = [t for t, q in cr.queues.items() if q]
+            if not nonempty:
+                return None
+            eligible = nonempty
+            if len(nonempty) > 1:
+                total_w = sum(self._weight(t) for t in nonempty)
+                under_cap = [
+                    t for t in nonempty
+                    if cr.lanes_of(t) < max(1, int(np.ceil(
+                        cr.slots * self._weight(t) / total_w)))]
+                if under_cap:
+                    eligible = under_cap
+            tenant = min(eligible,
+                         key=lambda t: (cr.passes.get(t, 0.0), t))
+            q = cr.queues[tenant]
+            got = None
+            while q:
+                req, fut = q.popleft()
+                if fut.set_running_or_notify_cancel():
+                    got = (req, fut)
+                    break
+            if got is not None:
+                cr.passes[tenant] = (cr.passes.get(tenant, 0.0)
+                                     + 1.0 / self._weight(tenant))
+                return got
+            # tenant's queue was all cancelled stragglers — re-pick
+
     def _admit(self, cr: _ClassRun) -> None:
         """Splice queued queries into free lanes (one admit call for all
         fresh lanes — re-runs init_carry lane-masked)."""
-        if not cr.queue:
+        if cr.queued() == 0:
             return
         fresh = np.zeros(cr.slots, bool)
         for i in range(cr.slots):
             if cr.lanes[i] is not None:
                 continue
-            while cr.queue:
-                req, fut = cr.queue.popleft()
-                if fut.set_running_or_notify_cancel():
-                    break
-            else:
-                break   # queue exhausted (cancelled stragglers dropped)
+            item = self._next_item(cr)
+            if item is None:
+                break   # queues exhausted (cancelled stragglers dropped)
+            req, fut = item
             cr.lanes[i] = (req, fut)
             if cr.qkw is None:
                 # lane arrays keyed by the kernel's DECLARED params
@@ -270,11 +369,14 @@ class ContinuousScheduler:
                 fut.set_exception(exc)
                 continue
             fut.set_result(res)
+            latency_ms = (now - req.arrival_s) * 1e3
             if self.stats is not None:
                 self.stats.record_retire(
-                    messages=res.messages,
-                    latency_ms=(now - req.arrival_s) * 1e3)
+                    messages=res.messages, latency_ms=latency_ms)
                 self.stats.record_query_depth(class_key(qclass),
                                               res.supersteps)
-            self._on_result(req, res)
+                self.stats.record_tenant(
+                    req.tenant, completed=1, messages=res.messages,
+                    latency_ms=latency_ms)
+            self._on_result(req, res, qclass.version)
         return len(done)

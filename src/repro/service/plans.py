@@ -4,15 +4,16 @@ A *plan* is everything needed to answer a class of queries with zero
 per-query setup cost: the partitioned, device-resident graph arrays plus
 the jitted (batched) superstep program for one
 
-    (graph id, kernel, mode, num_shards, batch size, backend)
+    (graph id, version, kernel, mode, num_shards, batch size, backend)
 
 query class. Building a plan is expensive (partitioning is O(E) host
 work, tracing/compiling the superstep loop is seconds); executing one is
 a single dispatch. The cache therefore has three levels, each shared by
 the level below:
 
-  graphs   keyed (graph_id, num_shards, method)     — partition once
-  engines  keyed (graph_id, kernel, mode, shards, backend)
+  graphs   held by the :class:`~repro.store.GraphStore` — versioned,
+           memory-budgeted, LRU-evicted device residency; partition once
+  engines  keyed (graph_id, version, kernel, mode, shards, backend)
                                                     — device arrays once
   plans    keyed PlanKey (adds batch_size)          — traced program once
   steppers keyed PlanKey (batch_size = slot width)  — the step-granular
@@ -21,10 +22,18 @@ the level below:
 Steady-state serving hits the plan/stepper level only; the
 ``plan_traces`` counter (fed by the engines' trace-time side effect)
 proves repeated submissions of the same class re-trace nothing.
+
+``PlanKey.version`` identifies which published version of the graph the
+plan was compiled against (0 = resolve the store's latest at lookup
+time). When the store evicts a version — budget pressure or a drained
+superseded version after a ``publish`` — it fires the cache's
+invalidation hook and exactly that version's engines/plans/steppers are
+dropped; every other tenant's (and version's) entries stay hot.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
@@ -32,8 +41,9 @@ import numpy as np
 from ..core.algorithms import ALGORITHMS
 from ..core.engine import Engine, EngineResult
 from ..core.graph import Graph
-from ..core.partition import PartitionedGraph, partition_graph
+from ..core.partition import PartitionedGraph
 from ..core.stepper import LaneStepper
+from ..store import GraphStore
 from .stats import ServiceStats
 
 __all__ = ["PlanKey", "CompiledPlan", "PlanCache", "StepperPlan"]
@@ -48,6 +58,7 @@ class PlanKey:
     num_shards: int
     batch_size: int      # leading query axis (1 = unbatched program)
     backend: str = "ref"
+    version: int = 0     # published graph version (0 = latest at lookup)
 
 
 class CompiledPlan:
@@ -112,16 +123,29 @@ class StepperPlan:
 
 
 class PlanCache:
-    """Multi-level cache: partitioned graphs, device-resident engines,
-    compiled plans, lane steppers. Thread-compatible (callers serialize
-    dispatch; the server holds its scheduler lock across get_plan +
-    execute)."""
+    """Multi-level cache: partitioned graphs (via the GraphStore),
+    device-resident engines, compiled plans, lane steppers.
+    Thread-compatible (callers serialize dispatch; the server holds its
+    scheduler lock across get_plan + execute). Store evictions
+    invalidate synchronously — the affected version is pinned by any
+    query still using it, so eviction never races a live dispatch."""
 
-    def __init__(self, stats: Optional[ServiceStats] = None):
+    def __init__(self, stats: Optional[ServiceStats] = None,
+                 store: Optional[GraphStore] = None):
         self.stats = stats or ServiceStats()
-        self._graphs: Dict[Tuple[str, int, str], PartitionedGraph] = {}
-        self._graph_meta: Dict[str, Graph] = {}
-        self._engines: Dict[Tuple[str, str, str, int, str], Engine] = {}
+        self.store = store or GraphStore()
+        self.store.add_evict_listener(self.invalidate_graph)
+        # traces of engines already dropped by eviction (keeps the
+        # monotonic plan_traces counter exact across invalidations)
+        self._trace_floor = 0
+        # serializes trace folding + invalidation: evictions can fire
+        # from any thread that releases a lease (e.g. the scheduler
+        # thread reaping an idle class) while another thread dispatches;
+        # ordering is store lock -> this lock -> stats lock, never the
+        # reverse, so it cannot deadlock with either
+        self._sync_lock = threading.Lock()
+        self._engines: Dict[Tuple[str, int, str, str, int, str],
+                            Engine] = {}
         self._plans: Dict[PlanKey, CompiledPlan] = {}
         self._steppers: Dict[PlanKey, StepperPlan] = {}
 
@@ -129,34 +153,51 @@ class PlanCache:
     def register_graph(self, graph_id: str, graph: Graph, *,
                        num_shards: int = 4, method: str = "greedy",
                        pad_multiple: int = 256) -> PartitionedGraph:
-        """Partition ``graph`` once and pin the layout for reuse by every
-        plan over it. Re-registering the same (id, shards) is a no-op."""
-        gk = (graph_id, num_shards, method)
-        if gk not in self._graphs:
-            self._graphs[gk] = partition_graph(
-                graph, num_shards, method=method, pad_multiple=pad_multiple)
-            self._graph_meta[graph_id] = graph
-        return self._graphs[gk]
+        """Publish ``graph`` to the store and pin its layout for reuse by
+        every plan over it. Re-registering identical content is a no-op;
+        different content is a version publish (or :class:`StoreError`
+        when the store has versioning disabled)."""
+        ver = self.store.publish(graph_id, graph, num_shards=num_shards,
+                                 method=method, pad_multiple=pad_multiple)
+        with self.store.acquire(graph_id, ver) as lease:
+            return lease.pg
 
     def graph(self, graph_id: str, num_shards: int,
-              method: str = "greedy") -> PartitionedGraph:
-        gk = (graph_id, num_shards, method)
-        if gk not in self._graphs:
+              method: str = "greedy",
+              version: Optional[int] = None) -> PartitionedGraph:
+        try:
+            spec = self.store.partition_spec(graph_id, version)
+        except KeyError:
             raise KeyError(
                 f"graph {graph_id!r} not registered for {num_shards} "
                 f"shards (method={method!r}); call register_graph first")
-        return self._graphs[gk]
+        if (spec["num_shards"], spec["method"]) != (num_shards, method):
+            raise KeyError(
+                f"graph {graph_id!r} not registered for {num_shards} "
+                f"shards (method={method!r}); its published spec is "
+                f"{spec['num_shards']} shards (method={spec['method']!r})")
+        with self.store.acquire(graph_id, version) as lease:
+            return lease.pg
 
     # ---------------- engines / plans ---------------------------------
+    def resolve_key(self, key: PlanKey) -> PlanKey:
+        """Pin ``version=0`` ("latest") to the store's current version so
+        cache entries are always keyed by a concrete published version."""
+        if key.version:
+            return key
+        return dataclasses.replace(
+            key, version=self.store.known_version(key.graph_id))
+
     def _engine_for(self, key: PlanKey, method: str) -> Engine:
-        ek = (key.graph_id, key.kernel, key.mode, key.num_shards,
-              key.backend)
+        ek = (key.graph_id, key.version, key.kernel, key.mode,
+              key.num_shards, key.backend)
         eng = self._engines.get(ek)
         if eng is None:
             if key.kernel not in ALGORITHMS:
                 raise KeyError(f"unknown kernel {key.kernel!r}; have "
                                f"{sorted(ALGORITHMS)}")
-            pg = self.graph(key.graph_id, key.num_shards, method)
+            pg = self.graph(key.graph_id, key.num_shards, method,
+                            version=key.version or None)
             eng = Engine(ALGORITHMS[key.kernel](), pg, mode=key.mode,
                          backend=key.backend)
             self._engines[ek] = eng
@@ -165,6 +206,7 @@ class PlanCache:
     def get_plan(self, key: PlanKey, *, method: str = "greedy",
                  warm: bool = False) -> CompiledPlan:
         """Fetch (hit) or build (miss) the plan for ``key``."""
+        key = self.resolve_key(key)
         plan = self._plans.get(key)
         hit = plan is not None
         self.stats.record_cache(hit)
@@ -187,6 +229,7 @@ class PlanCache:
         Shares the graph/engine tiers with :meth:`get_plan`, so a class
         served both bucketed and continuously partitions and uploads
         once."""
+        key = self.resolve_key(key)
         splan = self._steppers.get(key)
         hit = splan is not None
         self.stats.record_cache(hit)
@@ -201,11 +244,38 @@ class PlanCache:
             self._steppers[key] = splan
         return splan
 
+    def invalidate_graph(self, graph_id: str, version: int) -> None:
+        """Drop every engine/plan/stepper compiled against one evicted
+        (graph_id, version) — other versions and tenants stay cached.
+        Trace counts of dropped engines are folded into the stats first
+        so ``plan_traces`` stays monotonic."""
+        with self._sync_lock:
+            self._sync_traces_locked()
+            for ek in [k for k in list(self._engines)
+                       if k[0] == graph_id and k[1] == version]:
+                eng = self._engines.pop(ek, None)
+                if eng is not None:
+                    self._trace_floor += eng.traces
+        for pk in [k for k in list(self._plans)
+                   if k.graph_id == graph_id and k.version == version]:
+            self._plans.pop(pk, None)
+        for sk in [k for k in list(self._steppers)
+                   if k.graph_id == graph_id and k.version == version]:
+            self._steppers.pop(sk, None)
+
     def sync_trace_counters(self) -> int:
         """Fold every engine's trace count into the shared stats; returns
         the current total. Call after dispatches to keep the stats
-        endpoint's ``plan_traces`` exact."""
-        total = sum(e.traces for e in self._engines.values())
+        endpoint's ``plan_traces`` exact. (``_trace_floor`` carries the
+        traces of engines already dropped by eviction.)"""
+        with self._sync_lock:
+            return self._sync_traces_locked()
+
+    def _sync_traces_locked(self) -> int:
+        # list() snapshots the dict atomically, so a concurrent get_plan
+        # inserting an engine cannot break the iteration
+        total = self._trace_floor + sum(
+            e.traces for e in list(self._engines.values()))
         delta = total - self.stats.plan_traces
         if delta:
             self.stats.record_traces(delta)
@@ -214,9 +284,13 @@ class PlanCache:
     # ---------------- introspection -----------------------------------
     def describe(self) -> Dict[str, Any]:
         return {
-            "graphs": sorted(f"{g}/{p}shards/{m}" for g, p, m in self._graphs),
+            "graphs": sorted(
+                f"{e['graph_id']}@v{e['version']}"
+                + ("" if e["resident"] else " (evicted)")
+                for e in self.store.describe()),
             "engines": len(self._engines),
             "plans": [dataclasses.asdict(k) for k in self._plans],
             "steppers": [dataclasses.asdict(k) for k in self._steppers],
             "plan_traces": self.sync_trace_counters(),
+            "store": self.store.snapshot(),
         }

@@ -29,10 +29,19 @@ Two operating modes as well:
       request's deadline budget.
 
 On top of both sit a bounded-LRU **result cache** (identical
-(graph, kernel, mode, query kwargs) hits resolve without touching the
-scheduler) and optional **admission control** (requests whose deadline
-is already infeasible given the backlog and the class's observed
-per-superstep cost fail fast with :class:`AdmissionError`).
+(graph, version, kernel, mode, query kwargs) hits resolve without
+touching the scheduler) and optional **admission control** (requests
+whose deadline is already infeasible given the backlog and the class's
+observed per-superstep cost fail fast with :class:`AdmissionError`).
+
+Multi-tenant serving (PR 3) adds the :class:`~repro.store.GraphStore`
+underneath: graphs are **versioned** (``publish`` swaps in version N+1
+atomically — in-flight queries drain on N, new arrivals bind N+1) and
+**memory-budgeted** (LRU eviction of unpinned graphs when
+``memory_budget`` — or ``platform.m_board`` — is exceeded, transparent
+refault on next query). Per-tenant **quotas** (token-bucket admission)
+and **fair-share weights** (weighted slots in the continuous scheduler)
+are configured with :meth:`set_tenant`.
 
 The paper's engine answers one traversal per elaborated design; this
 server is the ROADMAP's "heavy traffic" counterpart — many BFS/SSSP
@@ -54,6 +63,7 @@ import numpy as np
 from ..core.algorithms import ALGORITHMS
 from ..core.engine import EngineResult
 from ..core.graph import Graph
+from ..store import GraphStore, TenantRegistry
 from .batching import (BATCH_BUCKETS, AdmissionError, Batcher, QueryClass,
                        QueryRequest, bucket_for)
 from .continuous import ContinuousScheduler, class_key
@@ -74,6 +84,11 @@ class GraphQueryService:
                  max_supersteps: Optional[int] = None,
                  result_cache_size: int = 256,
                  admission_control: bool = False,
+                 memory_budget: Optional[float] = None,
+                 platform=None,
+                 versioned: bool = True,
+                 store: Optional[GraphStore] = None,
+                 tenants: Optional[TenantRegistry] = None,
                  plan_cache: Optional[PlanCache] = None,
                  stats: Optional[ServiceStats] = None):
         assert scheduling in ("bucketed", "continuous")
@@ -87,10 +102,27 @@ class GraphQueryService:
         self.admission_control = admission_control
         self.stats = stats or (plan_cache.stats if plan_cache
                                else ServiceStats())
-        self.plans = plan_cache or PlanCache(stats=self.stats)
+        if plan_cache is not None:
+            # the cache brings its own store; silently dropping these
+            # would leave an operator believing residency is capped
+            if (store is not None or memory_budget is not None
+                    or platform is not None or not versioned):
+                raise ValueError(
+                    "plan_cache and store/memory_budget/platform/"
+                    "versioned are mutually exclusive — configure the "
+                    "GraphStore the PlanCache was built with instead")
+            self.plans = plan_cache
+        else:
+            store = store or GraphStore(
+                budget_bytes=memory_budget, platform=platform,
+                versioned=versioned, num_shards=num_shards,
+                method=partition_method)
+            self.plans = PlanCache(stats=self.stats, store=store)
         # One shared counter object, or the cache-level hits/misses/traces
         # split off from the endpoint and under-report.
         self.plans.stats = self.stats
+        self.store: GraphStore = self.plans.store
+        self.tenants = tenants or TenantRegistry()
         self._batcher = Batcher(max_batch=max_batch, slack_ms=slack_ms)
         self._slots = slots or max_batch
         self._continuous: Optional[ContinuousScheduler] = None
@@ -98,13 +130,19 @@ class GraphQueryService:
             self._continuous = ContinuousScheduler(
                 slots=self._slots, max_supersteps=max_supersteps,
                 stats=self.stats, get_stepper=self._stepper_for,
-                on_result=self._store_result)
+                on_result=self._store_result,
+                tenant_weight=self.tenants.weight,
+                acquire=self._acquire_class)
         self._result_cache: "collections.OrderedDict[Any, EngineResult]" \
             = collections.OrderedDict()
         # Leaf lock: _store_result is called from the scheduler thread
         # while it holds the continuous scheduler's lock, so the cache
         # must never share the service lock (ABBA deadlock with submit).
         self._rc_lock = threading.Lock()
+        # superseded versions' cached results can never match a lookup
+        # again (new arrivals bind the new version) — purge them instead
+        # of letting dead entries squeeze live ones out of the LRU
+        self.store.add_evict_listener(self._purge_stale_results)
         self._lock = threading.RLock()
         self._wake = threading.Condition(self._lock)
         # Serializes plan lookup + execution: PlanCache is not internally
@@ -117,10 +155,30 @@ class GraphQueryService:
     # ---------------- admission ---------------------------------------
     def add_graph(self, graph_id: str, graph: Graph,
                   **kwargs) -> "GraphQueryService":
-        """Register + partition a graph for serving (idempotent)."""
+        """Register + partition a graph for serving. Idempotent for
+        identical content; different content under an existing id is a
+        **version publish** (new arrivals bind the new version while
+        in-flight queries drain on the old one) — or, when the store was
+        built with ``versioned=False``, a
+        :class:`~repro.store.StoreError`."""
+        self.publish(graph_id, graph, **kwargs)
+        return self
+
+    def publish(self, graph_id: str, graph: Graph, **kwargs) -> int:
+        """Publish the next version of ``graph_id``; returns the version
+        number now served to new arrivals."""
         kwargs.setdefault("num_shards", self.num_shards)
         kwargs.setdefault("method", self.partition_method)
-        self.plans.register_graph(graph_id, graph, **kwargs)
+        return self.store.publish(graph_id, graph, **kwargs)
+
+    def set_tenant(self, name: str, *, weight: float = 1.0,
+                   rate_qps: Optional[float] = None,
+                   burst: Optional[float] = None) -> "GraphQueryService":
+        """Configure one tenant's fair-share ``weight`` and optional
+        token-bucket quota (``rate_qps`` sustained, ``burst`` headroom).
+        Unconfigured tenants serve at weight 1.0, unlimited."""
+        self.tenants.configure(name, weight=weight, rate_qps=rate_qps,
+                               burst=burst)
         return self
 
     def warm(self, graph_id: str, kernel: str, *, mode: str = "gravfm",
@@ -130,13 +188,15 @@ class GraphQueryService:
         Defaults to EVERY bucket up to max_batch — deadline flushes
         dispatch partial batches, so intermediate buckets are hot paths
         too."""
+        version = self.store.known_version(graph_id)
         kern = ALGORITHMS[kernel]() if kernel in ALGORITHMS else None
         if (self._continuous is not None and kern is not None
                 and kern.query_params):
             # continuous serving compiles exactly one slot-width stepper
             # per class; pre-trace its init/admit/step/probe programs
             splan = self._stepper_for(QueryClass(
-                graph_id, kernel, mode, self.num_shards, self.backend))
+                graph_id, kernel, mode, self.num_shards, self.backend,
+                version))
             qkw = {p: np.zeros((self._slots,), np.int32)
                    for p in splan.query_params}
             carry, _, _ = splan.stepper.init(qkw)
@@ -152,12 +212,20 @@ class GraphQueryService:
         else:
             sizes = batch_sizes
         for b in sizes:
-            self.plans.get_plan(self._plan_key(graph_id, kernel, mode, b),
-                                method=self.partition_method, warm=True)
+            self.plans.get_plan(
+                self._plan_key(graph_id, kernel, mode, b, version),
+                method=self.partition_method, warm=True)
         self.plans.sync_trace_counters()
 
     def submit(self, req: QueryRequest) -> "Future[EngineResult]":
         """Queue one query; the Future resolves to its EngineResult."""
+        return self._submit(req)[0]
+
+    def _submit(self, req: QueryRequest):
+        """submit() plus the QueryClass the request actually bound —
+        callers that later flush/drain this specific request must use
+        the returned class, not re-resolve the version (a concurrent
+        publish would point them at a class the request isn't in)."""
         kernel = ALGORITHMS.get(req.kernel)
         if kernel is None:
             raise KeyError(f"unknown kernel {req.kernel!r}")
@@ -173,48 +241,102 @@ class GraphQueryService:
                 f"{sorted(got) or 'none'}"
                 + (f" (missing {sorted(want - got)})" if want - got else ""))
         fut: "Future[EngineResult]" = Future()
-        qclass = QueryClass.of(req, self.num_shards, self.backend)
+        # New arrivals bind the latest published version; anything
+        # already queued/in flight keeps draining on its bound version.
+        version = self.store.known_version(req.graph_id)
+        qclass = QueryClass.of(req, self.num_shards, self.backend, version)
         batchable = (bool(kernel.query_params) and self.max_batch > 1)
         self.stats.record_submit()
+        self.stats.record_tenant(req.tenant, submitted=1)
         # Result cache: an identical completed query resolves right here,
-        # without touching either scheduler.
-        cached = self._lookup_result(req)
+        # without touching either scheduler (and without charging the
+        # tenant's token bucket — a hit consumes no engine resources).
+        cached = self._lookup_result(req, version)
         if cached is not None:
             if fut.set_running_or_notify_cancel():
                 fut.set_result(cached)
-            self.stats.record_result_hit(
-                (time.perf_counter() - req.arrival_s) * 1e3)
-            return fut
+            latency_ms = (time.perf_counter() - req.arrival_s) * 1e3
+            self.stats.record_result_hit(latency_ms)
+            self.stats.record_tenant(req.tenant, completed=1,
+                                     latency_ms=latency_ms)
+            return fut, qclass
+        # Per-tenant quota: shed when the tenant's token bucket is dry.
+        if not self.tenants.admit(req.tenant):
+            self.stats.record_shed()
+            self.stats.record_tenant(req.tenant, shed=1)
+            fut.set_exception(AdmissionError(
+                f"tenant {req.tenant!r} exceeded its rate quota "
+                f"({self.tenants.policy(req.tenant).rate_qps} qps)"))
+            return fut, qclass
         # Admission control: shed what cannot meet its deadline anyway.
         if self._should_shed(req, qclass):
             self.stats.record_shed()
+            self.stats.record_tenant(req.tenant, shed=1)
             fut.set_exception(AdmissionError(
                 f"deadline {req.deadline_ms:.1f}ms infeasible for "
                 f"{class_key(qclass)} given current backlog"))
-            return fut
-        if self._continuous is not None and batchable:
-            # enqueue OUTSIDE the service lock: the scheduler thread
-            # takes the scheduler lock first (pump), so nesting it
-            # under self._wake here would invert the lock order
-            self._continuous.submit(qclass, req, fut)
+            return fut, qclass
+        # The request now holds its OWN pin from enqueue to resolution
+        # (the done-callback): without it a queued-but-undispatched
+        # bucketed request leaves its version unpinned, and a publish()
+        # in that window would retire the version out from under the
+        # batch it is waiting in. Acquired only HERE — after the
+        # cache-hit/quota/deadline-shed early exits — so requests that
+        # never reach the engine cannot fault evicted graphs back in or
+        # budget-sweep other tenants' residents.
+        lease = None
+        if version:
+            lease = self.store.acquire(req.graph_id)
+            if lease.version != version:    # publish raced the checks
+                version = lease.version
+                qclass = QueryClass.of(req, self.num_shards, self.backend,
+                                       version)
+            fut.add_done_callback(lambda _f: lease.release())
+        try:
+            if self._continuous is not None and batchable:
+                # enqueue OUTSIDE the service lock: the scheduler thread
+                # takes the scheduler lock first (pump), so nesting it
+                # under self._wake here would invert the lock order
+                self._continuous.submit(qclass, req, fut)
+                with self._wake:
+                    self._wake.notify()
+                return fut, qclass
             with self._wake:
+                ready = self._batcher.add(qclass, (req, fut), batchable)
                 self._wake.notify()
-            return fut
-        with self._wake:
-            ready = self._batcher.add(qclass, (req, fut), batchable)
-            self._wake.notify()
-        if ready is not None:
-            self._dispatch(*ready)
-        return fut
+            if ready is not None:
+                self._dispatch(*ready)
+            return fut, qclass
+        except BaseException:
+            # the Future will never resolve, so its done-callback will
+            # never fire — release the pin here or it leaks forever
+            if lease is not None:
+                lease.release()
+            raise
 
     # ---------------- result cache / admission control ----------------
-    def _result_key(self, req: QueryRequest):
+    def _purge_stale_results(self, graph_id: str, version: int) -> None:
+        """Store-evict listener (fires under the store lock). A budget
+        eviction keeps the version valid — refault is bit-identical, so
+        its cached results stay. Only a SUPERSEDED version's entries are
+        dead weight."""
+        known = self.store.known_version(graph_id)
+        if known and version >= known:
+            return      # budget eviction of the live version: still valid
+        with self._rc_lock:
+            for k in [k for k in self._result_cache
+                      if k[0] == graph_id and k[1] == version]:
+                del self._result_cache[k]
+
+    def _result_key(self, req: QueryRequest, version: int):
         try:
             kw = tuple(sorted((k, np.asarray(v).item())
                               for k, v in req.query_kwargs.items()))
         except (TypeError, ValueError):
             return None    # non-scalar / unhashable kwargs: don't cache
-        return (req.graph_id, req.kernel, req.mode, kw)
+        # version in the key: results computed on graph version N must
+        # never answer queries bound to N+1
+        return (req.graph_id, version, req.kernel, req.mode, kw)
 
     @staticmethod
     def _copy_result(res: EngineResult) -> EngineResult:
@@ -229,10 +351,11 @@ class GraphQueryService:
             raw_state=jax.tree.map(np.array, res.raw_state),
         )
 
-    def _lookup_result(self, req: QueryRequest) -> Optional[EngineResult]:
+    def _lookup_result(self, req: QueryRequest,
+                       version: int) -> Optional[EngineResult]:
         if self.result_cache_size <= 0:
             return None
-        key = self._result_key(req)
+        key = self._result_key(req, version)
         if key is None:
             return None
         with self._rc_lock:
@@ -241,10 +364,11 @@ class GraphQueryService:
                 self._result_cache.move_to_end(key)
         return self._copy_result(res) if res is not None else None
 
-    def _store_result(self, req: QueryRequest, res: EngineResult) -> None:
+    def _store_result(self, req: QueryRequest, res: EngineResult,
+                      version: int = 0) -> None:
         if self.result_cache_size <= 0:
             return
-        key = self._result_key(req)
+        key = self._result_key(req, version)
         if key is None:
             return
         res = self._copy_result(res)
@@ -275,32 +399,45 @@ class GraphQueryService:
         est_ms = step_ms * depth * waves
         return time.perf_counter() + est_ms / 1e3 > req.deadline_s
 
+    def _acquire_class(self, qclass: QueryClass):
+        """Pin ``qclass``'s graph version for the continuous scheduler —
+        held from the class's first submit until its last lane retires.
+        Unregistered graphs (version 0) carry no pin; the plan lookup
+        raises for them instead."""
+        if not qclass.version:
+            return None
+        return self.store.acquire(qclass.graph_id, qclass.version)
+
     def _stepper_for(self, qclass: QueryClass):
         with self._dispatch_lock:
             return self.plans.get_stepper(
                 self._plan_key(qclass.graph_id, qclass.kernel, qclass.mode,
-                               self._slots),
+                               self._slots, qclass.version),
                 method=self.partition_method)
 
     def query(self, graph_id: str, kernel: str, *, mode: str = "gravfm",
-              deadline_ms: float = 50.0, **query_kwargs) -> EngineResult:
+              deadline_ms: float = 50.0, tenant: str = "default",
+              **query_kwargs) -> EngineResult:
         """Synchronous convenience: submit one query and wait (flushing
         immediately, so latency = execution time)."""
         req = QueryRequest(
             graph_id=graph_id, kernel=kernel, query_kwargs=query_kwargs,
-            mode=mode, deadline_ms=deadline_ms)
-        fut = self.submit(req)
+            mode=mode, deadline_ms=deadline_ms, tenant=tenant)
         # flush only this query's class — other clients' half-filled
-        # batches keep accumulating toward their own deadlines
-        self.flush(QueryClass.of(req, self.num_shards, self.backend))
+        # batches keep accumulating toward their own deadlines. The
+        # class comes from _submit, not a fresh version lookup: a
+        # publish racing this call must not point the flush at a class
+        # the request isn't queued in.
+        fut, qclass = self._submit(req)
+        self.flush(qclass)
         return fut.result()
 
     # ---------------- dispatch ----------------------------------------
     def _plan_key(self, graph_id: str, kernel: str, mode: str,
-                  batch_size: int) -> PlanKey:
+                  batch_size: int, version: int = 0) -> PlanKey:
         return PlanKey(graph_id=graph_id, kernel=kernel, mode=mode,
                        num_shards=self.num_shards, batch_size=batch_size,
-                       backend=self.backend)
+                       backend=self.backend, version=version)
 
     def _dispatch(self, qclass: QueryClass, items: List[Any]) -> None:
         """Execute one formed batch: pad to the plan bucket, run, resolve
@@ -321,10 +458,17 @@ class GraphQueryService:
     def _dispatch_locked(self, qclass: QueryClass, reqs, futs, n: int,
                          t0: float) -> None:
         traces_before = self.plans.sync_trace_counters()
+        lease = None
         try:
+            if qclass.version:
+                # pin the graph version for the whole batch: the store
+                # may not evict it mid-execution (faults it back in
+                # first if it was evicted since registration)
+                lease = self.store.acquire(qclass.graph_id, qclass.version)
             plan = self.plans.get_plan(
                 self._plan_key(qclass.graph_id, qclass.kernel, qclass.mode,
-                               bucket_for(n, self.max_batch)),
+                               bucket_for(n, self.max_batch),
+                               qclass.version),
                 method=self.partition_method)
             bucket = plan.key.batch_size
             cap = self.max_supersteps
@@ -344,6 +488,9 @@ class GraphQueryService:
             for f in futs:
                 f.set_exception(exc)
             return
+        finally:
+            if lease is not None:
+                lease.release()
         now = time.perf_counter()
         wall = now - t0
         for f, res in zip(futs, results):
@@ -365,7 +512,10 @@ class GraphQueryService:
             self.stats.record_superstep_time(ck, wall, n_steps=batch_depth)
         for r, res in zip(reqs, results):
             self.stats.record_query_depth(ck, res.supersteps)
-            self._store_result(r, res)
+            self.stats.record_tenant(
+                r.tenant, completed=1, messages=res.messages,
+                latency_ms=(now - r.arrival_s) * 1e3)
+            self._store_result(r, res, qclass.version)
 
     # ---------------- scheduling --------------------------------------
     def poll(self, now_s: Optional[float] = None) -> int:
@@ -447,10 +597,15 @@ class GraphQueryService:
             self.poll()
 
     # ---------------- stats endpoint ----------------------------------
-    def stats_snapshot(self) -> Dict[str, float]:
+    def stats_snapshot(self) -> Dict[str, Any]:
         """The service's /stats payload: throughput (qps, TEPS), latency
-        percentiles, batch occupancy, and plan-cache counters."""
-        snap = self.stats.snapshot()
+        percentiles, batch occupancy, plan-cache counters, graph-store
+        residency (resident_bytes / evictions / faults), and the
+        per-tenant breakdown."""
+        snap: Dict[str, Any] = dict(self.stats.snapshot())
         snap["pending"] = self.pending()
         snap["scheduling"] = self.scheduling
+        for k, v in self.store.snapshot().items():
+            snap[f"store_{k}"] = v
+        snap["tenants"] = self.stats.tenant_snapshot()
         return snap

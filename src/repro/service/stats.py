@@ -13,7 +13,7 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 __all__ = ["ServiceStats", "percentile"]
 
@@ -62,6 +62,10 @@ class ServiceStats:
         self._lock = threading.Lock()
         self._latencies_ms = collections.deque(maxlen=self.latency_window)
         self._started_at = time.perf_counter()
+        # per-tenant breakdown (submitted/completed/shed/messages and a
+        # bounded latency window) for the multi-tenant stats endpoint
+        self._tenants: Dict[str, Dict[str, float]] = {}
+        self._tenant_lat: Dict[str, collections.deque] = {}
         # per query-class key: EWMA of one superstep's wall time (ms) and
         # of supersteps-per-query — the service's cost model for deciding
         # whether a deadline is still feasible given the backlog.
@@ -106,6 +110,38 @@ class ServiceStats:
     def record_shed(self, n: int = 1) -> None:
         with self._lock:
             self.queries_shed += n
+
+    # ---- per-tenant breakdown -----------------------------------------
+    def _tenant(self, tenant: str) -> Dict[str, float]:
+        t = self._tenants.get(tenant)
+        if t is None:
+            t = self._tenants[tenant] = {
+                "submitted": 0, "completed": 0, "shed": 0, "messages": 0}
+            self._tenant_lat[tenant] = collections.deque(maxlen=512)
+        return t
+
+    def record_tenant(self, tenant: str, *, submitted: int = 0,
+                      completed: int = 0, shed: int = 0, messages: int = 0,
+                      latency_ms: Optional[float] = None) -> None:
+        """Fold one event into ``tenant``'s breakdown (the service calls
+        this alongside the aggregate counters)."""
+        with self._lock:
+            t = self._tenant(tenant)
+            t["submitted"] += submitted
+            t["completed"] += completed
+            t["shed"] += shed
+            t["messages"] += messages
+            if latency_ms is not None:
+                self._tenant_lat[tenant].append(latency_ms)
+
+    def tenant_snapshot(self) -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            return {name: {**vals,
+                           "latency_p50_ms": percentile(
+                               list(self._tenant_lat[name]), 50),
+                           "latency_p95_ms": percentile(
+                               list(self._tenant_lat[name]), 95)}
+                    for name, vals in self._tenants.items()}
 
     # ---- per-class cost model (admission control / continuous) --------
     def _ewma(self, table: Dict[str, float], key: str, x: float) -> None:

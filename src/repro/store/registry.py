@@ -1,0 +1,418 @@
+"""Multi-tenant GraphStore: a named, versioned, ref-counted registry of
+device-resident partitioned graphs under an explicit memory budget.
+
+The paper's §5 model treats per-board memory (``Platform.m_board``) as a
+first-class constraint on which graphs a node can host; the serving
+stack previously ignored it — every registered graph stayed
+device-resident forever. This module manages graph residency the way
+GraphScale manages on-accelerator graph storage and Swift decouples
+residency from query execution:
+
+  * ``publish(graph_id, graph)`` registers version N+1 of a tenant's
+    graph. The host-side :class:`~repro.core.graph.Graph` and the
+    partition spec (including the computed ``part_of`` assignment) are
+    kept forever — they are cheap; the compiled
+    :class:`~repro.core.partition.PartitionedGraph` layout is the
+    expensive, budgeted resource.
+  * ``acquire(graph_id)`` pins the latest (or an explicit) version and
+    returns a :class:`GraphLease`. Acquiring an **evicted** version
+    transparently re-materializes it (a *fault*) from the retained
+    partition assignment — bit-identical to the original layout.
+  * When ``resident_bytes`` exceeds ``budget_bytes`` the store evicts
+    least-recently-used **unpinned** layouts; pinned layouts (queries in
+    flight) are never evicted, so a burst larger than the budget
+    overcommits rather than corrupts.
+  * Superseded versions are evicted eagerly the moment their last pin
+    drops — in-flight queries drain on version N while new arrivals
+    bind N+1, and N's device arrays (and, via ``on_evict`` listeners,
+    its cached compiled plans) vanish as soon as the drain completes,
+    without touching any other tenant's cache entries.
+
+``evictions`` / ``faults`` / ``resident_bytes`` are surfaced in
+:meth:`GraphStore.snapshot` and folded into the service's stats
+endpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.graph import Graph
+from ..core.partition import PartitionedGraph, partition_graph
+
+__all__ = ["GraphStore", "GraphLease", "StoreError"]
+
+
+class StoreError(RuntimeError):
+    """Raised on invalid store operations (re-publishing with versioning
+    disabled, acquiring an unknown graph/version, ...)."""
+
+
+def _graphs_equal(a: Graph, b: Graph) -> bool:
+    if a is b:
+        return True
+    if (a.num_vertices != b.num_vertices
+            or a.num_edges != b.num_edges):
+        return False
+    if not (np.array_equal(a.src, b.src) and np.array_equal(a.dst, b.dst)):
+        return False
+    if (a.weights is None) != (b.weights is None):
+        return False
+    return a.weights is None or np.array_equal(a.weights, b.weights)
+
+
+@dataclasses.dataclass
+class _Version:
+    """One published (graph_id, version): host graph + partition spec
+    always; the compiled layout only while resident."""
+    graph_id: str
+    version: int
+    graph: Graph
+    num_shards: int
+    method: str
+    pad_multiple: int
+    pg: Optional[PartitionedGraph] = None   # None = evicted
+    part_of: Optional[np.ndarray] = None    # pinned partition assignment
+    nbytes: int = 0                         # layout cost while resident
+    pins: int = 0
+    last_used: int = 0                      # LRU clock value
+    superseded: bool = False
+    ever_resident: bool = False
+
+    @property
+    def resident(self) -> bool:
+        return self.pg is not None
+
+    def spec(self) -> Tuple[int, str, int]:
+        return (self.num_shards, self.method, self.pad_multiple)
+
+
+class GraphLease:
+    """A pin on one resident (graph_id, version). Release it (or use it
+    as a context manager) when the query that needed the graph retires;
+    unpinned layouts become evictable."""
+
+    def __init__(self, store: "GraphStore", graph_id: str, version: int,
+                 pg: PartitionedGraph):
+        self._store = store
+        self.graph_id = graph_id
+        self.version = version
+        self.pg = pg
+        self._released = False
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._store.release(self.graph_id, self.version)
+
+    def __enter__(self) -> "GraphLease":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class GraphStore:
+    """Versioned, memory-budgeted registry of partitioned graphs.
+
+    ``budget_bytes=None`` means unbounded (the pre-store behavior);
+    passing a :class:`~repro.core.perfmodel.Platform` derives the budget
+    from its ``m_board``. Thread-safe: every method serializes on one
+    lock (materialization included — a fault is device-upload-bound, not
+    lock-bound).
+    """
+
+    def __init__(self, *, budget_bytes: Optional[float] = None,
+                 platform=None, versioned: bool = True,
+                 num_shards: int = 4, method: str = "greedy",
+                 pad_multiple: int = 256):
+        if budget_bytes is None and platform is not None:
+            budget_bytes = float(platform.m_board)
+        self.budget_bytes: Optional[float] = (
+            float(budget_bytes) if budget_bytes is not None else None)
+        self.versioned = versioned
+        self.defaults = dict(num_shards=num_shards, method=method,
+                             pad_multiple=pad_multiple)
+        self._lock = threading.RLock()
+        self._versions: Dict[Tuple[str, int], _Version] = {}
+        self._latest: Dict[str, int] = {}
+        self._clock = 0
+        self._evict_listeners: List[Callable[[str, int], None]] = []
+        # counters
+        self.publishes = 0
+        self.evictions = 0
+        self.faults = 0
+        self.budget_overcommits = 0
+
+    # ---------------- registration ------------------------------------
+    def publish(self, graph_id: str, graph: Graph, *,
+                num_shards: Optional[int] = None,
+                method: Optional[str] = None,
+                pad_multiple: Optional[int] = None,
+                materialize: bool = True) -> int:
+        """Register ``graph`` as the next version of ``graph_id``.
+
+        First publish creates version 1. Re-publishing identical content
+        under the same partition spec is an idempotent no-op (returns
+        the current version). Different content bumps the version when
+        the store is ``versioned``; with versioning disabled it raises
+        :class:`StoreError` instead of silently overwriting a graph that
+        in-flight queries may still be traversing.
+        """
+        num_shards = num_shards or self.defaults["num_shards"]
+        method = method or self.defaults["method"]
+        pad_multiple = pad_multiple or self.defaults["pad_multiple"]
+        with self._lock:
+            cur = self._latest.get(graph_id)
+            head = None
+            if cur is not None:
+                head = self._versions[(graph_id, cur)]
+                same_spec = head.spec() == (num_shards, method, pad_multiple)
+                if same_spec and _graphs_equal(head.graph, graph):
+                    return cur          # idempotent re-register
+                if not self.versioned:
+                    raise StoreError(
+                        f"graph {graph_id!r} already published and "
+                        "versioning is disabled; re-publishing different "
+                        "content would silently invalidate in-flight "
+                        "queries (construct the store with versioned=True "
+                        "to swap versions atomically)")
+                head.superseded = True
+            ver = (cur or 0) + 1
+            entry = _Version(graph_id=graph_id, version=ver, graph=graph,
+                             num_shards=num_shards, method=method,
+                             pad_multiple=pad_multiple)
+            self._versions[(graph_id, ver)] = entry
+            self._latest[graph_id] = ver
+            self.publishes += 1
+            # retire a drained (unpinned) predecessor AFTER the new head
+            # is registered, so evict listeners observe the new latest
+            # (stale plans and cached results are scoped to `cur`)
+            if head is not None and head.pins == 0:
+                self._retire_superseded_locked(head)
+            if materialize:
+                self._materialize_locked(entry, fault=False)
+                self._evict_to_budget_locked()
+            return ver
+
+    def remove(self, graph_id: str) -> None:
+        """Drop every version of ``graph_id`` (refuses while pinned)."""
+        with self._lock:
+            keys = [k for k in self._versions if k[0] == graph_id]
+            if not keys:
+                raise KeyError(f"graph {graph_id!r} not in store")
+            for k in keys:
+                if self._versions[k].pins > 0:
+                    raise StoreError(
+                        f"graph {graph_id!r} v{k[1]} is pinned by "
+                        f"{self._versions[k].pins} in-flight queries")
+            for k in keys:
+                entry = self._versions.pop(k)
+                if entry.resident:
+                    self._evict_locked(entry, count=False)
+            del self._latest[graph_id]
+
+    # ---------------- lookup / pinning --------------------------------
+    def latest_version(self, graph_id: str) -> int:
+        with self._lock:
+            ver = self._latest.get(graph_id)
+            if ver is None:
+                raise KeyError(f"graph {graph_id!r} not in store")
+            return ver
+
+    def known_version(self, graph_id: str) -> int:
+        """Like :meth:`latest_version` but 0 for unknown ids (lets
+        callers defer the missing-graph error to dispatch time)."""
+        with self._lock:
+            return self._latest.get(graph_id, 0)
+
+    def graph_ids(self) -> List[str]:
+        with self._lock:
+            return sorted(self._latest)
+
+    def _entry(self, graph_id: str, version: Optional[int]) -> _Version:
+        ver = version or self._latest.get(graph_id)
+        if ver is None:
+            raise KeyError(f"graph {graph_id!r} not in store")
+        entry = self._versions.get((graph_id, ver))
+        if entry is None:
+            raise KeyError(f"graph {graph_id!r} has no version {ver}")
+        return entry
+
+    def acquire(self, graph_id: str, version: Optional[int] = None
+                ) -> GraphLease:
+        """Pin (graph_id, version) — latest when ``version`` is None —
+        re-materializing it first if it was evicted. The pin blocks
+        eviction until released."""
+        with self._lock:
+            entry = self._entry(graph_id, version)
+            if not entry.resident:
+                self._materialize_locked(entry, fault=True)
+            entry.pins += 1
+            self._touch_locked(entry)
+            self._evict_to_budget_locked()
+            return GraphLease(self, entry.graph_id, entry.version, entry.pg)
+
+    def release(self, graph_id: str, version: int) -> None:
+        with self._lock:
+            entry = self._versions.get((graph_id, version))
+            if entry is None:
+                return      # removed while leased — nothing left to unpin
+            entry.pins = max(0, entry.pins - 1)
+            # superseded versions exist only for their in-flight drain:
+            # last pin out turns off the lights (device arrays + plans +
+            # host payloads — no new arrival can ever bind them again)
+            if entry.pins == 0 and entry.superseded:
+                self._retire_superseded_locked(entry)
+            else:
+                self._evict_to_budget_locked()
+
+    def peek(self, graph_id: str, version: Optional[int] = None
+             ) -> PartitionedGraph:
+        """The resident layout, without pinning. Raises
+        :class:`StoreError` if the version is evicted — callers on the
+        query path must hold a lease instead."""
+        with self._lock:
+            entry = self._entry(graph_id, version)
+            if not entry.resident:
+                raise StoreError(
+                    f"graph {graph_id!r} v{entry.version} is evicted; "
+                    "acquire() a lease to fault it back in")
+            self._touch_locked(entry)
+            return entry.pg
+
+    def host_graph(self, graph_id: str,
+                   version: Optional[int] = None) -> Graph:
+        with self._lock:
+            entry = self._entry(graph_id, version)
+            if entry.graph is None:
+                raise StoreError(
+                    f"graph {graph_id!r} v{entry.version} was superseded "
+                    "and has drained; its host graph is released")
+            return entry.graph
+
+    def partition_spec(self, graph_id: str,
+                       version: Optional[int] = None) -> Dict[str, object]:
+        with self._lock:
+            e = self._entry(graph_id, version)
+            return dict(num_shards=e.num_shards, method=e.method,
+                        pad_multiple=e.pad_multiple)
+
+    # ---------------- eviction ----------------------------------------
+    def add_evict_listener(self, fn: Callable[[str, int], None]) -> None:
+        """``fn(graph_id, version)`` fires (under the store lock) when a
+        layout leaves device residency — the plan cache uses this to
+        drop the engines/plans compiled against the evicted arrays."""
+        self._evict_listeners.append(fn)
+
+    def evict(self, graph_id: str, version: Optional[int] = None) -> bool:
+        """Explicitly evict one version's layout. Returns False (and
+        leaves it resident) if the version is pinned."""
+        with self._lock:
+            entry = self._entry(graph_id, version)
+            if not entry.resident:
+                return True
+            if entry.pins > 0:
+                return False
+            self._evict_locked(entry)
+            return True
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return sum(e.nbytes for e in self._versions.values()
+                       if e.resident)
+
+    def snapshot(self) -> Dict[str, float]:
+        """Store counters for the service stats endpoint."""
+        with self._lock:
+            resident = [e for e in self._versions.values() if e.resident]
+            return {
+                "graphs": len(self._latest),
+                "versions": len(self._versions),
+                "resident_graphs": len(resident),
+                "resident_bytes": float(sum(e.nbytes for e in resident)),
+                "pinned_graphs": sum(1 for e in resident if e.pins > 0),
+                "budget_bytes": (float(self.budget_bytes)
+                                 if self.budget_bytes is not None else -1.0),
+                "publishes": self.publishes,
+                "evictions": self.evictions,
+                "faults": self.faults,
+                "budget_overcommits": self.budget_overcommits,
+            }
+
+    def describe(self) -> List[Dict[str, object]]:
+        with self._lock:
+            return [{
+                "graph_id": e.graph_id, "version": e.version,
+                "resident": e.resident, "pins": e.pins,
+                "superseded": e.superseded, "nbytes": e.nbytes,
+                "num_shards": e.num_shards, "method": e.method,
+            } for e in self._versions.values()]
+
+    # ---------------- internals (lock held) ----------------------------
+    def _touch_locked(self, entry: _Version) -> None:
+        self._clock += 1
+        entry.last_used = self._clock
+
+    def _materialize_locked(self, entry: _Version, *, fault: bool) -> None:
+        if entry.graph is None:
+            raise StoreError(
+                f"graph {entry.graph_id!r} v{entry.version} was "
+                "superseded and has drained; only the latest version "
+                "can be acquired")
+        # Re-materialization reuses the pinned part_of assignment, so a
+        # faulted-back layout is array-for-array identical to the
+        # original (partitioners are deterministic anyway; this also
+        # skips their O(V)/O(E) host work on the fault path).
+        entry.pg = partition_graph(
+            entry.graph, entry.num_shards, method=entry.method,
+            pad_multiple=entry.pad_multiple, part_of=entry.part_of)
+        if entry.part_of is None:
+            entry.part_of = entry.pg.part_of
+        entry.nbytes = entry.pg.device_nbytes
+        # a fresh layout is by definition the most recently used — without
+        # this touch its last_used of 0 would make it the LRU victim of
+        # the very budget sweep its own materialization triggers
+        self._touch_locked(entry)
+        if fault and entry.ever_resident:
+            self.faults += 1
+        entry.ever_resident = True
+
+    def _evict_locked(self, entry: _Version, *, count: bool = True) -> None:
+        entry.pg = None
+        if count:
+            self.evictions += 1
+        for fn in self._evict_listeners:
+            fn(entry.graph_id, entry.version)
+
+    def _retire_superseded_locked(self, entry: _Version) -> None:
+        """A drained superseded version: evict its layout AND drop the
+        host-side Graph / partition assignment. A long-running service
+        that republishes a tenant's graph for months must not retain
+        every predecessor's E-sized edge arrays; the metadata tombstone
+        stays for describe()/snapshot() introspection."""
+        if entry.resident:
+            self._evict_locked(entry)
+        entry.graph = None
+        entry.part_of = None
+
+    def _evict_to_budget_locked(self) -> None:
+        if self.budget_bytes is None:
+            return
+        while True:
+            resident = [e for e in self._versions.values() if e.resident]
+            total = sum(e.nbytes for e in resident)
+            if total <= self.budget_bytes:
+                return
+            victims = [e for e in resident if e.pins == 0]
+            if not victims:
+                # everything over budget is serving in-flight queries —
+                # overcommit rather than corrupt; the next release
+                # re-runs this sweep
+                self.budget_overcommits += 1
+                return
+            self._evict_locked(min(victims, key=lambda e: e.last_used))

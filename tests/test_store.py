@@ -1,0 +1,519 @@
+"""Multi-tenant GraphStore: versioned residency under a memory budget.
+
+Covers the store's contract (LRU eviction, query pins, transparent
+refault, atomic version publish), the tenancy policy layer (token
+buckets, fair-share weights), and the service-level integration:
+re-register-as-publish semantics, eviction/pin races (a query in flight
+on a graph chosen for eviction completes bit-identically), version-swap
+isolation (old-version results unaffected by publish), stale-plan
+invalidation scoped to the evicted version, and weighted fair share.
+A shard_map-backend variant runs in a subprocess (multi-device rules).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as ALG
+from repro.core import graph as G
+from repro.core import partition as PT
+from repro.core.engine import Engine
+from repro.service import (AdmissionError, GraphQueryService, PlanCache,
+                           QueryRequest)
+from repro.store import (GraphStore, StoreError, TenantRegistry,
+                         TokenBucket)
+
+
+@pytest.fixture(scope="module")
+def g_a():
+    return G.uniform(300, 6.0, seed=1).symmetrized()
+
+
+@pytest.fixture(scope="module")
+def g_b():
+    return G.uniform(300, 6.0, seed=2).symmetrized()
+
+
+@pytest.fixture(scope="module")
+def g_c():
+    return G.uniform(300, 6.0, seed=3).symmetrized()
+
+
+@pytest.fixture(scope="module")
+def deep_graph():
+    # ladder: BFS from rank-0 takes ~30 supersteps, so a query is still
+    # in flight while we evict/publish around it
+    return G.ladder(2, 30, 1, seed=0)
+
+
+def _budget_for(graph, k: float, pad_multiple=16, num_shards=4) -> float:
+    """A budget that fits ``k`` layouts the size of ``graph``'s."""
+    pg = PT.partition_graph(graph, num_shards, pad_multiple=pad_multiple)
+    return k * pg.device_nbytes
+
+
+# ---------------------------------------------------------------------------
+# store unit behavior
+# ---------------------------------------------------------------------------
+
+def test_publish_acquire_idempotent(g_a):
+    store = GraphStore(num_shards=4, pad_multiple=16)
+    v = store.publish("a", g_a)
+    assert v == 1
+    assert store.publish("a", g_a) == 1          # identical -> no-op
+    assert store.latest_version("a") == 1
+    with store.acquire("a") as lease:
+        assert lease.pg.num_vertices == g_a.num_vertices
+    assert store.snapshot()["resident_graphs"] == 1
+    assert store.faults == 0
+
+
+def test_partitioned_graph_byte_accounting(g_a):
+    pg = PT.partition_graph(g_a, 4, pad_multiple=16)
+    assert pg.device_nbytes > 0
+    assert pg.nbytes > pg.device_nbytes          # + the stats edge list
+    expected = sum(getattr(pg, f).nbytes for f in (
+        "part_of", "local_of", "vert_gid", "vert_valid", "out_deg",
+        "in_src_slot", "in_src_gid", "in_src_outdeg", "in_dst_local",
+        "in_w", "in_valid", "pair_src_local", "pair_src_gid",
+        "pair_src_outdeg", "pair_dst_local", "pair_w", "pair_valid",
+        "nbr_filter"))
+    assert pg.device_nbytes == expected
+
+
+def test_lru_eviction_order(g_a, g_b, g_c):
+    budget = _budget_for(g_a, 2.5)
+    store = GraphStore(budget_bytes=budget, num_shards=4, pad_multiple=16)
+    store.publish("a", g_a)
+    store.publish("b", g_b)
+    # touch "a" so "b" is the LRU victim when "c" arrives
+    store.acquire("a").release()
+    store.publish("c", g_c)
+    snap = store.snapshot()
+    assert snap["evictions"] == 1
+    desc = {e["graph_id"]: e for e in store.describe()}
+    assert desc["b"]["resident"] is False
+    assert desc["a"]["resident"] and desc["c"]["resident"]
+
+
+def test_fault_rematerializes_bit_identical(g_a, g_b):
+    budget = _budget_for(g_a, 1.5)
+    store = GraphStore(budget_bytes=budget, num_shards=4, pad_multiple=16)
+    store.publish("a", g_a)
+    with store.acquire("a") as lease:
+        before = {f: np.array(getattr(lease.pg, f))
+                  for f in ("part_of", "in_src_slot", "in_dst_local",
+                            "vert_gid", "in_w")}
+    store.publish("b", g_b)                       # evicts idle "a"
+    assert not {e["graph_id"]: e for e in store.describe()}["a"]["resident"]
+    with store.acquire("a") as lease:             # transparent refault
+        for f, arr in before.items():
+            assert np.array_equal(np.asarray(getattr(lease.pg, f)), arr), f
+    assert store.faults == 1
+
+
+def test_pinned_graph_never_evicted(g_a, g_b):
+    budget = _budget_for(g_a, 1.5)
+    store = GraphStore(budget_bytes=budget, num_shards=4, pad_multiple=16)
+    store.publish("a", g_a)
+    lease_a = store.acquire("a")                  # pin
+    store.publish("b", g_b)       # over budget; "a" pinned -> "b" evicted
+    desc = {e["graph_id"]: e for e in store.describe()}
+    assert desc["a"]["resident"]                  # pin held
+    lease_b = store.acquire("b")  # fault "b" back; BOTH pinned now
+    desc = {e["graph_id"]: e for e in store.describe()}
+    assert desc["a"]["resident"] and desc["b"]["resident"]
+    assert store.snapshot()["budget_overcommits"] >= 1
+    assert store.evict("a") is False              # explicit evict refused
+    lease_a.release()                             # now evictable
+    lease_b.release()             # sweep: LRU "a" goes, "b" stays
+    desc = {e["graph_id"]: e for e in store.describe()}
+    assert not desc["a"]["resident"]
+    assert desc["b"]["resident"]
+
+
+def test_version_publish_supersedes_and_drains(g_a, g_b):
+    store = GraphStore(num_shards=4, pad_multiple=16)
+    assert store.publish("a", g_a) == 1
+    lease_v1 = store.acquire("a", 1)              # in-flight query on v1
+    assert store.publish("a", g_b) == 2
+    assert store.latest_version("a") == 2
+    # v1 stays resident for its drain ...
+    desc = {e["version"]: e for e in store.describe()
+            if e["graph_id"] == "a"}
+    assert desc[1]["resident"] and desc[1]["superseded"]
+    assert np.array_equal(lease_v1.pg.part_of,
+                          PT.partition_graph(g_a, 4,
+                                             pad_multiple=16).part_of)
+    # ... and is evicted the moment the last pin drops
+    lease_v1.release()
+    desc = {e["version"]: e for e in store.describe()
+            if e["graph_id"] == "a"}
+    assert not desc[1]["resident"]
+    assert desc[2]["resident"]
+
+
+def test_unversioned_store_rejects_republish(g_a, g_b):
+    store = GraphStore(versioned=False, num_shards=4, pad_multiple=16)
+    store.publish("a", g_a)
+    store.publish("a", g_a)                       # identical: fine
+    with pytest.raises(StoreError):
+        store.publish("a", g_b)
+
+
+def test_peek_requires_residency_and_remove_refuses_pins(g_a, g_b):
+    budget = _budget_for(g_a, 1.5)
+    store = GraphStore(budget_bytes=budget, num_shards=4, pad_multiple=16)
+    store.publish("a", g_a)
+    store.publish("b", g_b)                       # "a" evicted
+    with pytest.raises(StoreError):
+        store.peek("a")
+    lease = store.acquire("b")
+    with pytest.raises(StoreError):
+        store.remove("b")
+    lease.release()
+    store.remove("b")
+    with pytest.raises(KeyError):
+        store.latest_version("b")
+
+
+# ---------------------------------------------------------------------------
+# tenancy policy
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_injected_time():
+    b = TokenBucket(rate=2.0, burst=2, now=0.0)
+    assert b.try_take(now=0.0) and b.try_take(now=0.0)
+    assert not b.try_take(now=0.0)                # burst exhausted
+    assert b.try_take(now=0.5)                    # 0.5s * 2/s = 1 token
+    assert not b.try_take(now=0.5)
+    assert b.try_take(now=10.0)                   # refill caps at burst
+    assert b.try_take(now=10.0)
+    assert not b.try_take(now=10.0)
+
+
+def test_tenant_registry_defaults_and_quota():
+    reg = TenantRegistry()
+    assert reg.weight("anon") == 1.0
+    assert reg.admit("anon")                      # unlimited by default
+    reg.configure("paid", weight=4.0, rate_qps=2.0, burst=2, now=0.0)
+    assert reg.weight("paid") == 4.0
+    assert reg.admit("paid", now=0.0) and reg.admit("paid", now=0.0)
+    assert not reg.admit("paid", now=0.0)
+    assert reg.admit("paid", now=1.0)
+
+
+# ---------------------------------------------------------------------------
+# service integration
+# ---------------------------------------------------------------------------
+
+def test_add_graph_republish_is_version_publish(g_a, g_b):
+    svc = GraphQueryService(num_shards=4, max_batch=4)
+    svc.add_graph("g", g_a, pad_multiple=16)
+    svc.add_graph("g", g_a, pad_multiple=16)      # idempotent
+    assert svc.store.latest_version("g") == 1
+    res_v1 = svc.query("g", "bfs", root=0)
+    assert svc.publish("g", g_b, pad_multiple=16) == 2
+    res_v2 = svc.query("g", "bfs", root=0)
+    pg_b = PT.partition_graph(g_b, 4, pad_multiple=16)
+    ref = Engine(ALG.bfs(0), pg_b, mode="gravfm", backend="ref").run()
+    assert np.array_equal(res_v2.state["parent"], ref.state["parent"])
+    # the two versions genuinely differ
+    assert not np.array_equal(res_v1.state["parent"],
+                              res_v2.state["parent"])
+
+
+def test_add_graph_unversioned_service_raises(g_a, g_b):
+    svc = GraphQueryService(num_shards=4, max_batch=4, versioned=False)
+    svc.add_graph("g", g_a, pad_multiple=16)
+    with pytest.raises(StoreError):
+        svc.add_graph("g", g_b, pad_multiple=16)
+
+
+def test_result_cache_is_version_scoped(g_a, g_b):
+    svc = GraphQueryService(num_shards=4, max_batch=4)
+    svc.add_graph("g", g_a, pad_multiple=16)
+    svc.query("g", "bfs", root=0)
+    svc.publish("g", g_b, pad_multiple=16)
+    res = svc.query("g", "bfs", root=0)           # must NOT hit v1's cache
+    assert svc.stats_snapshot()["result_cache_hits"] == 0
+    pg_b = PT.partition_graph(g_b, 4, pad_multiple=16)
+    ref = Engine(ALG.bfs(0), pg_b, mode="gravfm", backend="ref").run()
+    assert np.array_equal(res.state["parent"], ref.state["parent"])
+    svc.query("g", "bfs", root=0)                 # same version: hit
+    assert svc.stats_snapshot()["result_cache_hits"] == 1
+    # v1's entries were purged when its drained version retired — dead
+    # keys must not squeeze live ones out of the bounded LRU
+    assert all(k[1] != 1 for k in svc._result_cache)
+
+
+def test_eviction_pin_race_query_completes_bit_identical(deep_graph, g_b):
+    """A graph chosen for eviction while a query is in flight must stay
+    pinned until the query retires, and the result must be bit-identical
+    to a solo run."""
+    budget = _budget_for(deep_graph, 1.2)
+    svc = GraphQueryService(num_shards=4, max_batch=4, slots=4,
+                            scheduling="continuous",
+                            memory_budget=budget, result_cache_size=0)
+    svc.add_graph("deep", deep_graph, pad_multiple=16)
+    svc.add_graph("other", g_b, pad_multiple=16)  # evicts idle "deep"
+    assert svc.store.evictions >= 1
+    fut = svc.submit(QueryRequest("deep", "bfs", {"root": 0},
+                                  deadline_ms=60_000))   # faults it back
+    for _ in range(3):
+        svc.poll()                                # in flight, pinned
+    assert not fut.done()
+    # pressure from the other tenant while "deep" is pinned
+    f2 = svc.submit(QueryRequest("other", "bfs", {"root": 0},
+                                 deadline_ms=60_000))
+    svc.flush()
+    assert svc.store.snapshot()["budget_overcommits"] >= 1
+    pg_deep = PT.partition_graph(deep_graph, 4, pad_multiple=16)
+    ref = Engine(ALG.bfs(0), pg_deep, mode="gravfm", backend="ref").run()
+    res = fut.result()
+    assert np.array_equal(res.state["parent"], ref.state["parent"])
+    assert res.supersteps == ref.supersteps
+    assert res.messages == ref.messages
+    assert f2.result() is not None
+    assert svc.store.faults >= 1
+
+
+def test_version_swap_isolation_inflight_drains_on_old(deep_graph, g_a,
+                                                       g_b):
+    """publish() while queries are in flight: they drain on version N
+    bit-identically; new arrivals bind N+1; N's plans are dropped after
+    the drain without touching other graphs' cache entries."""
+    svc = GraphQueryService(num_shards=4, max_batch=4, slots=4,
+                            scheduling="continuous", result_cache_size=0)
+    svc.add_graph("g", deep_graph, pad_multiple=16)
+    svc.add_graph("bystander", g_b, pad_multiple=16)
+    f_by = svc.submit(QueryRequest("bystander", "bfs", {"root": 0},
+                                   deadline_ms=60_000))
+    f_old = svc.submit(QueryRequest("g", "bfs", {"root": 0},
+                                    deadline_ms=60_000))
+    for _ in range(3):
+        svc.poll()
+    assert not f_old.done()                       # mid-flight on v1
+    assert svc.publish("g", g_a, pad_multiple=16) == 2
+    f_new = svc.submit(QueryRequest("g", "bfs", {"root": 0},
+                                    deadline_ms=60_000))
+    svc.flush()
+    pg_v1 = PT.partition_graph(deep_graph, 4, pad_multiple=16)
+    ref_v1 = Engine(ALG.bfs(0), pg_v1, mode="gravfm", backend="ref").run()
+    res_old = f_old.result()
+    assert np.array_equal(res_old.state["parent"], ref_v1.state["parent"])
+    assert res_old.supersteps == ref_v1.supersteps
+    assert res_old.messages == ref_v1.messages
+    pg_v2 = PT.partition_graph(g_a, 4, pad_multiple=16)
+    ref_v2 = Engine(ALG.bfs(0), pg_v2, mode="gravfm", backend="ref").run()
+    assert np.array_equal(f_new.result().state["parent"],
+                          ref_v2.state["parent"])
+    assert f_by.result() is not None
+    # stale-plan invalidation: v1's stepper plans are gone (its drain
+    # released the last pin -> superseded version evicted), v2's and the
+    # bystander's survive
+    versions = {(k.graph_id, k.version) for k in svc.plans._steppers}
+    assert ("g", 1) not in versions
+    assert ("g", 2) in versions
+    assert ("bystander", 1) in versions
+    desc = {(e["graph_id"], e["version"]): e for e in svc.store.describe()}
+    assert not desc[("g", 1)]["resident"]
+
+
+def test_fair_share_weighted_slots(g_a):
+    """Two flooding tenants at weights 2:1 on one class retire queries
+    in ~2:1 ratio while contended."""
+    svc = GraphQueryService(num_shards=4, max_batch=6, slots=6,
+                            scheduling="continuous", result_cache_size=0)
+    svc.add_graph("g", g_a, pad_multiple=16)
+    svc.set_tenant("heavy", weight=2.0)
+    svc.set_tenant("light", weight=1.0)
+    n_each = 24
+    rng = np.random.default_rng(0)
+    roots = iter(int(r) for r in
+                 rng.integers(0, g_a.num_vertices, size=2 * n_each))
+    futs = {"heavy": [], "light": []}
+    for _ in range(n_each):
+        for t in ("heavy", "light"):
+            futs[t].append(svc.submit(QueryRequest(
+                "g", "bfs", {"root": next(roots)},
+                tenant=t, deadline_ms=600_000)))
+    # pump while contended: stop as soon as either side's queue could
+    # run dry (half the work done), then compare completion counts
+    for _ in range(200):
+        svc.poll()
+        done_h = sum(f.done() for f in futs["heavy"])
+        done_l = sum(f.done() for f in futs["light"])
+        if done_h + done_l >= n_each:
+            break
+    assert done_h + done_l >= n_each
+    ratio = done_h / max(done_l, 1)
+    assert 2.0 * 0.8 <= ratio <= 2.0 * 1.25, (done_h, done_l)
+    svc.flush()
+    for fs in futs.values():
+        for f in fs:
+            assert f.result() is not None
+    snap = svc.stats_snapshot()
+    assert snap["tenants"]["heavy"]["completed"] == n_each
+    assert snap["tenants"]["light"]["completed"] == n_each
+
+
+def test_tenant_rate_quota_sheds(g_a):
+    svc = GraphQueryService(num_shards=4, max_batch=4)
+    svc.add_graph("g", g_a, pad_multiple=16)
+    svc.set_tenant("capped", rate_qps=0.001, burst=2)
+    f1 = svc.submit(QueryRequest("g", "bfs", {"root": 0}, tenant="capped"))
+    f2 = svc.submit(QueryRequest("g", "bfs", {"root": 1}, tenant="capped"))
+    f3 = svc.submit(QueryRequest("g", "bfs", {"root": 2}, tenant="capped"))
+    with pytest.raises(AdmissionError, match="rate quota"):
+        f3.result(timeout=0)
+    svc.flush()
+    assert f1.result() is not None and f2.result() is not None
+    snap = svc.stats_snapshot()
+    assert snap["tenants"]["capped"]["shed"] == 1
+    assert snap["queries_shed"] == 1
+    # other tenants are unaffected by the capped tenant's dry bucket
+    f4 = svc.submit(QueryRequest("g", "bfs", {"root": 3}))
+    svc.flush()
+    assert f4.result() is not None
+
+
+def test_publish_while_bucketed_queries_queued_drains_on_old(g_a, g_b):
+    """A queued-but-undispatched bucketed request pins its version from
+    submit, so a publish() in the queue-wait window cannot retire the
+    version out from under the waiting batch."""
+    svc = GraphQueryService(num_shards=4, max_batch=8)   # bucketed
+    svc.add_graph("g", g_a, pad_multiple=16)
+    f_old = svc.submit(QueryRequest("g", "bfs", {"root": 0},
+                                    deadline_ms=60_000))
+    assert not f_old.done()                    # waiting in the batcher
+    assert svc.publish("g", g_b, pad_multiple=16) == 2
+    f_new = svc.submit(QueryRequest("g", "bfs", {"root": 0},
+                                    deadline_ms=60_000))
+    svc.flush()
+    pg_a = PT.partition_graph(g_a, 4, pad_multiple=16)
+    ref_a = Engine(ALG.bfs(0), pg_a, mode="gravfm", backend="ref").run()
+    assert np.array_equal(f_old.result().state["parent"],
+                          ref_a.state["parent"])
+    pg_b = PT.partition_graph(g_b, 4, pad_multiple=16)
+    ref_b = Engine(ALG.bfs(0), pg_b, mode="gravfm", backend="ref").run()
+    assert np.array_equal(f_new.result().state["parent"],
+                          ref_b.state["parent"])
+    # v1 drained -> retired: host payloads released, tombstone remains
+    desc = {(e["graph_id"], e["version"]): e for e in svc.store.describe()}
+    assert not desc[("g", 1)]["resident"]
+
+
+def test_plan_cache_conflicts_with_budget_args(g_a):
+    cache = PlanCache()
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        GraphQueryService(plan_cache=cache, memory_budget=1e9)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        GraphQueryService(plan_cache=cache, versioned=False)
+
+
+def test_plan_cache_version_zero_resolves_latest(g_a, g_b):
+    """PlanKey(version=0) — the pre-store API — binds the store's latest
+    published version at lookup time."""
+    from repro.service import PlanKey
+    cache = PlanCache()
+    cache.register_graph("g", g_a, num_shards=4, pad_multiple=16)
+    key = PlanKey(graph_id="g", kernel="bfs", mode="gravfm",
+                  num_shards=4, batch_size=2, backend="ref")
+    plan1 = cache.get_plan(key)
+    assert plan1.key.version == 1
+    cache.register_graph("g", g_b, num_shards=4, pad_multiple=16)
+    plan2 = cache.get_plan(key)
+    assert plan2.key.version == 2
+    assert plan2 is not plan1
+
+
+def test_store_counters_in_stats_endpoint(g_a):
+    svc = GraphQueryService(num_shards=4, max_batch=4)
+    svc.add_graph("g", g_a, pad_multiple=16)
+    snap = svc.stats_snapshot()
+    assert snap["store_resident_graphs"] == 1
+    assert snap["store_resident_bytes"] > 0
+    assert snap["store_evictions"] == 0
+    assert "tenants" in snap
+
+
+# ---------------------------------------------------------------------------
+# shard_map-backend variant (subprocess: needs >1 device)
+# ---------------------------------------------------------------------------
+
+_SHARDMAP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, {src!r})
+import numpy as np
+from repro.core import graph as G, partition as PT, algorithms as ALG
+from repro.core.engine import Engine
+from repro.core.engine_shardmap import ShardEngine
+from repro.launch.mesh import compat_make_mesh
+from repro.store import GraphStore
+
+mesh = compat_make_mesh((8,), ("graph",))
+deep = G.ladder(2, 30, 1, seed=0)
+other = G.uniform(300, 6.0, seed=2).symmetrized()
+budget = 1.2 * PT.partition_graph(deep, 8, pad_multiple=16).device_nbytes
+store = GraphStore(budget_bytes=budget, num_shards=8, pad_multiple=16)
+store.publish("deep", deep)
+store.publish("other", other)        # idle "deep" evicted
+
+# fault "deep" back and start an in-flight shard_map continuous query
+lease = store.acquire("deep")
+assert store.faults == 1
+se = ShardEngine(ALG.bfs(), lease.pg, mesh=mesh, exchange="allgather",
+                 backend="ref")
+st = se.make_stepper(2)
+qkw = {{"root": np.zeros(2, np.int32)}}
+carry, act, steps = st.init(qkw)
+occ = np.zeros(2, bool); occ[0] = True
+for _ in range(3):
+    carry, act, steps = st.step(carry, occ)
+
+# eviction pressure while pinned: "deep" must survive (overcommit)
+lease2 = store.acquire("other")
+assert {{e["graph_id"]: e for e in store.describe()}}["deep"]["resident"]
+assert store.snapshot()["budget_overcommits"] >= 1
+
+# version publish mid-flight: v1 pinned for its drain, v2 is latest
+store.publish("deep", other)
+assert store.latest_version("deep") == 2
+assert {{(e["graph_id"], e["version"]): e["resident"]
+        for e in store.describe()}}[("deep", 1)]
+
+# finish the in-flight query on v1 — bit-identical to a solo run
+for _ in range(1000):
+    occ &= act
+    if not occ.any():
+        break
+    carry, act, steps = st.step(carry, occ)
+res = se.lane_result(st.fetch(carry), 0)
+ref = Engine(ALG.bfs(0), PT.partition_graph(deep, 8, pad_multiple=16),
+             mode="gravfm", backend="ref").run()
+assert np.array_equal(res["state"]["parent"], ref.state["parent"])
+assert res["supersteps"] == ref.supersteps
+assert res["messages"] == ref.messages
+
+# drain: releasing the last pin evicts the superseded v1
+lease.release()
+assert not {{(e["graph_id"], e["version"]): e["resident"]
+            for e in store.describe()}}[("deep", 1)]
+lease2.release()
+print("STORE-SHARDMAP-OK")
+"""
+
+
+@pytest.mark.slow
+def test_store_shardmap_eviction_pin_and_version_swap():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = _SHARDMAP_SCRIPT.format(src=os.path.abspath(src))
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "STORE-SHARDMAP-OK" in proc.stdout
