@@ -1,12 +1,17 @@
-"""Multi-tenant serving under a device-memory budget.
+"""Multi-tenant serving under a device-memory budget, with the
+host-spill residency tier.
 
-Two phases over one memory-budgeted service:
+Three phases over one memory-budgeted service:
 
+  cold    — each tenant's FIRST burst: partition compile + engine
+            trace + upload. The price of a never-seen (or discarded)
+            graph, measured per tenant.
   churn   — N tenant graphs round-robin through a budget that fits only
-            K of them. Every return to an evicted tenant *faults*: the
-            store re-materializes the layout and the plan cache
-            re-compiles against it, so the burst pays partition + trace
-            latency. Measures that fault cost directly.
+            K of them. Every return to an evicted tenant *faults* — but
+            eviction now demotes to the host-spill tier, so the fault
+            is a device re-upload: no partitioner re-run and **zero
+            re-traces** (the plan cache keeps spilled versions' plans).
+            Churn bursts must be dramatically cheaper than cold ones.
   steady  — the same service then serves only K tenants. Their graphs
             stay resident: zero faults, zero re-traces, and per-burst
             latency drops to pure execution.
@@ -16,9 +21,10 @@ weights 2:1; while the slot array is contended, per-tenant completions
 must track the weights (the acceptance bound is ±20%).
 
 ``GRAVFM_BENCH_CI=1`` shrinks the workload and exits non-zero unless
-(a) churn evicts and faults, (b) steady state faults and re-traces
-nothing, (c) the weighted throughput ratio lands within 20% of the
-configured 2:1.
+(a) churn evicts, spills and faults, (b) churn re-traces nothing and
+its spilled faults are >=5x cheaper than cold materialization,
+(c) steady state faults and re-traces nothing, (d) the weighted
+throughput ratio lands within 20% of the configured 2:1.
 """
 from __future__ import annotations
 
@@ -72,20 +78,40 @@ def tenancy():
         svc.add_graph(gid, g, pad_multiple=pad)
     rng = np.random.default_rng(0)
 
+    # ---- cold: each tenant's first burst compiles its plans -----------
+    cold_lat = []
+    for gid in graphs:
+        roots = rng.integers(0, n_vertices, size=burst_q)
+        cold_lat.append(_burst(svc, gid, roots, tenant=gid))
+    cold_snap = svc.stats_snapshot()
+    emit("tenancy_cold_burst", float(np.mean(cold_lat)) * 1e6,
+         f"tenants={n_tenants};traces={cold_snap['plan_traces']:.0f}")
+
     # ---- churn: working set (= all tenants) exceeds the budget --------
+    # every burst refaults a SPILLED tenant: device re-upload, zero
+    # re-traces — the plan cache kept the spilled versions' plans
     churn_lat = []
     for _ in range(rounds):
         for gid in graphs:
             roots = rng.integers(0, n_vertices, size=burst_q)
             churn_lat.append(_burst(svc, gid, roots, tenant=gid))
     churn_snap = svc.stats_snapshot()
-    churn_faults = churn_snap["store_faults"]
-    churn_evictions = churn_snap["store_evictions"]
-    churn_traces = churn_snap["plan_traces"]
+    churn_faults = churn_snap["store_faults"] - cold_snap["store_faults"]
+    churn_spills = churn_snap["store_spills"] - cold_snap["store_spills"]
+    churn_evictions = (churn_snap["store_evictions"]
+                       - cold_snap["store_evictions"])
+    churn_traces = churn_snap["plan_traces"] - cold_snap["plan_traces"]
+    churn_upload_ms = (churn_snap["store_refault_upload_ms"]
+                       - cold_snap["store_refault_upload_ms"])
+    cold_over_churn = np.mean(cold_lat) / max(np.mean(churn_lat), 1e-9)
     emit("tenancy_churn_burst", float(np.mean(churn_lat)) * 1e6,
          f"tenants={n_tenants};budget_fits={keep};"
-         f"faults={churn_faults};evictions={churn_evictions};"
-         f"resident_mb={churn_snap['store_resident_bytes'] / 1e6:.2f}")
+         f"faults={churn_faults:.0f};evictions={churn_evictions:.0f};"
+         f"spills={churn_spills:.0f};retraces={churn_traces:.0f};"
+         f"cold_to_churn_x={cold_over_churn:.1f};"
+         f"refault_upload_ms={churn_upload_ms:.2f};"
+         f"resident_mb={churn_snap['store_resident_bytes'] / 1e6:.2f};"
+         f"spilled_mb={churn_snap['store_spilled_bytes'] / 1e6:.2f}")
 
     # ---- steady state: working set fits — zero faults, zero re-traces -
     hot = list(graphs)[:keep]
@@ -102,7 +128,7 @@ def tenancy():
     steady_faults = post["store_faults"] - pre["store_faults"]
     steady_traces = post["plan_traces"] - pre["plan_traces"]
     emit("tenancy_steady_burst", float(np.mean(steady_lat)) * 1e6,
-         f"faults={steady_faults};retraces={steady_traces};"
+         f"faults={steady_faults:.0f};retraces={steady_traces:.0f};"
          f"fault_to_steady_x="
          f"{np.mean(churn_lat) / max(np.mean(steady_lat), 1e-9):.1f}")
 
@@ -139,10 +165,18 @@ def tenancy():
 
     if ci:
         errs = []
-        if churn_evictions <= 0 or churn_faults <= 0:
-            errs.append(f"churn did not exercise the budget "
+        if churn_evictions <= 0 or churn_faults <= 0 or churn_spills <= 0:
+            errs.append(f"churn did not exercise the spill tier "
                         f"(evictions={churn_evictions}, "
-                        f"faults={churn_faults})")
+                        f"faults={churn_faults}, spills={churn_spills})")
+        if churn_traces != 0:
+            errs.append(f"churn re-traced {churn_traces}x under eviction "
+                        "pressure (spilled versions must keep their "
+                        "compiled plans)")
+        if cold_over_churn < 5.0:
+            errs.append(f"spilled churn faults only {cold_over_churn:.1f}x "
+                        "cheaper than cold materialization (expected >=5x "
+                        "— refault must skip partition + trace)")
         if steady_faults != 0:
             errs.append(f"steady state faulted {steady_faults}x "
                         "with a resident working set")

@@ -16,8 +16,10 @@ def main():
               for c, s in (("a", 1), ("b", 2), ("c", 3))}
 
     # a budget that fits TWO of the three layouts: the store LRU-evicts
-    # the coldest tenant and transparently faults it back on its next
-    # query (Platform.m_board is the real-deployment analogue)
+    # the coldest tenant into the HOST-SPILL tier and transparently
+    # faults it back on its next query — a device re-upload, not a
+    # re-partition + re-trace (Platform.m_board is the real-deployment
+    # analogue; spill_budget= caps the host tier, 0 disables spilling)
     per_graph = PT.partition_graph(graphs["tenant-a"], 4).device_nbytes
     svc = GraphQueryService(num_shards=4, max_batch=16, slots=16,
                             scheduling="continuous",
@@ -48,8 +50,12 @@ def main():
           f"{snap['store_graphs']} graphs resident "
           f"({snap['store_resident_bytes'] / 1e6:.2f} MB / "
           f"{snap['store_budget_bytes'] / 1e6:.2f} MB budget), "
+          f"{snap['store_spilled_graphs']:.0f} spilled "
+          f"({snap['store_spilled_bytes'] / 1e6:.2f} MB host), "
           f"{snap['store_evictions']:.0f} evictions, "
-          f"{snap['store_faults']:.0f} faults")
+          f"{snap['store_faults']:.0f} faults "
+          f"({snap['store_refault_upload_ms']:.1f} ms re-uploading), "
+          f"{snap['store_discards']:.0f} discards")
     for name, t in snap["tenants"].items():
         print(f"  {name}: completed={t['completed']} shed={t['shed']} "
               f"p50={t['latency_p50_ms']:.1f}ms")

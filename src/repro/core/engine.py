@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -130,6 +131,7 @@ class Engine:
         # not calls. The service plan cache asserts steady-state serving
         # performs zero re-traces against this.
         self.traces = 0
+        self._device_resident = True
         self._prog = self._make_program()
         self._steppers: Dict[int, LaneStepper] = {}
         loop = self._make_loop()
@@ -354,6 +356,45 @@ class Engine:
             return c.state, c.superstep, c.stats
 
         return loop
+
+    # ------------------------------------------------------------------
+    @property
+    def device_resident(self) -> bool:
+        """Whether the graph-layout pytree currently lives in device
+        buffers (vs host-spill numpy copies)."""
+        return self._device_resident
+
+    def offload(self) -> int:
+        """Demote the graph's device arrays to host (numpy) copies — the
+        engine tier of the GraphStore's host-spill residency. The traced
+        programs (and their jit caches) survive untouched; dispatching
+        while offloaded still works (the runtime re-uploads per call),
+        it is just slower until :meth:`upload` promotes the arrays back.
+        Returns the bytes demoted."""
+        if not self._device_resident:
+            return 0
+        host = jax.tree.map(np.asarray, self._data)
+        self._rebind_data(host, resident=False)
+        return int(sum(a.nbytes for a in jax.tree.leaves(host)))
+
+    def upload(self) -> float:
+        """Promote offloaded graph arrays back into device buffers.
+        Shapes/dtypes are unchanged, so the next dispatch hits the
+        existing jit cache — the spill/refault contract is zero
+        re-traces. Returns the wall seconds the upload took."""
+        if self._device_resident:
+            return 0.0
+        t0 = time.perf_counter()
+        data = jax.tree.map(jnp.asarray, self._data)
+        jax.block_until_ready(data)
+        self._rebind_data(data, resident=True)
+        return time.perf_counter() - t0
+
+    def _rebind_data(self, data, *, resident: bool) -> None:
+        self._data = data
+        self._device_resident = resident
+        for st in self._steppers.values():
+            st.bind_data(data)
 
     # ------------------------------------------------------------------
     def _check_query_kwargs(self, kwargs: Dict[str, Any]) -> None:

@@ -155,6 +155,13 @@ class LaneStepperBase:
     def fetch(self, carry: StepCarry) -> StepCarry:
         return jax.tree.map(np.asarray, carry)
 
+    def bind_data(self, data) -> None:
+        """Swap the graph-layout pytree the jitted programs are driven
+        with — the engine's offload/upload across the store's host-spill
+        tier. Shapes/dtypes must match the original (the jit caches key
+        on avals, so a rebind re-traces nothing)."""
+        self._data = data
+
 
 class LaneStepper(LaneStepperBase):
     """Host-drivable fixed-width slot array over a SuperstepProgram.

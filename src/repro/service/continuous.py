@@ -203,15 +203,19 @@ class ContinuousScheduler:
     def drain(self, qclass: Optional[QueryClass] = None,
               max_pumps: int = 1_000_000) -> int:
         """Pump until ``qclass`` (or everything) has no queued or
-        in-flight queries; returns total retired."""
+        in-flight queries; returns total retired. The scheduler lock is
+        released between supersteps (each pump takes it internally), so
+        the between-supersteps admission window stays open during a
+        drain: a concurrent ``submit`` lands in the very drain it raced
+        with instead of blocking until the whole drain finishes."""
         total = 0
-        with self._lock:
-            for _ in range(max_pumps):
-                if qclass is None:
-                    if not self.has_work():
-                        break
-                    total += self.pump()
-                else:
+        for _ in range(max_pumps):
+            if qclass is None:
+                if not self.has_work():
+                    break
+                total += self.pump()
+            else:
+                with self._lock:
                     cr = self._classes.get(qclass)
                     if cr is None or cr.idle():
                         self._reap_if_idle(qclass)
@@ -273,12 +277,16 @@ class ContinuousScheduler:
         cr.carry, cr.act, cr.steps = cr.splan.stepper.step(cr.carry, alive)
         wall = time.perf_counter() - t0   # probe return synced the device
         if self.stats is not None:
-            self.stats.record_busy(wall)
             self.stats.record_pump_step()
             if eng.traces == traces0:
-                # compile-time walls would poison the cost model (and,
-                # with admission control on, shed the class forever)
+                self.stats.record_busy(wall)
                 self.stats.record_superstep_time(class_key(qclass), wall)
+            else:
+                # a traced step's wall is compile time, not execution:
+                # it would poison the cost model (and, with admission
+                # control on, shed the class forever) AND inflate
+                # busy_time_s, understating qps_busy/TEPS for the run
+                self.stats.record_compile(wall)
         return retired
 
     def _next_item(self, cr: _ClassRun):

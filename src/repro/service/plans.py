@@ -25,10 +25,18 @@ proves repeated submissions of the same class re-trace nothing.
 
 ``PlanKey.version`` identifies which published version of the graph the
 plan was compiled against (0 = resolve the store's latest at lookup
-time). When the store evicts a version — budget pressure or a drained
-superseded version after a ``publish`` — it fires the cache's
-invalidation hook and exactly that version's engines/plans/steppers are
-dropped; every other tenant's (and version's) entries stay hot.
+time). Residency hooks follow the store's three-tier state machine:
+
+  * **spill** (budget eviction, host tier enabled): the version's
+    engines *offload* their device graph arrays to host copies but the
+    compiled plans/steppers stay cached — a refault re-uploads and
+    re-traces nothing.
+  * **refault** (fires on the faulting thread, outside the store lock):
+    the engines' arrays are promoted back to device buffers before the
+    lease is handed out.
+  * **discard** (spill overflow, version retirement, remove): exactly
+    that version's engines/plans/steppers are dropped; every other
+    tenant's (and version's) entries stay hot.
 """
 from __future__ import annotations
 
@@ -126,15 +134,18 @@ class PlanCache:
     """Multi-level cache: partitioned graphs (via the GraphStore),
     device-resident engines, compiled plans, lane steppers.
     Thread-compatible (callers serialize dispatch; the server holds its
-    scheduler lock across get_plan + execute). Store evictions
-    invalidate synchronously — the affected version is pinned by any
-    query still using it, so eviction never races a live dispatch."""
+    scheduler lock across get_plan + execute). Store residency hooks
+    fire synchronously — the affected version is pinned by any query
+    still using it, so neither a spill (engine offload) nor a discard
+    (full invalidation) ever races a live dispatch."""
 
     def __init__(self, stats: Optional[ServiceStats] = None,
                  store: Optional[GraphStore] = None):
         self.stats = stats or ServiceStats()
         self.store = store or GraphStore()
         self.store.add_evict_listener(self.invalidate_graph)
+        self.store.add_spill_listener(self.offload_graph)
+        self.store.add_refault_listener(self.promote_graph)
         # traces of engines already dropped by eviction (keeps the
         # monotonic plan_traces counter exact across invalidations)
         self._trace_floor = 0
@@ -244,9 +255,30 @@ class PlanCache:
             self._steppers[key] = splan
         return splan
 
+    def _engines_of(self, graph_id: str, version: int) -> "list[Engine]":
+        with self._sync_lock:
+            return [e for k, e in list(self._engines.items())
+                    if k[0] == graph_id and k[1] == version]
+
+    def offload_graph(self, graph_id: str, version: int) -> int:
+        """Store spill hook: demote the version's engine device arrays
+        to host copies. Plans/steppers stay cached — the spill contract
+        is that a refault re-uploads and re-traces nothing. Returns the
+        engine-tier bytes demoted."""
+        return sum(e.offload() for e in self._engines_of(graph_id, version))
+
+    def promote_graph(self, graph_id: str, version: int) -> float:
+        """Store refault hook (fires on the faulting thread with the
+        store lock released): re-upload the version's engine arrays so
+        the first post-fault dispatch pays dispatch cost only. Returns
+        the upload wall seconds (the store folds the whole promotion
+        into ``refault_upload_ms``)."""
+        return sum(e.upload() for e in self._engines_of(graph_id, version))
+
     def invalidate_graph(self, graph_id: str, version: int) -> None:
-        """Drop every engine/plan/stepper compiled against one evicted
-        (graph_id, version) — other versions and tenants stay cached.
+        """Drop every engine/plan/stepper compiled against one
+        DISCARDED (graph_id, version) — other versions and tenants stay
+        cached, and spilled-but-not-discarded versions keep their plans.
         Trace counts of dropped engines are folded into the stats first
         so ``plan_traces`` stays monotonic."""
         with self._sync_lock:

@@ -43,6 +43,16 @@ refault on next query). Per-tenant **quotas** (token-bucket admission)
 and **fair-share weights** (weighted slots in the continuous scheduler)
 are configured with :meth:`set_tenant`.
 
+Budget evictions **spill to host** by default (PR 4): the evicted
+layout's arrays are demoted to host copies and the version keeps its
+compiled plans, so a refault is a device re-upload — no re-partition,
+zero re-traces. ``spill_budget`` caps the host tier (0 restores the
+discard-on-evict behavior), and faults **materialize outside the store
+lock**, so one tenant's cold fault cannot head-of-line-block another
+tenant's submits. ``store_spills`` / ``store_spilled_bytes`` /
+``store_discards`` / ``store_refault_upload_ms`` join the stats
+endpoint.
+
 The paper's engine answers one traversal per elaborated design; this
 server is the ROADMAP's "heavy traffic" counterpart — many BFS/SSSP
 roots per superstep loop, one broadcast per superstep shared by the
@@ -85,6 +95,7 @@ class GraphQueryService:
                  result_cache_size: int = 256,
                  admission_control: bool = False,
                  memory_budget: Optional[float] = None,
+                 spill_budget: Optional[float] = None,
                  platform=None,
                  versioned: bool = True,
                  store: Optional[GraphStore] = None,
@@ -106,17 +117,20 @@ class GraphQueryService:
             # the cache brings its own store; silently dropping these
             # would leave an operator believing residency is capped
             if (store is not None or memory_budget is not None
+                    or spill_budget is not None
                     or platform is not None or not versioned):
                 raise ValueError(
-                    "plan_cache and store/memory_budget/platform/"
-                    "versioned are mutually exclusive — configure the "
-                    "GraphStore the PlanCache was built with instead")
+                    "plan_cache and store/memory_budget/spill_budget/"
+                    "platform/versioned are mutually exclusive — "
+                    "configure the GraphStore the PlanCache was built "
+                    "with instead")
             self.plans = plan_cache
         else:
             store = store or GraphStore(
                 budget_bytes=memory_budget, platform=platform,
                 versioned=versioned, num_shards=num_shards,
-                method=partition_method)
+                method=partition_method,
+                spill_budget_bytes=spill_budget)
             self.plans = PlanCache(stats=self.stats, store=store)
         # One shared counter object, or the cache-level hits/misses/traces
         # split off from the endpoint and under-report.
@@ -316,10 +330,11 @@ class GraphQueryService:
 
     # ---------------- result cache / admission control ----------------
     def _purge_stale_results(self, graph_id: str, version: int) -> None:
-        """Store-evict listener (fires under the store lock). A budget
-        eviction keeps the version valid — refault is bit-identical, so
-        its cached results stay. Only a SUPERSEDED version's entries are
-        dead weight."""
+        """Store-discard listener (fires under the store lock; spills
+        never reach here). A spill-overflow discard keeps the version
+        valid — a later cold fault is bit-identical, so its cached
+        results stay. Only a SUPERSEDED version's entries are dead
+        weight."""
         known = self.store.known_version(graph_id)
         if known and version >= known:
             return      # budget eviction of the live version: still valid
@@ -496,19 +511,26 @@ class GraphQueryService:
         for f, res in zip(futs, results):
             f.set_result(res)
         traces_after = self.plans.sync_trace_counters()
+        compiled = traces_after != traces_before
         self.stats.record_batch(
             n_queries=n, n_pad=max(0, bucket - n) if bucket > 1 else 0,
-            wall_s=wall,
+            # a traced dispatch's wall is compile-dominated: account it
+            # to compile_time_s so busy_time_s (the qps_busy/TEPS
+            # denominator) stays execution-only, matching the
+            # continuous pump's accounting
+            wall_s=0.0 if compiled else wall,
             messages=sum(r.messages for r in results),
             supersteps=max((r.supersteps for r in results), default=0),
             latencies_ms=[(now - r.arrival_s) * 1e3 for r in reqs])
+        if compiled:
+            self.stats.record_compile(wall)
         # feed the admission-control cost model + the result cache;
         # dispatches that traced (compiled) are excluded from the cost
         # model — a compile wall would poison the EWMA and, with
         # admission control on, shed the class forever
         ck = class_key(qclass)
         batch_depth = max((r.supersteps for r in results), default=0)
-        if batch_depth > 0 and traces_after == traces_before:
+        if batch_depth > 0 and not compiled:
             self.stats.record_superstep_time(ck, wall, n_steps=batch_depth)
         for r, res in zip(reqs, results):
             self.stats.record_query_depth(ck, res.supersteps)
@@ -602,6 +624,10 @@ class GraphQueryService:
         percentiles, batch occupancy, plan-cache counters, graph-store
         residency (resident_bytes / evictions / faults), and the
         per-tenant breakdown."""
+        # fold live engines' trace counters first: with the spill tier,
+        # evictions no longer drop engines, so nothing else syncs
+        # plan_traces on the continuous path
+        self.plans.sync_trace_counters()
         snap: Dict[str, Any] = dict(self.stats.snapshot())
         snap["pending"] = self.pending()
         snap["scheduling"] = self.scheduling

@@ -48,7 +48,8 @@ class ServiceStats:
     result_cache_hits: int = 0      # memoized EngineResults served
     supersteps_total: int = 0
     messages_total: int = 0         # traversed edges (TEPS numerator)
-    busy_time_s: float = 0.0        # wall time spent inside dispatch
+    busy_time_s: float = 0.0        # wall time spent EXECUTING dispatches
+    compile_time_s: float = 0.0     # wall time spent tracing/compiling
 
     # Percentiles come from a bounded window of recent latencies so a
     # long-running service neither leaks memory nor pays O(total-queries)
@@ -151,9 +152,17 @@ class ServiceStats:
 
     def record_busy(self, wall_s: float) -> None:
         """Wall time spent driving the engine (continuous pump steps —
-        bucketed dispatch accounts its own via record_batch)."""
+        bucketed dispatch accounts its own via record_batch). Execution
+        only: compile walls go to :meth:`record_compile`."""
         with self._lock:
             self.busy_time_s += wall_s
+
+    def record_compile(self, wall_s: float) -> None:
+        """Wall time spent tracing/compiling a dispatch. Kept out of
+        ``busy_time_s`` so ``qps_busy``/TEPS (whose denominator it is)
+        reflect steady-state execution, not one-off compiles."""
+        with self._lock:
+            self.compile_time_s += wall_s
 
     def record_superstep_time(self, class_key: str, wall_s: float,
                               n_steps: int = 1) -> None:
@@ -215,6 +224,8 @@ class ServiceStats:
                 "result_cache_hits": self.result_cache_hits,
                 "supersteps_total": self.supersteps_total,
                 "messages_total": self.messages_total,
+                "busy_time_s": self.busy_time_s,
+                "compile_time_s": self.compile_time_s,
                 "qps": self.queries_completed / elapsed,
                 "qps_busy": self.queries_completed / busy,
                 "teps": self.messages_total / busy,

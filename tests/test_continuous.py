@@ -3,8 +3,14 @@ loop at any step t must be bit-identical to a solo ``Engine.run`` (state,
 superstep count, message count); steady-state slot recycling must
 re-trace nothing; the service-level scheduler must retire finished
 queries mid-flight, serve the result cache, and shed infeasible
-deadlines. Plus the linear-interpolation ``percentile`` fix."""
+deadlines. Plus regression pins: ``drain()`` keeps the
+between-supersteps admission window open (lock released between pumps),
+compile walls are accounted to ``compile_time_s`` instead of polluting
+``busy_time_s``, and the linear-interpolation ``percentile`` fix."""
+import threading
 import time
+from concurrent.futures import Future
+from types import SimpleNamespace
 
 import numpy as np
 import pytest
@@ -15,6 +21,7 @@ from repro.core import partition as PT
 from repro.core.engine import Engine
 from repro.service import (AdmissionError, GraphQueryService, QueryClass,
                            QueryRequest, ServiceStats, percentile)
+from repro.service.continuous import ContinuousScheduler
 
 
 @pytest.fixture(scope="module")
@@ -279,6 +286,191 @@ def test_service_continuous_step_failure_fails_futures(graph):
     f3 = svc.submit(QueryRequest("g", "bfs", {"root": 2}))
     svc.flush()
     assert f3.result() is not None
+
+
+# ---------------------------------------------------------------------------
+# scheduler-lock + stats-accounting regressions (fake stepper harness)
+# ---------------------------------------------------------------------------
+
+class _FakeEngine:
+    """Engine stand-in: a query with kwarg depth=d is alive for d steps.
+    Optionally 'traces' on the first step (compile-wall accounting)."""
+
+    def __init__(self, trace_on_first_step=False):
+        self.traces = 0
+        self.kernel = SimpleNamespace(query_params=("depth",),
+                                      max_supersteps=None)
+        self._trace_pending = trace_on_first_step
+
+    def lane_result(self, host, lane):
+        return SimpleNamespace(messages=1,
+                               supersteps=int(host["steps"][lane]))
+
+
+class _FakeStepper:
+    """LaneStepper protocol over host arrays; ``step_hook`` fires inside
+    step() — while the scheduler lock is held — so tests can gate
+    superstep boundaries deterministically."""
+
+    def __init__(self, width, engine, step_hook=None):
+        self.width = width
+        self.engine = engine
+        self.step_hook = step_hook or (lambda: None)
+
+    def _probe(self, carry):
+        return carry["remaining"] > 0, carry["steps"].copy()
+
+    def init(self, qkw):
+        carry = {"remaining": qkw["depth"].astype(np.int64).copy(),
+                 "steps": np.zeros(self.width, np.int64)}
+        return (carry, *self._probe(carry))
+
+    def admit(self, carry, qkw, fresh):
+        carry = {k: v.copy() for k, v in carry.items()}
+        carry["remaining"][fresh] = qkw["depth"][fresh]
+        carry["steps"][fresh] = 0
+        return (carry, *self._probe(carry))
+
+    def step(self, carry, alive):
+        self.step_hook()
+        if self.engine._trace_pending:
+            self.engine.traces += 1
+            self.engine._trace_pending = False
+        carry = {k: v.copy() for k, v in carry.items()}
+        carry["remaining"][alive] -= 1
+        carry["steps"][alive] += 1
+        return (carry, *self._probe(carry))
+
+    def fetch(self, carry):
+        return carry
+
+
+def _fake_scheduler(slots=2, stats=None, trace_on_first_step=False,
+                    step_hook=None):
+    eng = _FakeEngine(trace_on_first_step)
+    splan = SimpleNamespace(engine=eng,
+                            stepper=_FakeStepper(slots, eng, step_hook),
+                            query_params=("depth",))
+    sched = ContinuousScheduler(slots=slots, stats=stats,
+                                get_stepper=lambda qc: splan)
+    qclass = QueryClass("g", "fake", "gravfm", 4, "ref", 1)
+    return sched, qclass
+
+
+def _submit_fake(sched, qclass, depth):
+    fut = Future()
+    sched.submit(qclass, QueryRequest("g", "fake", {"depth": depth},
+                                      deadline_ms=600_000), fut)
+    return fut
+
+
+def test_drain_keeps_admission_window_open():
+    """Regression: drain() used to hold the scheduler lock for the whole
+    loop, so a concurrent submit blocked until everything finished. Now
+    the lock is released between supersteps and the raced submit is
+    drained by the SAME drain call."""
+    gate = threading.Semaphore(0)
+    in_step = threading.Event()
+
+    def hook():                      # blocks each superstep (lock held)
+        in_step.set()
+        gate.acquire()
+
+    sched, qclass = _fake_scheduler(step_hook=hook)
+    fut1 = _submit_fake(sched, qclass, depth=6)
+    order = []
+
+    def drainer():
+        sched.drain()
+        order.append("drain")
+
+    t = threading.Thread(target=drainer)
+    t.start()
+    assert in_step.wait(10)          # superstep 1 in progress
+    fut2 = None
+    got = {}
+
+    def submitter():
+        got["fut2"] = _submit_fake(sched, qclass, depth=2)
+        order.append("submit")
+
+    s = threading.Thread(target=submitter)
+    s.start()
+    # release supersteps one at a time until the raced submit lands —
+    # with the old whole-drain lock it could only land after "drain"
+    for _ in range(200):
+        if not s.is_alive():
+            break
+        gate.release()
+        s.join(0.05)
+    s.join(10)
+    assert not s.is_alive(), "submit never landed while draining"
+    while t.is_alive():              # let the drain finish everything
+        gate.release()
+        t.join(0.01)
+    assert order and order[0] == "submit", order
+    fut2 = got["fut2"]
+    assert fut1.done() and fut2.done()
+    assert fut2.result().supersteps == 2   # drained by the same drain
+
+
+def test_compile_wall_excluded_from_busy_time():
+    """Regression: a traced step's wall must land in compile_time_s, not
+    busy_time_s (which feeds qps_busy/TEPS) — only the EWMA was guarded
+    before."""
+
+    class _RecordingStats:
+        def __init__(self):
+            self.busy, self.compile, self.superstep = [], [], []
+            self.pump_steps = 0
+
+        def record_busy(self, w):
+            self.busy.append(w)
+
+        def record_compile(self, w):
+            self.compile.append(w)
+
+        def record_pump_step(self):
+            self.pump_steps += 1
+
+        def record_superstep_time(self, ck, w, n_steps=1):
+            self.superstep.append((ck, w))
+
+        def record_retire(self, messages, latency_ms):
+            pass
+
+        def record_query_depth(self, ck, supersteps):
+            pass
+
+        def record_tenant(self, tenant, **kw):
+            pass
+
+    stats = _RecordingStats()
+    sched, qclass = _fake_scheduler(stats=stats, trace_on_first_step=True)
+    fut = _submit_fake(sched, qclass, depth=3)
+    sched.pump()                     # first step traces
+    assert len(stats.compile) == 1
+    assert stats.busy == [] and stats.superstep == []
+    sched.pump()                     # steady-state step
+    assert len(stats.busy) == 1 and len(stats.superstep) == 1
+    assert len(stats.compile) == 1
+    assert stats.pump_steps == 2
+    sched.drain()
+    assert fut.result().supersteps == 3
+
+
+def test_service_compile_time_surfaced_in_stats(graph):
+    """End to end: the first continuous dispatch compiles; its wall goes
+    to compile_time_s and busy_time_s stays execution-only."""
+    svc = GraphQueryService(num_shards=4, max_batch=4,
+                            scheduling="continuous", slots=4)
+    svc.add_graph("g", graph, pad_multiple=16)
+    svc.query("g", "bfs", root=0, deadline_ms=60_000)
+    snap = svc.stats_snapshot()
+    assert snap["compile_time_s"] > 0.0
+    assert snap["busy_time_s"] > 0.0
+    # the compile (seconds of tracing) dwarfs the executed supersteps
+    assert snap["compile_time_s"] > snap["busy_time_s"]
 
 
 # ---------------------------------------------------------------------------

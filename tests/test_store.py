@@ -1,17 +1,24 @@
 """Multi-tenant GraphStore: versioned residency under a memory budget.
 
 Covers the store's contract (LRU eviction, query pins, transparent
-refault, atomic version publish), the tenancy policy layer (token
-buckets, fair-share weights), and the service-level integration:
+refault, atomic version publish), the host-spill residency tier
+(device -> host spill -> discard; refault = re-upload, bit-identical,
+zero re-traces; spill_budget overflow degrades to discard), the
+out-of-lock fault path (double-faulting threads share one
+materialization; a fault in progress blocks neither other entries'
+store operations nor other tenants' submits), the tenancy policy layer
+(token buckets, fair-share weights), and the service-level integration:
 re-register-as-publish semantics, eviction/pin races (a query in flight
 on a graph chosen for eviction completes bit-identically), version-swap
 isolation (old-version results unaffected by publish), stale-plan
-invalidation scoped to the evicted version, and weighted fair share.
+invalidation scoped to the discarded version, and weighted fair share.
 A shard_map-backend variant runs in a subprocess (multi-device rules).
 """
 import os
 import subprocess
 import sys
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -177,6 +184,362 @@ def test_peek_requires_residency_and_remove_refuses_pins(g_a, g_b):
     store.remove("b")
     with pytest.raises(KeyError):
         store.latest_version("b")
+
+
+# ---------------------------------------------------------------------------
+# host-spill residency tier
+# ---------------------------------------------------------------------------
+
+def test_eviction_spills_to_host_and_refaults_cheaply(g_a, g_b):
+    """A budget eviction demotes to the host tier; the next acquire is a
+    spilled refault (no partitioner re-run) that is array-for-array the
+    original layout."""
+    budget = _budget_for(g_a, 1.5)
+    store = GraphStore(budget_bytes=budget, num_shards=4, pad_multiple=16)
+    store.publish("a", g_a)
+    with store.acquire("a") as lease:
+        before = lease.pg
+    store.publish("b", g_b)                       # evicts idle "a" -> spill
+    desc = {e["graph_id"]: e for e in store.describe()}
+    assert not desc["a"]["resident"] and desc["a"]["spilled"]
+    snap = store.snapshot()
+    assert snap["spills"] == 1 and snap["discards"] == 0
+    assert snap["spilled_graphs"] == 1 and snap["spilled_bytes"] > 0
+    with store.acquire("a") as lease:             # refault from host tier
+        assert lease.pg is before     # the spilled arrays survive verbatim
+    snap = store.snapshot()
+    assert snap["faults"] == 1
+    assert snap["refault_upload_ms"] >= 0.0
+
+
+def test_spill_budget_overflow_discards_lru(g_a, g_b, g_c):
+    """Host-tier overflow degrades to the pre-spill behavior: the LRU
+    spilled layout is discarded and its next fault is cold."""
+    budget = _budget_for(g_a, 1.5)
+    store = GraphStore(budget_bytes=budget, num_shards=4, pad_multiple=16,
+                       spill_budget_bytes=budget)   # host tier fits one
+    store.publish("a", g_a)
+    store.publish("b", g_b)                       # "a" spilled
+    store.publish("c", g_c)                       # "b" spilled -> "a" out
+    snap = store.snapshot()
+    assert snap["spills"] == 2
+    assert snap["discards"] == 1
+    desc = {e["graph_id"]: e for e in store.describe()}
+    assert not desc["a"]["resident"] and not desc["a"]["spilled"]
+    assert desc["b"]["spilled"]
+    with store.acquire("a") as lease:             # cold fault re-partitions
+        assert lease.pg.num_vertices == g_a.num_vertices
+    assert store.faults == 1
+
+
+def test_spill_disabled_restores_discard_on_evict(g_a, g_b):
+    """spill_budget_bytes=0 turns the host tier off entirely."""
+    budget = _budget_for(g_a, 1.5)
+    store = GraphStore(budget_bytes=budget, num_shards=4, pad_multiple=16,
+                       spill_budget_bytes=0)
+    store.publish("a", g_a)
+    store.publish("b", g_b)
+    snap = store.snapshot()
+    assert snap["evictions"] == 1
+    assert snap["spills"] == 0 and snap["discards"] == 1
+    assert snap["spilled_graphs"] == 0
+
+
+def test_spill_refault_keeps_plans_zero_retrace(g_a, g_b):
+    """The acceptance invariant: spill -> refault round-trips
+    bit-identically AND re-traces nothing — the plan cache keeps the
+    spilled version's engines/plans and only re-uploads their arrays."""
+    budget = _budget_for(g_a, 1.5)
+    svc = GraphQueryService(num_shards=4, max_batch=4, slots=4,
+                            scheduling="continuous",
+                            memory_budget=budget, result_cache_size=0)
+    svc.add_graph("a", g_a, pad_multiple=16)
+    svc.add_graph("b", g_b, pad_multiple=16)
+    res_a0 = svc.query("a", "bfs", root=0, deadline_ms=60_000)
+    svc.query("b", "bfs", root=0, deadline_ms=60_000)   # spills "a"
+    snap0 = svc.stats_snapshot()
+    assert snap0["plan_traces"] > 0
+    assert snap0["store_spills"] >= 1
+    assert {e["graph_id"]: e for e in svc.store.describe()}["a"]["spilled"]
+    res_a1 = svc.query("a", "bfs", root=0, deadline_ms=60_000)  # refault
+    snap1 = svc.stats_snapshot()
+    assert snap1["plan_traces"] == snap0["plan_traces"]   # ZERO re-traces
+    assert snap1["store_faults"] >= snap0["store_faults"] + 1
+    assert snap1["store_discards"] == 0
+    pg_a = PT.partition_graph(g_a, 4, pad_multiple=16)
+    ref = Engine(ALG.bfs(0), pg_a, mode="gravfm", backend="ref").run()
+    for res in (res_a0, res_a1):
+        assert np.array_equal(res.state["parent"], ref.state["parent"])
+        assert res.supersteps == ref.supersteps
+        assert res.messages == ref.messages
+
+
+def test_engine_offload_upload_roundtrip_zero_retrace(g_a):
+    """The engine tier of the spill: offload demotes the graph arrays to
+    host copies, upload promotes them back, and neither move re-traces
+    or changes results."""
+    pg = PT.partition_graph(g_a, 4, pad_multiple=16)
+    eng = Engine(ALG.bfs(), pg, mode="gravfm", backend="ref")
+    before = eng.run(root=0)
+    traces0 = eng.traces
+    freed = eng.offload()
+    assert freed > 0 and not eng.device_resident
+    assert eng.offload() == 0                     # idempotent
+    mid = eng.run(root=0)                         # offloaded still works
+    assert eng.upload() >= 0.0 and eng.device_resident
+    assert eng.upload() == 0.0                    # idempotent
+    after = eng.run(root=0)
+    assert eng.traces == traces0                  # no re-trace either way
+    for res in (mid, after):
+        assert np.array_equal(res.state["parent"], before.state["parent"])
+
+
+# ---------------------------------------------------------------------------
+# out-of-lock faulting
+# ---------------------------------------------------------------------------
+
+def test_concurrent_faults_share_one_materialization(g_a, g_b, monkeypatch):
+    """Two threads faulting the same discarded entry: the first claims
+    the build, the second waits on the ENTRY's condvar, and exactly one
+    partitioner run happens."""
+    from repro.store import registry as reg
+    budget = _budget_for(g_a, 1.5)
+    store = GraphStore(budget_bytes=budget, num_shards=4, pad_multiple=16,
+                       spill_budget_bytes=0)      # force a cold fault
+    store.publish("a", g_a)
+    store.publish("b", g_b)                       # "a" discarded
+    real = reg.partition_graph
+    calls = []
+
+    def counting(graph, *args, **kwargs):
+        calls.append(graph)
+        time.sleep(0.05)                          # widen the race window
+        return real(graph, *args, **kwargs)
+
+    monkeypatch.setattr(reg, "partition_graph", counting)
+    leases = [None, None]
+
+    def fault(i):
+        leases[i] = store.acquire("a")
+
+    threads = [threading.Thread(target=fault, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert len(calls) == 1                        # one build, shared
+    assert leases[0].pg is leases[1].pg
+    assert store.faults == 1
+    desc = {e["graph_id"]: e for e in store.describe()}
+    assert desc["a"]["pins"] == 2
+    for lease in leases:
+        lease.release()
+
+
+def test_fault_in_progress_does_not_block_other_entries(g_a, g_b, g_c,
+                                                        monkeypatch):
+    """While tenant A's cold fault materializes (store lock RELEASED),
+    tenant B can acquire its resident graph and a third tenant can
+    publish — no head-of-line blocking on the registry."""
+    from repro.store import registry as reg
+    budget = _budget_for(g_a, 1.5)
+    store = GraphStore(budget_bytes=budget, num_shards=4, pad_multiple=16,
+                       spill_budget_bytes=0)
+    store.publish("a", g_a)
+    store.publish("b", g_b)                       # "a" discarded
+    real = reg.partition_graph
+    entered, gate = threading.Event(), threading.Event()
+
+    def gated(graph, *args, **kwargs):
+        if graph is g_a:                          # block only A's build
+            entered.set()
+            assert gate.wait(30)
+        return real(graph, *args, **kwargs)
+
+    monkeypatch.setattr(reg, "partition_graph", gated)
+    done = {}
+
+    def fault_a():
+        done["a"] = store.acquire("a")
+
+    t = threading.Thread(target=fault_a)
+    t.start()
+    try:
+        assert entered.wait(30)                   # A's build is in flight
+        lease_b = store.acquire("b")              # resident: returns at once
+        assert lease_b.pg is not None
+        assert store.publish("c", g_c) == 1       # full publish+materialize
+        assert store.snapshot()["graphs"] == 3
+        assert "a" not in done                    # A genuinely still faulting
+        lease_b.release()
+    finally:
+        gate.set()
+        t.join(30)
+    assert done["a"].pg.num_vertices == g_a.num_vertices
+    done["a"].release()
+
+
+def test_tenant_fault_does_not_block_other_tenant_queries(g_a, g_b,
+                                                          monkeypatch):
+    """Service-level head-of-line check: a tenant-A fault in progress
+    must not block a tenant-B submit/flush round-trip."""
+    from repro.store import registry as reg
+    budget = _budget_for(g_a, 1.5)
+    svc = GraphQueryService(num_shards=4, max_batch=4, slots=4,
+                            scheduling="continuous", memory_budget=budget,
+                            spill_budget=0, result_cache_size=0)
+    svc.add_graph("a", g_a, pad_multiple=16)
+    svc.add_graph("b", g_b, pad_multiple=16)      # "a" discarded
+    svc.query("b", "bfs", root=0, deadline_ms=60_000)   # warm B's plans
+    real = reg.partition_graph
+    entered, gate = threading.Event(), threading.Event()
+
+    def gated(graph, *args, **kwargs):
+        if graph is g_a:
+            entered.set()
+            assert gate.wait(60)
+        return real(graph, *args, **kwargs)
+
+    monkeypatch.setattr(reg, "partition_graph", gated)
+    res_holder = {}
+
+    def tenant_a():
+        res_holder["a"] = svc.query("a", "bfs", root=0, tenant="A",
+                                    deadline_ms=600_000)
+
+    t = threading.Thread(target=tenant_a)
+    t.start()
+    try:
+        assert entered.wait(30)                   # A blocked mid-fault
+        res_b = svc.query("b", "bfs", root=1, tenant="B",
+                          deadline_ms=60_000)     # full submit->result
+        assert res_b.supersteps > 0
+        assert "a" not in res_holder
+    finally:
+        gate.set()
+        t.join(60)
+    pg_a = PT.partition_graph(g_a, 4, pad_multiple=16)
+    ref = Engine(ALG.bfs(0), pg_a, mode="gravfm", backend="ref").run()
+    assert np.array_equal(res_holder["a"].state["parent"],
+                          ref.state["parent"])
+
+
+def test_publish_during_fault_does_not_resurrect_retired_version(
+        g_a, g_b, g_c, monkeypatch):
+    """A publish landing while an unpinned version's fault materializes
+    retires that version (pins==0); the builder must then DROP its
+    build — not install into the tombstone and lease a superseded
+    version."""
+    from repro.store import registry as reg
+    budget = _budget_for(g_a, 1.5)
+    store = GraphStore(budget_bytes=budget, num_shards=4, pad_multiple=16,
+                       spill_budget_bytes=0)
+    store.publish("a", g_a)
+    store.publish("b", g_b)                       # "a" v1 discarded
+    real = reg.partition_graph
+    entered, gate = threading.Event(), threading.Event()
+
+    def gated(graph, *args, **kwargs):
+        if graph is g_a:
+            entered.set()
+            assert gate.wait(30)
+        return real(graph, *args, **kwargs)
+
+    monkeypatch.setattr(reg, "partition_graph", gated)
+    result = {}
+
+    def fault_v1():
+        try:
+            result["lease"] = store.acquire("a", 1)
+        except StoreError as exc:
+            result["err"] = exc
+
+    t = threading.Thread(target=fault_v1)
+    t.start()
+    try:
+        assert entered.wait(30)                   # v1's build in flight
+        assert store.publish("a", g_c) == 2       # v1 (pins==0) retires
+    finally:
+        gate.set()
+        t.join(30)
+    assert "lease" not in result
+    assert "superseded" in str(result["err"])
+    desc = {e["version"]: e for e in store.describe()
+            if e["graph_id"] == "a"}
+    assert not desc[1]["resident"]                # tombstone stayed dead
+    with store.acquire("a") as lease:
+        assert lease.version == 2
+
+
+def test_explicit_discard_refused_while_refault_in_flight(g_a, g_b):
+    """evict(spill=False) during an in-progress refault must refuse (the
+    build is reading the spilled layout; discarding would also drop the
+    version's plans mid-refault)."""
+    budget = _budget_for(g_a, 1.5)
+    store = GraphStore(budget_bytes=budget, num_shards=4, pad_multiple=16)
+    store.publish("a", g_a)
+    store.publish("b", g_b)                       # "a" spilled
+    entered, gate = threading.Event(), threading.Event()
+
+    def gated_refault(graph_id, version):
+        entered.set()
+        assert gate.wait(30)
+
+    store.add_refault_listener(gated_refault)
+    result = {}
+
+    def fault():
+        result["lease"] = store.acquire("a")
+
+    t = threading.Thread(target=fault)
+    t.start()
+    try:
+        assert entered.wait(30)                   # refault mid-build
+        assert store.evict("a", spill=False) is False
+        assert store.snapshot()["discards"] == 0
+    finally:
+        gate.set()
+        t.join(30)
+    assert result["lease"].pg.num_vertices == g_a.num_vertices
+    result["lease"].release()
+
+
+# ---------------------------------------------------------------------------
+# publish validation + superseded-acquire guard (bugfix regressions)
+# ---------------------------------------------------------------------------
+
+def test_publish_rejects_nonpositive_spec(g_a):
+    """Explicit zeros must raise, not silently take the defaults."""
+    store = GraphStore(num_shards=4, pad_multiple=16)
+    with pytest.raises(StoreError, match="num_shards"):
+        store.publish("g", g_a, num_shards=0)
+    with pytest.raises(StoreError, match="num_shards"):
+        store.publish("g", g_a, num_shards=-2)
+    with pytest.raises(StoreError, match="pad_multiple"):
+        store.publish("g", g_a, pad_multiple=0)
+    with pytest.raises(StoreError, match="method"):
+        store.publish("g", g_a, method="nope")
+    assert store.known_version("g") == 0          # nothing registered
+
+
+def test_acquire_superseded_nonresident_raises(g_a, g_b):
+    """A superseded version whose retirement is pending must not be
+    re-materialized by a late acquire — only re-pinning the
+    still-resident drain is legal."""
+    store = GraphStore(num_shards=4, pad_multiple=16)
+    store.publish("g", g_a)
+    lease = store.acquire("g", 1)
+    store.publish("g", g_b)                       # v1 superseded, draining
+    # re-pinning the resident draining version is the dispatch path
+    store.acquire("g", 1).release()
+    # the un-drained window: v1 loses device residency while registered
+    store._versions[("g", 1)].pg = None
+    with pytest.raises(StoreError, match="superseded"):
+        store.acquire("g", 1)
+    lease.release()                               # drain completes
+    assert store.latest_version("g") == 2
+    with store.acquire("g") as lease2:
+        assert lease2.version == 2
 
 
 # ---------------------------------------------------------------------------
