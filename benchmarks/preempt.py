@@ -1,0 +1,116 @@
+"""Preemption under deep background load: tight-deadline foreground
+arrivals vs slot-hogging deep queries.
+
+The workload is the mixed-depth serving graph (uniform core + a
+disconnected deep line tail): background tenants keep every lane busy
+with tail-rooted BFS (~tail-length supersteps each), while a foreground
+tenant submits shallow core-rooted BFS (~4 supersteps) with a tight
+deadline and ``priority=1``. Without preemption a foreground query
+waits for a whole background lane to retire — its latency is the
+background's *remaining depth*. With preemption the scheduler
+checkpoints the laxest background lane's carry to host (zero
+re-traces), admits the foreground query into the freed slot, and
+restores the parked lane afterwards — foreground latency collapses to
+its own depth while background queries still complete bit-identically.
+
+``GRAVFM_BENCH_CI=1`` shrinks the workload and exits non-zero unless
+  * foreground p95 improves >= 3x with preemption on vs off,
+  * at least one lane was actually preempted and restored, and
+  * the preempted queries completed with ZERO re-traces after warm
+    (``plan_traces`` flat across every park/restore cycle).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.service import GraphQueryService, QueryRequest
+
+from .common import emit
+from .continuous import _mixed_graph
+
+
+def preempt():
+    ci = bool(os.environ.get("GRAVFM_BENCH_CI"))
+    n_core, deg, tail = (1024, 8.0, 48) if ci else (4096, 16.0, 96)
+    slots = 4
+    n_fg = 8 if ci else 16
+    n_bg = 8 if ci else 16
+
+    g = _mixed_graph(n_core, deg, tail)
+    rng = np.random.default_rng(0)
+    fg_roots = rng.integers(0, n_core, size=n_fg).astype(np.int32)
+    # all background roots sit at the tail head: every lane is ~tail
+    # supersteps deep, so without preemption a foreground arrival waits
+    # most of a full tail traversal for its slot
+    bg_roots = [n_core + (i % 4) for i in range(n_bg)]
+
+    def measure(preemption: bool) -> dict:
+        svc = GraphQueryService(num_shards=4, max_batch=slots, slots=slots,
+                                scheduling="continuous",
+                                result_cache_size=0,
+                                preemption=preemption)
+        svc.add_graph("mixed", g)
+        svc.warm("mixed", "bfs")     # incl. the park/restore programs
+        traces0 = svc.stats_snapshot()["plan_traces"]
+        # background load: deep queries saturate every lane
+        bg = [svc.submit(QueryRequest("mixed", "bfs", {"root": int(r)},
+                                      deadline_ms=600_000, tenant="batch"))
+              for r in bg_roots]
+        for _ in range(3):
+            svc.poll()               # lanes fill and go deep
+        # foreground: tight-deadline arrivals, one at a time (each must
+        # cut ahead of the in-flight deep herd to meet its deadline)
+        fg_lat_ms = []
+        for r in fg_roots:
+            req = QueryRequest("mixed", "bfs", {"root": int(r)},
+                               deadline_ms=25, priority=1,
+                               tenant="online")
+            fut = svc.submit(req)
+            while not fut.done():
+                svc.poll()
+            fg_lat_ms.append(
+                (time.perf_counter() - req.arrival_s) * 1e3)
+            svc.poll()               # background keeps making progress
+        svc.flush()                  # drain (and restore) the background
+        for f in bg:
+            assert f.result().supersteps > 0
+        snap = svc.stats_snapshot()
+        fg_lat_ms.sort()
+        p95 = fg_lat_ms[int(0.95 * (len(fg_lat_ms) - 1))]
+        tag = "on" if preemption else "off"
+        emit(f"preempt_{tag}_fg", p95 * 1e3,    # us column = p95
+             f"p50_ms={fg_lat_ms[len(fg_lat_ms) // 2]:.2f};"
+             f"p95_ms={p95:.2f};"
+             f"preemptions={snap['preemptions']};"
+             f"restores={snap['lane_restores']};"
+             f"park_restore_ms={snap['park_restore_ms']:.2f};"
+             f"retraces={snap['plan_traces'] - traces0}")
+        snap["fg_p95_ms"] = p95
+        snap["retraces"] = snap["plan_traces"] - traces0
+        return snap
+
+    on = measure(True)
+    off = measure(False)
+    speedup = off["fg_p95_ms"] / max(on["fg_p95_ms"], 1e-9)
+    emit("preempt_fg_p95_speedup", 0.0, f"x{speedup:.2f}")
+
+    if ci:
+        if on["preemptions"] < 1 or on["lane_restores"] < 1:
+            raise SystemExit(
+                f"preemption never fired: preemptions="
+                f"{on['preemptions']} restores={on['lane_restores']}")
+        if on["retraces"] != 0:
+            raise SystemExit(
+                f"park/restore cycles re-traced {on['retraces']} "
+                "programs after warm — the zero-re-trace contract broke")
+        if on["parked_lanes"] != 0:
+            raise SystemExit(
+                f"{on['parked_lanes']} lanes left parked after drain")
+        if speedup < 3.0:
+            raise SystemExit(
+                f"foreground p95 speedup x{speedup:.2f} < x3.0 "
+                f"(on={on['fg_p95_ms']:.2f}ms off={off['fg_p95_ms']:.2f}"
+                "ms) — preemption regression")

@@ -8,6 +8,7 @@ import sys
 
 from . import continuous as CONT
 from . import paper_figures as PF
+from . import preempt as PRE
 from . import roofline_table as RT
 from . import service as SVC
 from . import substrate as SUB
@@ -29,6 +30,7 @@ ALL = {
     "service": SVC.service_throughput,
     "continuous": CONT.continuous_vs_bucketed,
     "tenancy": TEN.tenancy,
+    "preempt": PRE.preempt,
 }
 
 

@@ -364,6 +364,14 @@ class Engine:
         buffers (vs host-spill numpy copies)."""
         return self._device_resident
 
+    @property
+    def device_nbytes(self) -> int:
+        """Bytes of the engine-tier graph layout (the pytree the jitted
+        programs are driven with — exactly what :meth:`offload` demotes).
+        The GraphStore charges these true engine-tier bytes against its
+        budget instead of the partition-layout proxy."""
+        return int(sum(a.nbytes for a in jax.tree.leaves(self._data)))
+
     def offload(self) -> int:
         """Demote the graph's device arrays to host (numpy) copies — the
         engine tier of the GraphStore's host-spill residency. The traced

@@ -671,6 +671,13 @@ class ShardEngine:
             })
         return out
 
+    @property
+    def device_nbytes(self) -> int:
+        """Engine-tier graph bytes (0 when built meta-only)."""
+        if self._data is None:
+            return 0
+        return int(sum(a.nbytes for a in jax.tree.leaves(self._data)))
+
     # ---------------- step-granular entry point ------------------------
     def make_stepper(self, width: int) -> "ShardLaneStepper":
         """Host-drivable ``width``-lane slot array over the explicit
@@ -729,7 +736,18 @@ class ShardLaneStepper(LaneStepperBase):
         self.eng = eng
         self.width = width
         self._fns = None  # (init, admit, step) jitted shard_map programs
+        self._restore = None   # built with the other programs
         self._probe = jax.jit(self._probe_of)
+
+        def fetch_lane_fn(carry, lane):
+            eng.traces += 1  # trace-time side effect (see Engine.traces)
+            # checkpoint gathers ONLY the lane's per-shard slices
+            # (leaves (P, ...)), never the whole (P, W, ...) slot array
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, lane, 1, keepdims=False), carry)
+
+        self._fetch_lane = jax.jit(fetch_lane_fn)
 
     @staticmethod
     def _probe_of(carry):
@@ -779,6 +797,19 @@ class ShardLaneStepper(LaneStepperBase):
             return readd(select_lanes(
                 alive, jax.vmap(lambda cc: prog.step(d, cc))(c), c))
 
+        def restore_fn(carry, lane_c, fresh):
+            eng.traces += 1
+            c, lc = strip(carry), strip(lane_c)
+            # splice the parked lane's per-shard carry slices back via
+            # the admit-path select: bit-identical resume
+            new = jax.tree.map(
+                lambda leaf: jnp.broadcast_to(
+                    leaf[None], (self.width,) + leaf.shape), lc)
+            return readd(select_lanes(fresh, new, c))
+
+        # a checkpoint slice drops the lane axis: leaves (P, ...)
+        ckpt_spec = jax.tree.map(lambda _: P(AXIS), carry_struct)
+
         init_sm = _shard_map(init_fn, mesh=eng.mesh,
                              in_specs=(data_spec, qspec),
                              out_specs=carry_spec)
@@ -789,6 +820,10 @@ class ShardLaneStepper(LaneStepperBase):
         step_sm = _shard_map(step_fn, mesh=eng.mesh,
                              in_specs=(data_spec, carry_spec, lane_spec),
                              out_specs=carry_spec)
+        restore_sm = _shard_map(restore_fn, mesh=eng.mesh,
+                                in_specs=(carry_spec, ckpt_spec,
+                                          lane_spec),
+                                out_specs=carry_spec)
 
         # fuse the lane probe into the same dispatch (see LaneStepper)
         def with_probe(sm):
@@ -799,6 +834,7 @@ class ShardLaneStepper(LaneStepperBase):
 
         self._fns = (with_probe(init_sm), with_probe(admit_sm),
                      with_probe(step_sm))
+        self._restore = with_probe(restore_sm)
 
     def init(self, qkw):
         q = self._qdev(qkw)

@@ -30,17 +30,33 @@ The same traced ``step`` is then driven three ways:
 Both engines parameterize the program with their own ``deliver`` (which
 collective moves the updates) and stats fold; the loop structure lives
 here once.
+
+Because the carry is explicit, a lane is *preemptible*: between
+supersteps its carry slice is host-fetchable (``fetch_lane``) and can be
+spliced back later (``restore``) to resume bit-identically — something a
+whole-run ``lax.while_loop`` can never offer. :class:`LaneTable` packages
+that lifecycle (slot occupancy, per-lane scheduling metadata, the
+checkpoint/restore verbs) for the service's continuous scheduler.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Optional
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["StepCarry", "SuperstepProgram", "LaneStepper",
-           "LaneStepperBase", "select_lanes"]
+           "LaneStepperBase", "select_lanes",
+           "LaneMeta", "LaneCheckpoint", "LaneTable", "lane_dtype",
+           "PRIORITY_BOOST_S"]
+
+# One request-priority level is worth this many seconds of deadline
+# urgency. Kept finite (rather than a lexicographic priority dimension)
+# so a parked lane's deadline-aging credit can eventually exceed ANY
+# priority boost — the starvation-freedom guarantee.
+PRIORITY_BOOST_S = 60.0
 
 
 class StepCarry(NamedTuple):
@@ -137,7 +153,9 @@ class LaneStepperBase:
     LaneStepper below and engine_shardmap's ShardLaneStepper): the
     (carry, lane_active, supersteps) return contract, kwarg upload, and
     host fetch. Subclasses provide the jitted ``_init``/``_admit``/
-    ``_step``/``_probe`` programs."""
+    ``_step``/``_probe``/``_fetch_lane``/``_restore`` programs (the
+    lane-indexing axis differs: the global-array stepper's carry leads
+    with the lane axis, the shard stepper's with the shard axis)."""
 
     @staticmethod
     def _unpack(out):
@@ -154,6 +172,29 @@ class LaneStepperBase:
 
     def fetch(self, carry: StepCarry) -> StepCarry:
         return jax.tree.map(np.asarray, carry)
+
+    def fetch_lane(self, carry: StepCarry, lane: int) -> StepCarry:
+        """Host copy of exactly ONE lane's carry slice (the checkpoint
+        payload): only that lane's bytes cross the device->host boundary,
+        not the whole slot array. The lane index is a traced scalar, so
+        parking different lanes re-traces nothing."""
+        return jax.tree.map(np.asarray,
+                            self._fetch_lane(carry, jnp.int32(lane)))
+
+    def restore(self, carry: StepCarry, lane_carry: StepCarry,
+                fresh: np.ndarray):
+        """Splice a checkpointed lane's carry back into ``fresh`` slots
+        of the in-flight slot array — the admit-path select with the
+        parked carry instead of a fresh ``init_carry``, so the lane
+        resumes bit-identically from its parked superstep (state,
+        superstep counter and running stats all survive verbatim)."""
+        if getattr(self, "_restore", None) is None:
+            raise RuntimeError(
+                "stepper has no compiled programs yet; init() a slot "
+                "array before restoring a checkpoint into it")
+        lane_dev = jax.tree.map(jnp.asarray, lane_carry)
+        return self._unpack(self._restore(carry, lane_dev,
+                                          jnp.asarray(fresh)))
 
     def bind_data(self, data) -> None:
         """Swap the graph-layout pytree the jitted programs are driven
@@ -213,11 +254,28 @@ class LaneStepper(LaneStepperBase):
             c = select_lanes(alive, new, carry)
             return (c, *probe_of(c))
 
+        def fetch_lane_fn(carry, lane):
+            hook()
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, lane, 0, keepdims=False), carry)
+
+        def restore_fn(carry, lane_carry, fresh):
+            hook()
+            new = jax.tree.map(
+                lambda leaf: jnp.broadcast_to(leaf[None],
+                                              (width,) + leaf.shape),
+                lane_carry)
+            c = select_lanes(fresh, new, carry)
+            return (c, *probe_of(c))
+
         self._data = data
         self._init = jax.jit(init_fn)
         self._admit = jax.jit(admit_fn)
         self._step = jax.jit(step_fn)
         self._probe = jax.jit(probe_of)
+        self._fetch_lane = jax.jit(fetch_lane_fn)
+        self._restore = jax.jit(restore_fn)
 
     def init(self, qkw: Dict[str, np.ndarray]):
         return self._unpack(self._init(self._data, self._qdev(qkw)))
@@ -231,3 +289,239 @@ class LaneStepper(LaneStepperBase):
     def step(self, carry: StepCarry, alive: np.ndarray):
         return self._unpack(self._step(self._data, carry,
                                        jnp.asarray(alive)))
+
+
+# ---------------------------------------------------------------------------
+# lane lifecycle: LaneTable + checkpoint/restore
+# ---------------------------------------------------------------------------
+
+def lane_dtype(value) -> np.dtype:
+    """Canonical lane-array dtype for a query kwarg (matches the int32 /
+    float32 the kernels trace with, so admits never change signature)."""
+    a = np.asarray(value)
+    if a.dtype.kind in "iub":
+        return np.dtype(np.int32)
+    if a.dtype.kind == "f":
+        return np.dtype(np.float32)
+    return a.dtype
+
+
+@dataclasses.dataclass
+class LaneMeta:
+    """Per-lane scheduling metadata. ``payload`` is opaque to the core
+    (the service stores its (request, future) pair there); everything
+    else is what admission, preemption and depth packing decide on.
+
+    ``credit_s`` is the deadline-aging credit a lane accrues while
+    parked: the scheduler subtracts it from ``deadline_s`` when ranking,
+    so a repeatedly preempted query becomes monotonically more urgent
+    and cannot starve (and, once restored, is not the first victim of
+    the next preemption)."""
+
+    payload: Any
+    qkw: Dict[str, Any]
+    tenant: str = "default"
+    priority: int = 0
+    deadline_s: float = float("inf")
+    predicted_depth: float = 0.0
+    credit_s: float = 0.0
+    parks: int = 0
+    seq: int = 0
+
+    def effective_deadline(self) -> float:
+        """Scalar urgency (smaller = more urgent): the deadline minus
+        the aging credit, with each priority level worth
+        :data:`PRIORITY_BOOST_S` seconds. Priority therefore dominates
+        ordinary deadline spreads, while a long-parked lane's credit
+        grows without bound and eventually outranks any priority."""
+        return (self.deadline_s - self.credit_s
+                - PRIORITY_BOOST_S * float(self.priority))
+
+
+@dataclasses.dataclass
+class LaneCheckpoint:
+    """One parked lane: the host copy of its carry slice plus its
+    metadata. ``restore`` splices the carry back into a free slot and
+    the query resumes bit-identically from ``superstep`` — state,
+    superstep counter and running stats are all part of the carry."""
+
+    carry: StepCarry
+    meta: LaneMeta
+    superstep: int
+    nbytes: int
+
+
+class LaneTable:
+    """First-class lane lifecycle for one stepper's W-wide slot array.
+
+    Owns slot occupancy, the device carry + host probe mirrors
+    (``act``/``steps``), the per-lane kwarg arrays, and the per-lane
+    :class:`LaneMeta`. The scheduler's policy (who gets a slot, who is
+    preempted) stays outside; the mechanics of the four lifecycle verbs
+    live here:
+
+      admit(assignments)    — splice fresh queries into free slots (one
+                              lane-masked device call for all of them)
+      step(alive)           — one superstep for the alive lanes
+      checkpoint(slot)      — fetch ONLY that lane's carry slice to host
+                              and free the slot (zero re-traces; the
+                              preemption "park" half)
+      restore(slot, ckpt)   — splice a parked carry back into a free
+                              slot via the admit-path select; the lane
+                              resumes bit-identically from its parked
+                              superstep
+
+    Freed/parked lanes' stale device carry stays in place until a later
+    admit/restore overwrites it — the lane-masked select never steps an
+    unoccupied lane, so it is inert.
+    """
+
+    def __init__(self, stepper, width: int, query_params):
+        self.stepper = stepper
+        self.width = width
+        self.query_params = tuple(query_params)
+        self.meta: List[Optional[LaneMeta]] = [None] * width
+        self.carry = None
+        self.act: Optional[np.ndarray] = None    # (W,) lane-alive probe
+        self.steps: Optional[np.ndarray] = None  # (W,) lane supersteps
+        self._qkw: Optional[Dict[str, np.ndarray]] = None
+
+    # ---------------- occupancy ---------------------------------------
+    @property
+    def occupied(self) -> np.ndarray:
+        return np.array([m is not None for m in self.meta], bool)
+
+    def in_flight(self) -> int:
+        return sum(m is not None for m in self.meta)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, m in enumerate(self.meta) if m is None]
+
+    def lanes_of(self, tenant: str) -> int:
+        return sum(1 for m in self.meta
+                   if m is not None and m.tenant == tenant)
+
+    def active_slots(self) -> List[int]:
+        return [i for i, m in enumerate(self.meta) if m is not None]
+
+    def alive_mask(self, cap: int) -> np.ndarray:
+        return self.occupied & self.act & (self.steps < cap)
+
+    def done_slots(self, cap: int) -> List[int]:
+        """Occupied lanes whose termination mask flipped or that hit the
+        superstep cap — ready to retire."""
+        return [i for i in range(self.width)
+                if self.meta[i] is not None
+                and (not self.act[i] or self.steps[i] >= cap)]
+
+    def lane_nbytes(self) -> int:
+        """Host bytes one lane's checkpoint occupies (every carry leaf's
+        lane axis divides its bytes evenly across the W lanes)."""
+        if self.carry is None:
+            return 0
+        return int(sum(a.nbytes for a in jax.tree.leaves(self.carry))
+                   // self.width)
+
+    def predicted_remaining(self, slot: int, residual: float = 1.0
+                            ) -> float:
+        """Predicted supersteps this lane still needs: its admission-time
+        depth prediction minus observed progress; a lane that outlived
+        its prediction falls back to the class's observed-depth residual
+        (the expected overshoot), floored at one superstep."""
+        m = self.meta[slot]
+        rem = m.predicted_depth - float(self.steps[slot])
+        return rem if rem > 0 else max(float(residual), 1.0)
+
+    # ---------------- lifecycle verbs ---------------------------------
+    def _ensure_qkw(self, meta: LaneMeta) -> None:
+        if self._qkw is None:
+            # lane arrays keyed by the kernel's DECLARED params (not one
+            # request's keys), seeded with this request's values — idle
+            # lanes then hold a valid query, like the bucketed batcher's
+            # padding lanes
+            self._qkw = {p: np.full((self.width,), meta.qkw[p],
+                                    dtype=lane_dtype(meta.qkw[p]))
+                         for p in self.query_params}
+
+    def admit(self, assignments: Dict[int, LaneMeta]) -> None:
+        """Splice fresh queries into the given free slots — one
+        lane-masked ``init_carry`` select for all of them."""
+        if not assignments:
+            return
+        fresh = np.zeros(self.width, bool)
+        # install EVERY meta before anything that can raise: a failure
+        # below (missing declared param, device error) then finds all
+        # affected lanes in the table, so the class-failure path can
+        # resolve their futures instead of stranding them
+        for slot, meta in assignments.items():
+            assert self.meta[slot] is None, f"slot {slot} occupied"
+            self.meta[slot] = meta
+            fresh[slot] = True
+        for slot, meta in assignments.items():
+            self._ensure_qkw(meta)
+            for p in self._qkw:
+                # a missing declared param raises here and fails the
+                # class loudly instead of silently reusing the slot's
+                # previous occupant's value
+                self._qkw[p][slot] = meta.qkw[p]
+        if self.carry is None:
+            self.carry, self.act, self.steps = self.stepper.init(self._qkw)
+        else:
+            self.carry, self.act, self.steps = self.stepper.admit(
+                self.carry, self._qkw, fresh)
+
+    def step(self, alive: np.ndarray) -> None:
+        self.carry, self.act, self.steps = self.stepper.step(
+            self.carry, alive)
+
+    def fetch(self) -> StepCarry:
+        return self.stepper.fetch(self.carry)
+
+    def release(self, slot: int) -> LaneMeta:
+        """Free one retired lane's slot; returns its metadata."""
+        meta = self.meta[slot]
+        self.meta[slot] = None
+        return meta
+
+    def checkpoint(self, slot: int) -> LaneCheckpoint:
+        """Park one lane: fetch its carry slice to host and free the
+        slot. The device never sees a shape change and the fetch is
+        jitted once, so parking re-traces nothing."""
+        meta = self.meta[slot]
+        assert meta is not None, f"slot {slot} is empty"
+        nbytes = self.lane_nbytes()
+        lane = self.stepper.fetch_lane(self.carry, slot)
+        self.meta[slot] = None
+        meta.parks += 1
+        return LaneCheckpoint(carry=lane, meta=meta,
+                              superstep=int(self.steps[slot]),
+                              nbytes=nbytes)
+
+    def restore(self, slot: int, ckpt: LaneCheckpoint) -> None:
+        """Un-park a checkpointed lane into a free slot. The splice goes
+        through the same lane-masked select as ``admit``, so the resumed
+        computation is bit-identical to never having been parked."""
+        assert self.meta[slot] is None, f"slot {slot} occupied"
+        meta = ckpt.meta
+        # meta first (see admit): a failure in the splice below must
+        # leave the lane visible to the class-failure path
+        self.meta[slot] = meta
+        self._ensure_qkw(meta)
+        for p in self._qkw:
+            self._qkw[p][slot] = meta.qkw[p]
+        if self.carry is None:
+            # empty table: materialize a carry first (idle lanes hold a
+            # valid dummy query), then overwrite the restored slot
+            self.carry, self.act, self.steps = self.stepper.init(self._qkw)
+        fresh = np.zeros(self.width, bool)
+        fresh[slot] = True
+        self.carry, self.act, self.steps = self.stepper.restore(
+            self.carry, ckpt.carry, fresh)
+
+    def clear(self) -> List[LaneMeta]:
+        """Drop every lane (class failure path); returns the metadata of
+        the lanes that were occupied."""
+        out = [m for m in self.meta if m is not None]
+        self.meta = [None] * self.width
+        self.carry = self.act = self.steps = None
+        return out

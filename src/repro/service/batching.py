@@ -51,7 +51,12 @@ class QueryRequest:
     ``query_params`` (e.g. ``{"root": 7}``) to scalars; ``deadline_ms``
     is the end-to-end latency budget the scheduler batches under;
     ``tenant`` selects the quota/fair-share policy the request is
-    admitted and scheduled under."""
+    admitted and scheduled under; ``priority`` (higher = more urgent)
+    feeds the continuous scheduler's deadline-priority ordering — each
+    level is worth :data:`~repro.core.stepper.PRIORITY_BOOST_S` (60 s)
+    of deadline urgency, so it dominates ordinary deadline spreads but
+    stays finite: deadlines more than 60 s apart (and long-parked
+    lanes' aging credit) can still outrank it."""
 
     graph_id: str
     kernel: str
@@ -59,6 +64,7 @@ class QueryRequest:
     mode: str = "gravfm"
     deadline_ms: float = 50.0
     tenant: str = "default"
+    priority: int = 0
     qid: int = dataclasses.field(default_factory=lambda: next(_qid_counter))
     arrival_s: float = dataclasses.field(default_factory=time.perf_counter)
 

@@ -157,6 +157,10 @@ class PlanCache:
         self._sync_lock = threading.Lock()
         self._engines: Dict[Tuple[str, int, str, str, int, str],
                             Engine] = {}
+        # bytes each engine reported to the store's budget (so a
+        # discard can un-charge exactly what was charged)
+        self._engine_nbytes: Dict[Tuple[str, int, str, str, int, str],
+                                  int] = {}
         self._plans: Dict[PlanKey, CompiledPlan] = {}
         self._steppers: Dict[PlanKey, StepperPlan] = {}
 
@@ -212,6 +216,13 @@ class PlanCache:
             eng = Engine(ALGORITHMS[key.kernel](), pg, mode=key.mode,
                          backend=key.backend)
             self._engines[ek] = eng
+            # charge the TRUE engine-tier device bytes against the
+            # store's budget (replacing the partition-layout proxy): a
+            # version serving two kernels holds two engines' arrays,
+            # and the budget should see both
+            nb = eng.device_nbytes
+            self._engine_nbytes[ek] = nb
+            self.store.note_engine_bytes(key.graph_id, key.version, nb)
         return eng
 
     def get_plan(self, key: PlanKey, *, method: str = "greedy",
@@ -281,6 +292,7 @@ class PlanCache:
         cached, and spilled-but-not-discarded versions keep their plans.
         Trace counts of dropped engines are folded into the stats first
         so ``plan_traces`` stays monotonic."""
+        freed = 0
         with self._sync_lock:
             self._sync_traces_locked()
             for ek in [k for k in list(self._engines)
@@ -288,6 +300,9 @@ class PlanCache:
                 eng = self._engines.pop(ek, None)
                 if eng is not None:
                     self._trace_floor += eng.traces
+                freed += self._engine_nbytes.pop(ek, 0)
+        if freed:
+            self.store.note_engine_bytes(graph_id, version, -freed)
         for pk in [k for k in list(self._plans)
                    if k.graph_id == graph_id and k.version == version]:
             self._plans.pop(pk, None)

@@ -53,6 +53,18 @@ tenant's submits. ``store_spills`` / ``store_spilled_bytes`` /
 ``store_discards`` / ``store_refault_upload_ms`` join the stats
 endpoint.
 
+Continuous lanes are **preemptible** (PR 5): admission is
+deadline-priority (``QueryRequest.priority``, then aged deadlines, then
+predicted depth — see continuous.py), and a tight-deadline arrival that
+finds every slot busy parks the laxest active lane's carry on the host
+(charged against the store's spill budget) and takes its slot; the
+parked query is restored bit-identically when a slot frees, with
+deadline aging guaranteeing it cannot starve. ``preemption=False``
+restores the strictly run-to-retire behavior; ``aging_rate`` tunes the
+starvation-protection clock. ``preemptions`` / ``parked_lanes`` /
+``lane_restores`` / ``park_restore_ms`` / ``depth_pred_abs_err`` join
+the stats endpoint.
+
 The paper's engine answers one traversal per elaborated design; this
 server is the ROADMAP's "heavy traffic" counterpart — many BFS/SSSP
 roots per superstep loop, one broadcast per superstep shared by the
@@ -94,6 +106,10 @@ class GraphQueryService:
                  max_supersteps: Optional[int] = None,
                  result_cache_size: int = 256,
                  admission_control: bool = False,
+                 preemption: bool = True,
+                 aging_rate: float = 4.0,
+                 preempt_margin_s: float = 0.05,
+                 depth_bucket_s: float = 0.1,
                  memory_budget: Optional[float] = None,
                  spill_budget: Optional[float] = None,
                  platform=None,
@@ -146,9 +162,22 @@ class GraphQueryService:
                 stats=self.stats, get_stepper=self._stepper_for,
                 on_result=self._store_result,
                 tenant_weight=self.tenants.weight,
-                acquire=self._acquire_class)
-        self._result_cache: "collections.OrderedDict[Any, EngineResult]" \
-            = collections.OrderedDict()
+                acquire=self._acquire_class,
+                preemption=preemption, aging_rate=aging_rate,
+                preempt_margin_s=preempt_margin_s,
+                depth_bucket_s=depth_bucket_s,
+                park_charge=self.store.reserve_parked,
+                park_release=self.store.release_parked)
+        # Result cache PARTITIONED BY TENANT: each tenant gets its own
+        # bounded LRU of ``result_cache_size`` entries, so one tenant's
+        # burst of novel queries cannot evict another tenant's hot
+        # results. The partition COUNT is itself LRU-bounded — tenant
+        # is a free-form request field, and without the cap a stream of
+        # distinct tenant names would grow the cache without limit.
+        self._result_cache: \
+            "collections.OrderedDict[str, collections.OrderedDict]" = \
+            collections.OrderedDict()
+        self._rc_max_tenants = 64
         # Leaf lock: _store_result is called from the scheduler thread
         # while it holds the continuous scheduler's lock, so the cache
         # must never share the service lock (ABBA deadlock with submit).
@@ -216,7 +245,13 @@ class GraphQueryService:
             carry, _, _ = splan.stepper.init(qkw)
             carry, _, _ = splan.stepper.admit(
                 carry, qkw, np.zeros(self._slots, bool))
-            splan.stepper.step(carry, np.zeros(self._slots, bool))
+            carry, _, _ = splan.stepper.step(
+                carry, np.zeros(self._slots, bool))
+            # pre-trace the preemption verbs too: parking and restoring
+            # lanes is then also a zero-re-trace steady-state operation
+            ckpt = splan.stepper.fetch_lane(carry, 0)
+            splan.stepper.restore(carry, ckpt,
+                                  np.zeros(self._slots, bool))
             self.plans.sync_trace_counters()
             return
         if batch_sizes is None:
@@ -272,6 +307,7 @@ class GraphQueryService:
             latency_ms = (time.perf_counter() - req.arrival_s) * 1e3
             self.stats.record_result_hit(latency_ms)
             self.stats.record_tenant(req.tenant, completed=1,
+                                     result_hits=1,
                                      latency_ms=latency_ms)
             return fut, qclass
         # Per-tenant quota: shed when the tenant's token bucket is dry.
@@ -339,9 +375,10 @@ class GraphQueryService:
         if known and version >= known:
             return      # budget eviction of the live version: still valid
         with self._rc_lock:
-            for k in [k for k in self._result_cache
-                      if k[0] == graph_id and k[1] == version]:
-                del self._result_cache[k]
+            for part in self._result_cache.values():
+                for k in [k for k in part
+                          if k[0] == graph_id and k[1] == version]:
+                    del part[k]
 
     def _result_key(self, req: QueryRequest, version: int):
         try:
@@ -368,15 +405,21 @@ class GraphQueryService:
 
     def _lookup_result(self, req: QueryRequest,
                        version: int) -> Optional[EngineResult]:
+        """Per-tenant partition lookup: a hit only ever comes from the
+        requesting tenant's own LRU, so partitions are also an isolation
+        boundary (tenant A can never observe whether tenant B ran a
+        query)."""
         if self.result_cache_size <= 0:
             return None
         key = self._result_key(req, version)
         if key is None:
             return None
         with self._rc_lock:
-            res = self._result_cache.get(key)
+            part = self._result_cache.get(req.tenant)
+            res = part.get(key) if part is not None else None
             if res is not None:
-                self._result_cache.move_to_end(key)
+                part.move_to_end(key)
+                self._result_cache.move_to_end(req.tenant)
         return self._copy_result(res) if res is not None else None
 
     def _store_result(self, req: QueryRequest, res: EngineResult,
@@ -388,10 +431,19 @@ class GraphQueryService:
             return
         res = self._copy_result(res)
         with self._rc_lock:
-            self._result_cache[key] = res
-            self._result_cache.move_to_end(key)
-            while len(self._result_cache) > self.result_cache_size:
-                self._result_cache.popitem(last=False)
+            part = self._result_cache.get(req.tenant)
+            if part is None:
+                part = self._result_cache[req.tenant] = \
+                    collections.OrderedDict()
+                while len(self._result_cache) > self._rc_max_tenants:
+                    self._result_cache.popitem(last=False)
+            part[key] = res
+            part.move_to_end(key)
+            self._result_cache.move_to_end(req.tenant)
+            # each tenant's partition is bounded independently — one
+            # tenant filling its own LRU evicts only its own entries
+            while len(part) > self.result_cache_size:
+                part.popitem(last=False)
 
     def _should_shed(self, req: QueryRequest, qclass: QueryClass) -> bool:
         """Deadline-infeasibility test from the class's observed cost
@@ -631,6 +683,8 @@ class GraphQueryService:
         snap: Dict[str, Any] = dict(self.stats.snapshot())
         snap["pending"] = self.pending()
         snap["scheduling"] = self.scheduling
+        snap["parked_lanes"] = (self._continuous.parked()
+                                if self._continuous is not None else 0)
         for k, v in self.store.snapshot().items():
             snap[f"store_{k}"] = v
         snap["tenants"] = self.stats.tenant_snapshot()

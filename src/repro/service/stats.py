@@ -46,6 +46,9 @@ class ServiceStats:
     plan_cache_misses: int = 0
     plan_traces: int = 0            # jit traces across all cached engines
     result_cache_hits: int = 0      # memoized EngineResults served
+    preemptions: int = 0            # lanes parked for tighter deadlines
+    lane_restores: int = 0          # parked lanes spliced back in
+    park_restore_ms: float = 0.0    # wall spent checkpointing/restoring
     supersteps_total: int = 0
     messages_total: int = 0         # traversed edges (TEPS numerator)
     busy_time_s: float = 0.0        # wall time spent EXECUTING dispatches
@@ -72,6 +75,11 @@ class ServiceStats:
         # whether a deadline is still feasible given the backlog.
         self._step_ms_ewma: Dict[str, float] = {}
         self._depth_ewma: Dict[str, float] = {}
+        # EWMA of |observed - predicted| supersteps per class: the
+        # depth-prediction residual the preemption victim ranking falls
+        # back to once a lane outlives its prediction, and the
+        # ``depth_pred_abs_err`` health metric in snapshot()
+        self._depth_err_ewma: Dict[str, float] = {}
 
     # ------------------------------------------------------------------
     def record_submit(self, n: int = 1) -> None:
@@ -102,7 +110,9 @@ class ServiceStats:
             self.plan_traces += n
 
     def record_result_hit(self, latency_ms: float) -> None:
-        """A memoized result resolved a query without execution."""
+        """A memoized result resolved a query without execution (the
+        caller also folds it into the tenant breakdown via
+        ``record_tenant(..., result_hits=1)``)."""
         with self._lock:
             self.result_cache_hits += 1
             self.queries_completed += 1
@@ -117,12 +127,14 @@ class ServiceStats:
         t = self._tenants.get(tenant)
         if t is None:
             t = self._tenants[tenant] = {
-                "submitted": 0, "completed": 0, "shed": 0, "messages": 0}
+                "submitted": 0, "completed": 0, "shed": 0, "messages": 0,
+                "result_cache_hits": 0}
             self._tenant_lat[tenant] = collections.deque(maxlen=512)
         return t
 
     def record_tenant(self, tenant: str, *, submitted: int = 0,
                       completed: int = 0, shed: int = 0, messages: int = 0,
+                      result_hits: int = 0,
                       latency_ms: Optional[float] = None) -> None:
         """Fold one event into ``tenant``'s breakdown (the service calls
         this alongside the aggregate counters)."""
@@ -132,6 +144,7 @@ class ServiceStats:
             t["completed"] += completed
             t["shed"] += shed
             t["messages"] += messages
+            t["result_cache_hits"] += result_hits
             if latency_ms is not None:
                 self._tenant_lat[tenant].append(latency_ms)
 
@@ -178,12 +191,36 @@ class ServiceStats:
         with self._lock:
             self._ewma(self._depth_ewma, class_key, float(supersteps))
 
+    def record_depth_error(self, class_key: str, abs_err: float) -> None:
+        """|observed - predicted| supersteps for one retired lane."""
+        with self._lock:
+            self._ewma(self._depth_err_ewma, class_key, float(abs_err))
+
+    def depth_residual(self, class_key: str) -> Optional[float]:
+        """EWMA depth-prediction absolute error for one class (None
+        until a prediction has been scored)."""
+        with self._lock:
+            return self._depth_err_ewma.get(class_key)
+
     def class_cost_model(self, class_key: str):
         """(EWMA superstep wall ms, EWMA supersteps per query); either is
         None until observed — admission control then admits everything."""
         with self._lock:
             return (self._step_ms_ewma.get(class_key),
                     self._depth_ewma.get(class_key))
+
+    # ---- preemption -----------------------------------------------------
+    def record_preempt(self, wall_s: float) -> None:
+        """One lane checkpointed (parked) to admit a tighter deadline."""
+        with self._lock:
+            self.preemptions += 1
+            self.park_restore_ms += wall_s * 1e3
+
+    def record_restore(self, wall_s: float) -> None:
+        """One parked lane spliced back into a free slot."""
+        with self._lock:
+            self.lane_restores += 1
+            self.park_restore_ms += wall_s * 1e3
 
     def record_pump_step(self) -> None:
         """One device superstep executed by the continuous scheduler —
@@ -222,6 +259,13 @@ class ServiceStats:
                 "plan_cache_misses": self.plan_cache_misses,
                 "plan_traces": self.plan_traces,
                 "result_cache_hits": self.result_cache_hits,
+                "preemptions": self.preemptions,
+                "lane_restores": self.lane_restores,
+                "park_restore_ms": self.park_restore_ms,
+                "depth_pred_abs_err": (
+                    sum(self._depth_err_ewma.values())
+                    / len(self._depth_err_ewma)
+                    if self._depth_err_ewma else 0.0),
                 "supersteps_total": self.supersteps_total,
                 "messages_total": self.messages_total,
                 "busy_time_s": self.busy_time_s,

@@ -58,10 +58,21 @@ Superseded versions are retired (a true discard of both tiers plus the
 host payloads) the moment their last pin drops — in-flight queries drain
 on version N while new arrivals bind N+1.
 
+Two further byte flows share the budgets (PR 5):
+
+  * **engine-tier accounting**: the plan cache reports every engine's
+    TRUE device bytes (:meth:`note_engine_bytes`); while on record they
+    replace the partition-layout proxy in the version's budget charge,
+    so a graph serving three kernels is charged all three engines.
+  * **parked lanes**: a preempted query's host-parked carry checkpoint
+    is charged against ``spill_budget_bytes``
+    (:meth:`reserve_parked`/:meth:`release_parked`) — the ParkedQueue
+    is bounded by the same host tier the spilled layouts live in.
+
 ``evictions`` / ``spills`` / ``discards`` / ``faults`` /
-``resident_bytes`` / ``spilled_bytes`` / ``refault_upload_ms`` are
-surfaced in :meth:`GraphStore.snapshot` and folded into the service's
-stats endpoint.
+``resident_bytes`` / ``spilled_bytes`` / ``refault_upload_ms`` /
+``parked_bytes`` are surfaced in :meth:`GraphStore.snapshot` and folded
+into the service's stats endpoint.
 """
 from __future__ import annotations
 
@@ -112,7 +123,9 @@ class _Version:
     pg: Optional[PartitionedGraph] = None       # None = not device-resident
     spilled: Optional[PartitionedGraph] = None  # host-spill copy
     part_of: Optional[np.ndarray] = None    # pinned partition assignment
-    nbytes: int = 0                         # layout cost (either tier)
+    nbytes: int = 0                         # charged cost (either tier)
+    layout_nbytes: int = 0                  # partition-layout proxy bytes
+    engine_bytes: int = 0                   # TRUE engine-tier device bytes
     pins: int = 0
     last_used: int = 0                      # LRU clock value
     superseded: bool = False
@@ -202,6 +215,12 @@ class GraphStore:
         self.faults = 0
         self.budget_overcommits = 0
         self.refault_upload_ms = 0.0    # wall spent promoting spilled
+        # host bytes of preempted lanes' parked carries (the continuous
+        # scheduler's ParkedQueue charges them here against the spill
+        # budget — a parked checkpoint is host-resident state exactly
+        # like a spilled layout)
+        self.parked_bytes = 0
+        self.lane_parks = 0             # reservations granted
 
     @property
     def _spill_enabled(self) -> bool:
@@ -454,6 +473,77 @@ class GraphStore:
         finally:
             self._fire_pending_spills()
 
+    # ---------------- engine-tier byte accounting ----------------------
+    def note_engine_bytes(self, graph_id: str, version: int,
+                          delta: int) -> None:
+        """Fold true engine-tier device bytes into the version's budget
+        charge. The plan cache reports ``+engine.device_nbytes`` when it
+        builds an engine against this version and the negative sum when
+        a discard drops them; while any engine bytes are on record they
+        replace the partition-layout proxy estimate (a version serving
+        several kernels/modes charges every engine's arrays). Unknown
+        (graph_id, version) pairs are ignored — the engine outlived the
+        version's removal."""
+        fire = False
+        try:
+            with self._lock:
+                entry = self._versions.get((graph_id, version))
+                if entry is None:
+                    return
+                entry.engine_bytes = max(0, entry.engine_bytes
+                                         + int(delta))
+                entry.nbytes = entry.engine_bytes or entry.layout_nbytes
+                if delta > 0:
+                    # a bigger charge may push the registry over budget
+                    fire = True
+                    self._evict_to_budget_locked()
+        finally:
+            if fire:
+                self._fire_pending_spills()
+
+    # ---------------- parked-lane (preemption) accounting --------------
+    def reserve_parked(self, nbytes: int) -> bool:
+        """Charge ``nbytes`` of a preempted lane's host-parked carry
+        checkpoint against the **spill budget** (parked carries are
+        host-resident state exactly like spilled layouts). Makes room by
+        discarding LRU spilled layouts first; returns ``False`` — the
+        scheduler then skips the preemption — when the budget cannot fit
+        the checkpoint. ``spill_budget_bytes=0`` (host tier disabled)
+        refuses every park; ``None`` (unbounded) accepts every park."""
+        nbytes = int(nbytes)
+        with self._lock:
+            if self.spill_budget_bytes is not None:
+                if self.spill_budget_bytes <= 0:
+                    return False
+                if self.parked_bytes + nbytes > self.spill_budget_bytes:
+                    # can never fit even with every spilled layout
+                    # discarded — refuse BEFORE the sweep, or an
+                    # infeasible park would destroy the host tier
+                    # (cold faults + re-traces) for nothing
+                    return False
+                # tentatively charge and let the ONE shared host-tier
+                # sweep make room (it discards LRU spilled layouts and
+                # honors the in-flight-refault guard); refuse if the
+                # checkpoint still does not fit once victims run out
+                self.parked_bytes += nbytes
+                self._spill_to_budget_locked()
+                total = self.parked_bytes + sum(
+                    e.nbytes for e in self._versions.values()
+                    if e.in_spill and not e.building)
+                if total > self.spill_budget_bytes:
+                    self.parked_bytes -= nbytes
+                    return False
+            else:
+                self.parked_bytes += nbytes
+            self.lane_parks += 1
+            return True
+
+    def release_parked(self, nbytes: int) -> None:
+        """Un-charge a parked carry (its lane was restored, retired, or
+        failed)."""
+        with self._lock:
+            self.parked_bytes = max(0, self.parked_bytes - int(nbytes))
+
     @property
     def resident_bytes(self) -> int:
         with self._lock:
@@ -491,6 +581,8 @@ class GraphStore:
                 "faults": self.faults,
                 "budget_overcommits": self.budget_overcommits,
                 "refault_upload_ms": float(self.refault_upload_ms),
+                "parked_bytes": float(self.parked_bytes),
+                "lane_parks": self.lane_parks,
             }
 
     def describe(self) -> List[Dict[str, object]]:
@@ -641,7 +733,10 @@ class GraphStore:
             entry.spilled = None
             if entry.part_of is None:
                 entry.part_of = pg.part_of
-            entry.nbytes = pg.device_nbytes
+            # charge: true engine-tier bytes once any engine reported
+            # them (note_engine_bytes), the layout proxy until then
+            entry.layout_nbytes = pg.device_nbytes
+            entry.nbytes = entry.engine_bytes or entry.layout_nbytes
             # a fresh layout is by definition the most recently used —
             # without this touch its last_used of 0 would make it the LRU
             # victim of the very budget sweep its own fault triggers
@@ -731,7 +826,8 @@ class GraphStore:
         while True:
             spilled = [e for e in self._versions.values()
                        if e.in_spill and not e.building]
-            if (sum(e.nbytes for e in spilled)
+            # parked lane carries share the host tier's budget
+            if (sum(e.nbytes for e in spilled) + self.parked_bytes
                     <= self.spill_budget_bytes or not spilled):
                 return
             # host-tier overflow degrades to the pre-spill behavior:

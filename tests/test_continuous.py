@@ -9,8 +9,6 @@ compile walls are accounted to ``compile_time_s`` instead of polluting
 ``busy_time_s``, and the linear-interpolation ``percentile`` fix."""
 import threading
 import time
-from concurrent.futures import Future
-from types import SimpleNamespace
 
 import numpy as np
 import pytest
@@ -21,7 +19,6 @@ from repro.core import partition as PT
 from repro.core.engine import Engine
 from repro.service import (AdmissionError, GraphQueryService, QueryClass,
                            QueryRequest, ServiceStats, percentile)
-from repro.service.continuous import ContinuousScheduler
 
 
 @pytest.fixture(scope="module")
@@ -289,79 +286,26 @@ def test_service_continuous_step_failure_fails_futures(graph):
 
 
 # ---------------------------------------------------------------------------
-# scheduler-lock + stats-accounting regressions (fake stepper harness)
+# scheduler-lock + stats-accounting regressions (fake stepper harness,
+# shared with tests/test_preempt.py)
 # ---------------------------------------------------------------------------
 
-class _FakeEngine:
-    """Engine stand-in: a query with kwarg depth=d is alive for d steps.
-    Optionally 'traces' on the first step (compile-wall accounting)."""
-
-    def __init__(self, trace_on_first_step=False):
-        self.traces = 0
-        self.kernel = SimpleNamespace(query_params=("depth",),
-                                      max_supersteps=None)
-        self._trace_pending = trace_on_first_step
-
-    def lane_result(self, host, lane):
-        return SimpleNamespace(messages=1,
-                               supersteps=int(host["steps"][lane]))
+from _fake_stepper import fake_scheduler as _fake_scheduler  # noqa: E402
+from _fake_stepper import submit_fake as _submit_fake  # noqa: E402
 
 
-class _FakeStepper:
-    """LaneStepper protocol over host arrays; ``step_hook`` fires inside
-    step() — while the scheduler lock is held — so tests can gate
-    superstep boundaries deterministically."""
-
-    def __init__(self, width, engine, step_hook=None):
-        self.width = width
-        self.engine = engine
-        self.step_hook = step_hook or (lambda: None)
-
-    def _probe(self, carry):
-        return carry["remaining"] > 0, carry["steps"].copy()
-
-    def init(self, qkw):
-        carry = {"remaining": qkw["depth"].astype(np.int64).copy(),
-                 "steps": np.zeros(self.width, np.int64)}
-        return (carry, *self._probe(carry))
-
-    def admit(self, carry, qkw, fresh):
-        carry = {k: v.copy() for k, v in carry.items()}
-        carry["remaining"][fresh] = qkw["depth"][fresh]
-        carry["steps"][fresh] = 0
-        return (carry, *self._probe(carry))
-
-    def step(self, carry, alive):
-        self.step_hook()
-        if self.engine._trace_pending:
-            self.engine.traces += 1
-            self.engine._trace_pending = False
-        carry = {k: v.copy() for k, v in carry.items()}
-        carry["remaining"][alive] -= 1
-        carry["steps"][alive] += 1
-        return (carry, *self._probe(carry))
-
-    def fetch(self, carry):
-        return carry
-
-
-def _fake_scheduler(slots=2, stats=None, trace_on_first_step=False,
-                    step_hook=None):
-    eng = _FakeEngine(trace_on_first_step)
-    splan = SimpleNamespace(engine=eng,
-                            stepper=_FakeStepper(slots, eng, step_hook),
-                            query_params=("depth",))
-    sched = ContinuousScheduler(slots=slots, stats=stats,
-                                get_stepper=lambda qc: splan)
-    qclass = QueryClass("g", "fake", "gravfm", 4, "ref", 1)
-    return sched, qclass
-
-
-def _submit_fake(sched, qclass, depth):
-    fut = Future()
-    sched.submit(qclass, QueryRequest("g", "fake", {"depth": depth},
-                                      deadline_ms=600_000), fut)
-    return fut
+def test_cancelled_straggler_does_not_livelock_class():
+    """Regression: a queued request cancelled before admission must be
+    purged by the next admission window — not pin pending() above zero
+    forever, and not starve another tenant's live query behind the
+    stride pick of an all-cancelled queue."""
+    sched, qclass = _fake_scheduler(slots=1)
+    dead = _submit_fake(sched, qclass, depth=3, tenant="a")
+    assert dead.cancel()
+    live = _submit_fake(sched, qclass, depth=2, tenant="b")
+    sched.drain(max_pumps=1_000)
+    assert live.result(timeout=0).supersteps == 2
+    assert sched.pending() == 0 and not sched.has_work()
 
 
 def test_drain_keeps_admission_window_open():
@@ -442,6 +386,21 @@ def test_compile_wall_excluded_from_busy_time():
         def record_query_depth(self, ck, supersteps):
             pass
 
+        def record_depth_error(self, ck, abs_err):
+            pass
+
+        def record_preempt(self, wall_s):
+            pass
+
+        def record_restore(self, wall_s):
+            pass
+
+        def class_cost_model(self, ck):
+            return (None, None)
+
+        def depth_residual(self, ck):
+            return None
+
         def record_tenant(self, tenant, **kw):
             pass
 
@@ -473,9 +432,74 @@ def test_service_compile_time_surfaced_in_stats(graph):
     assert snap["compile_time_s"] > snap["busy_time_s"]
 
 
+def test_backlog_pending_lock_consistent():
+    """backlog()/pending() take the scheduler lock: while a pump is
+    mid-superstep (lock held), a stats read blocks instead of observing
+    a half-spliced slot array."""
+    gate = threading.Semaphore(0)
+    in_step = threading.Event()
+
+    def hook():                      # blocks the superstep, lock held
+        in_step.set()
+        gate.acquire()
+
+    sched, qclass = _fake_scheduler(step_hook=hook)
+    futs = [_submit_fake(sched, qclass, depth=3) for _ in range(3)]
+    t = threading.Thread(target=sched.pump)
+    t.start()
+    assert in_step.wait(10)
+    got = {}
+
+    def reader():
+        got["pending"] = sched.pending()
+        got["backlog"] = sched.backlog(qclass)
+
+    r = threading.Thread(target=reader)
+    r.start()
+    r.join(0.3)
+    # the read must NOT complete while the pump holds the lock
+    assert r.is_alive(), "pending() returned mid-pump (racy read)"
+    gate.release()
+    while t.is_alive():
+        gate.release()
+        t.join(0.01)
+    r.join(10)
+    assert not r.is_alive()
+    # post-pump state is consistent: 2 in flight (slots) + 1 queued
+    assert got["pending"] == 3
+    assert got["backlog"] == 1
+    for _ in range(100):             # let the remaining supersteps run
+        gate.release()
+    sched.drain()
+    assert all(f.result().supersteps == 3 for f in futs)
+
+
 # ---------------------------------------------------------------------------
 # result cache
 # ---------------------------------------------------------------------------
+
+def test_result_cache_partitioned_by_tenant(graph):
+    """One tenant's burst must not evict another tenant's hot results,
+    and per-tenant hit counts surface in the stats endpoint."""
+    svc = GraphQueryService(num_shards=4, max_batch=1,
+                            result_cache_size=2)
+    svc.add_graph("g", graph, pad_multiple=16)
+    svc.query("g", "bfs", root=0, tenant="a")       # a's hot result
+    # b floods ITS partition well past the bound
+    for r in range(1, 6):
+        svc.query("g", "bfs", root=r, tenant="b")
+    assert len(svc._result_cache["b"]) == 2          # b's LRU bounded
+    b0 = svc.stats_snapshot()["batches_dispatched"]
+    svc.query("g", "bfs", root=0, tenant="a")        # still cached
+    snap = svc.stats_snapshot()
+    assert snap["result_cache_hits"] == 1
+    assert snap["batches_dispatched"] == b0          # no re-execution
+    assert snap["tenants"]["a"]["result_cache_hits"] == 1
+    assert snap["tenants"]["b"]["result_cache_hits"] == 0
+    # partitions are an isolation boundary: b never sees a's entry
+    svc.query("g", "bfs", root=0, tenant="b")
+    assert svc.stats_snapshot()["batches_dispatched"] == b0 + 1
+
 
 def test_result_cache_hits_skip_execution(graph):
     svc = GraphQueryService(num_shards=4, max_batch=4)
@@ -522,7 +546,9 @@ def test_result_cache_lru_bound(graph):
     svc.add_graph("g", graph, pad_multiple=16)
     for r in (0, 1, 2):     # evicts root 0
         svc.query("g", "bfs", root=r)
-    assert len(svc._result_cache) == 2
+    # the cache is partitioned by tenant; one tenant -> one partition,
+    # bounded to result_cache_size entries
+    assert sum(len(p) for p in svc._result_cache.values()) == 2
     b0 = svc.stats_snapshot()["batches_dispatched"]
     svc.query("g", "bfs", root=0)   # evicted -> re-executed
     assert svc.stats_snapshot()["result_cache_hits"] == 0

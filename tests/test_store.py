@@ -274,6 +274,58 @@ def test_spill_refault_keeps_plans_zero_retrace(g_a, g_b):
         assert res.messages == ref.messages
 
 
+def test_engine_tier_bytes_replace_layout_proxy(g_a):
+    """The store charges each version's TRUE engine-tier device bytes
+    (Engine.device_nbytes — what offload() actually demotes) once
+    engines exist, replacing the partition-layout proxy estimate; a
+    version serving several engines is charged all of them. Budget
+    conservation: resident_bytes equals the sum of the live engines'
+    bytes."""
+    svc = GraphQueryService(num_shards=4, max_batch=4)
+    svc.add_graph("a", g_a, pad_multiple=16)
+    store = svc.store
+    proxy = PT.partition_graph(g_a, 4, pad_multiple=16).device_nbytes
+    assert store.resident_bytes == proxy        # no engines yet: proxy
+    svc.query("a", "bfs", root=0)               # builds the bfs engine
+    true1 = sum(e.device_nbytes for e in svc.plans._engines.values())
+    assert true1 > 0
+    assert store.resident_bytes == true1
+    assert store.resident_bytes != proxy
+    # conservation check against what offload() would actually free
+    eng = next(iter(svc.plans._engines.values()))
+    assert eng.device_nbytes == eng.offload()
+    eng.upload()
+    # a second engine (other mode) against the same version adds ON TOP
+    svc.query("a", "bfs", root=0, mode="gravf")
+    true2 = sum(e.device_nbytes for e in svc.plans._engines.values())
+    assert true2 > true1
+    assert store.resident_bytes == true2
+    assert store.snapshot()["resident_bytes"] == float(true2)
+
+
+def test_engine_tier_budget_conservation_with_eviction(g_a, g_b):
+    """With the true engine-tier charge, a budget sized for ~1.5 engine
+    footprints forces an eviction when the second graph's engine lands,
+    and the final (unpinned) resident bytes respect the budget. The
+    evicted graph still answers bit-identically after its refault."""
+    pg = PT.partition_graph(g_a, 4, pad_multiple=16)
+    eb = Engine(ALG.bfs(), pg, mode="gravfm", backend="ref").device_nbytes
+    budget = 1.5 * eb
+    svc = GraphQueryService(num_shards=4, max_batch=4,
+                            memory_budget=budget)
+    svc.add_graph("a", g_a, pad_multiple=16)
+    svc.add_graph("b", g_b, pad_multiple=16)
+    svc.query("a", "bfs", root=0)
+    svc.query("b", "bfs", root=0)               # pushes over budget
+    store = svc.store
+    assert store.snapshot()["evictions"] >= 1
+    assert store.resident_bytes <= budget       # conservation, unpinned
+    res = svc.query("a", "bfs", root=1)         # fault back in
+    assert store.resident_bytes <= budget
+    ref = Engine(ALG.bfs(1), pg, mode="gravfm", backend="ref").run()
+    assert np.array_equal(res.state["parent"], ref.state["parent"])
+
+
 def test_engine_offload_upload_roundtrip_zero_retrace(g_a):
     """The engine tier of the spill: offload demotes the graph arrays to
     host copies, upload promotes them back, and neither move re-traces
