@@ -14,6 +14,11 @@ from typing import Callable
 
 ROWS = []
 
+# ``python -m benchmarks.run --trace-out PATH`` sets this; benchmarks
+# that drive a GraphQueryService dump its Chrome-trace JSON here (the
+# CI workflow uploads the file as a build artifact).
+TRACE_OUT = None
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"

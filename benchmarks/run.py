@@ -3,9 +3,11 @@ micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig7 fig12 # subset by prefix
+  PYTHONPATH=src python -m benchmarks.run traceov --trace-out trace.json
 """
-import sys
+import argparse
 
+from . import common
 from . import continuous as CONT
 from . import paper_figures as PF
 from . import preempt as PRE
@@ -13,6 +15,7 @@ from . import roofline_table as RT
 from . import service as SVC
 from . import substrate as SUB
 from . import tenancy as TEN
+from . import trace_overhead as TRC
 
 ALL = {
     "fig7": PF.fig7_scaling,
@@ -31,14 +34,26 @@ ALL = {
     "continuous": CONT.continuous_vs_bucketed,
     "tenancy": TEN.tenancy,
     "preempt": PRE.preempt,
+    "traceov": TRC.trace_overhead,
 }
 
 
 def main() -> None:
-    wanted = sys.argv[1:]
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description="GraVF-M benchmark harness (CSV rows on stdout)")
+    ap.add_argument("prefixes", nargs="*",
+                    help="run only benchmarks whose name starts with one "
+                         "of these (default: all)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="export a Chrome-trace JSON (Perfetto-loadable) "
+                         "of a service benchmark's query lifecycle here")
+    args = ap.parse_args()
+    common.TRACE_OUT = args.trace_out
     print("name,us_per_call,derived")
     for key, fn in ALL.items():
-        if wanted and not any(key.startswith(w) for w in wanted):
+        if args.prefixes and not any(key.startswith(w)
+                                     for w in args.prefixes):
             continue
         fn()
 

@@ -1,0 +1,84 @@
+"""Tracing overhead on the continuous-scheduling hot path.
+
+Runs the continuous benchmark's mixed-depth BFS stream twice through
+identical services — tracing off, then tracing on — and reports the qps
+ratio. The TraceBus is designed to be negligible on the hot path (one
+enabled-flag read when off, one leaf-lock deque append per event when
+on), so the two runs should be statistically indistinguishable.
+
+``GRAVFM_BENCH_CI=1`` turns the ratio into a gate: qps with tracing on
+must stay >= ``GATE`` (95%) of tracing off, with retries because shared
+runners make single wall-clock samples noisy. When ``--trace-out PATH``
+was passed to the harness, the tracing-on service's Chrome-trace JSON
+is exported there (the CI workflow uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.service import GraphQueryService, QueryRequest
+
+from . import common
+from .common import emit
+from .continuous import _mixed_graph
+
+GATE = 0.95
+
+
+def _measure(tracing: bool, g, roots, cap, width: int,
+             trace_out=None) -> float:
+    svc = GraphQueryService(num_shards=4, max_batch=width, slots=width,
+                            scheduling="continuous", max_supersteps=cap,
+                            result_cache_size=0, tracing=tracing)
+    svc.add_graph("uniform-16-tail", g)
+    svc.warm("uniform-16-tail", "bfs")
+    reqs = [QueryRequest("uniform-16-tail", "bfs", {"root": r},
+                         deadline_ms=60_000) for r in roots]
+    t0 = time.perf_counter()
+    futs = [svc.submit(r) for r in reqs]
+    svc.flush()
+    for f in futs:
+        f.result()
+    wall = time.perf_counter() - t0
+    if tracing and trace_out:
+        path = svc.dump_trace(trace_out)
+        emit("trace_export", 0.0,
+             f"path={path};events={svc.trace.emitted};"
+             f"dropped={svc.trace.dropped}")
+    return len(roots) / wall
+
+
+def trace_overhead():
+    ci = bool(os.environ.get("GRAVFM_BENCH_CI"))
+    n_core, deg, tail = (1024, 8.0, 24) if ci else (4096, 16.0, 48)
+    cap = 24 if ci else None
+    n_queries = 32 if ci else 64
+    width = 16
+
+    g = _mixed_graph(n_core, deg, tail)
+    rng = np.random.default_rng(0)
+    roots = [int(r) for r in
+             rng.integers(0, n_core, size=n_queries).astype(np.int32)]
+    for i in range(0, n_queries, 4):
+        roots[i] = n_core
+
+    attempts = 3 if ci else 1
+    for attempt in range(attempts):
+        qps_off = _measure(False, g, roots, cap, width)
+        qps_on = _measure(True, g, roots, cap, width,
+                          trace_out=common.TRACE_OUT)
+        ratio = qps_on / max(qps_off, 1e-9)
+        emit("service_bfs_tracing_overhead",
+             0.0, f"qps_off={qps_off:.1f};qps_on={qps_on:.1f};"
+                  f"ratio={ratio:.3f}")
+        if ratio >= GATE:
+            break
+    else:
+        if ci:
+            raise SystemExit(
+                f"tracing-on qps is {ratio:.3f}x tracing-off "
+                f"(< {GATE}) after {attempts} attempts — tracing "
+                "overhead regression on the continuous hot path")

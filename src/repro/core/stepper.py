@@ -41,6 +41,7 @@ checkpoint/restore verbs) for the service's continuous scheduler.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
@@ -374,12 +375,23 @@ class LaneTable:
     Freed/parked lanes' stale device carry stays in place until a later
     admit/restore overwrites it — the lane-masked select never steps an
     unoccupied lane, so it is inert.
+
+    ``trace`` is an optional duck-typed event bus (anything with an
+    ``emit(kind, **fields)`` method — in practice the service layer's
+    ``TraceBus``; the core stays import-free of the service package).
+    When set, ``step`` emits one ``superstep`` event per dispatch with
+    the lane→query attribution (slot -> meta.seq) of the lanes that
+    actually stepped, so a query span can be reconstructed into its
+    active vs parked intervals.
     """
 
-    def __init__(self, stepper, width: int, query_params):
+    def __init__(self, stepper, width: int, query_params, *,
+                 trace=None, label: Optional[str] = None):
         self.stepper = stepper
         self.width = width
         self.query_params = tuple(query_params)
+        self.trace = trace
+        self.label = label
         self.meta: List[Optional[LaneMeta]] = [None] * width
         self.carry = None
         self.act: Optional[np.ndarray] = None    # (W,) lane-alive probe
@@ -471,8 +483,22 @@ class LaneTable:
                 self.carry, self._qkw, fresh)
 
     def step(self, alive: np.ndarray) -> None:
+        if self.trace is None:
+            self.carry, self.act, self.steps = self.stepper.step(
+                self.carry, alive)
+            return
+        # lane->query attribution captured BEFORE the dispatch (a lane
+        # that retires this superstep must still be attributed to it)
+        lanes = {int(i): self.meta[i].seq
+                 for i in np.flatnonzero(alive) if self.meta[i] is not None}
+        t0 = time.perf_counter()
         self.carry, self.act, self.steps = self.stepper.step(
             self.carry, alive)
+        # the probe arrays in the return are host numpy, so perf_counter
+        # here bounds the full dispatch+sync, not just the enqueue
+        self.trace.emit("superstep", klass=self.label,
+                        ts=t0, dur_s=time.perf_counter() - t0,
+                        lanes=lanes, n_alive=len(lanes))
 
     def fetch(self) -> StepCarry:
         return self.stepper.fetch(self.carry)

@@ -20,6 +20,8 @@ from .continuous import ContinuousScheduler, class_key
 from .plans import CompiledPlan, PlanCache, PlanKey, StepperPlan
 from .server import GraphQueryService
 from .stats import ServiceStats, percentile
+from .trace import (EVENT_KINDS, QuerySpan, TraceBus, TraceEvent,
+                    assemble_spans, chrome_trace)
 
 __all__ = [
     "BATCH_BUCKETS", "AdmissionError", "Batcher", "QueryClass",
@@ -29,4 +31,6 @@ __all__ = [
     "GraphQueryService", "ServiceStats", "percentile",
     "GraphLease", "GraphStore", "StoreError",
     "TenantPolicy", "TenantRegistry", "TokenBucket",
+    "EVENT_KINDS", "QuerySpan", "TraceBus", "TraceEvent",
+    "assemble_spans", "chrome_trace",
 ]

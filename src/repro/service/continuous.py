@@ -153,11 +153,13 @@ class _ClassRun:
     parked lanes."""
 
     def __init__(self, splan: StepperPlan, slots: int, cap: int, lease,
-                 parked: ParkedQueue):
+                 parked: ParkedQueue, *, trace=None,
+                 label: Optional[str] = None):
         self.splan = splan
         self.cap = cap
         self.lease = lease                      # GraphLease or None
-        self.table = LaneTable(splan.stepper, slots, splan.query_params)
+        self.table = LaneTable(splan.stepper, slots, splan.query_params,
+                               trace=trace, label=label)
         self.queues: "Dict[str, collections.deque]" = {}
         self.passes: Dict[str, float] = {}      # stride-scheduling state
         self.parked = parked
@@ -206,11 +208,14 @@ class ContinuousScheduler:
                  depth_bucket_s: float = 0.1,
                  preempt_margin_s: float = 0.05,
                  park_charge: Callable[[int], bool] = None,
-                 park_release: Callable[[int], None] = None):
+                 park_release: Callable[[int], None] = None,
+                 trace=None):
         assert slots >= 1
         self.slots = slots
         self.max_supersteps = max_supersteps
         self.stats = stats
+        # duck-typed event bus (service.trace.TraceBus); None = no tracing
+        self.trace = trace
         self.preemption = preemption
         self.aging_rate = aging_rate
         self.depth_bucket_s = depth_bucket_s
@@ -261,7 +266,9 @@ class ContinuousScheduler:
                        or HARD_SUPERSTEP_CAP)
                 cr = _ClassRun(splan, self.slots, cap, lease,
                                ParkedQueue(self._park_charge,
-                                           self._park_release))
+                                           self._park_release),
+                               trace=self.trace,
+                               label=class_key(qclass))
                 self._classes[qclass] = cr
             q = cr.queues.get(req.tenant)
             if q is None:
@@ -283,6 +290,13 @@ class ContinuousScheduler:
                 predicted_depth=self._predict_depth(qclass),
                 seq=int(getattr(req, "qid", 0)))
             q.append(meta)
+            self._emit("queue", qid=meta.seq, tenant=req.tenant,
+                       klass=class_key(qclass), priority=meta.priority,
+                       predicted_depth=meta.predicted_depth)
+
+    def _emit(self, kind: str, **fields) -> None:
+        if self.trace is not None:
+            self.trace.emit(kind, **fields)
 
     def backlog(self, qclass: QueryClass) -> int:
         """Queued (not yet admitted) depth for one class. Taken under
@@ -368,16 +382,25 @@ class ContinuousScheduler:
             return 0
 
     def _fail_class(self, cr: _ClassRun, exc: Exception) -> None:
+        err = type(exc).__name__
+
+        def _emit_err(meta):
+            self._emit("retire", qid=meta.seq, tenant=meta.tenant,
+                       klass=cr.table.label, reason="error", error=err)
+
         for meta in cr.table.clear():
             meta.payload[1].set_exception(exc)
+            _emit_err(meta)
         for entry in cr.parked.drain():
             entry.ckpt.meta.payload[1].set_exception(exc)
+            _emit_err(entry.ckpt.meta)
         for q in cr.queues.values():
             while q:
                 meta = q.popleft()
                 fut = meta.payload[1]
                 if fut.set_running_or_notify_cancel():
                     fut.set_exception(exc)
+                    _emit_err(meta)
 
     def _pump_class_inner(self, qclass: QueryClass, cr: _ClassRun) -> int:
         # retire everything the previous pump's step finished, FIRST,
@@ -403,7 +426,7 @@ class ContinuousScheduler:
         if self.stats is not None:
             self.stats.record_pump_step()
             if eng.traces == traces0:
-                self.stats.record_busy(wall)
+                self.stats.record_busy(wall, class_key=class_key(qclass))
                 self.stats.record_superstep_time(class_key(qclass), wall)
             else:
                 # a traced step's wall is compile time, not execution:
@@ -544,6 +567,10 @@ class ContinuousScheduler:
                 touched.add(slot)
             if assignments:
                 cr.table.admit(assignments)
+                for slot, meta in assignments.items():
+                    self._emit("admit", qid=meta.seq, tenant=meta.tenant,
+                               klass=cr.table.label, reason="fresh",
+                               slot=slot)
         except BaseException as exc:   # noqa: BLE001 — no stranding
             # popped-but-not-yet-installed items are invisible to
             # _fail_class (they are in neither the table, the queues,
@@ -568,8 +595,13 @@ class ContinuousScheduler:
         meta.credit_s += self.aging_rate * (now - entry.parked_at_s)
         t0 = time.perf_counter()
         cr.table.restore(slot, entry.ckpt)
+        wall = time.perf_counter() - t0
         if self.stats is not None:
-            self.stats.record_restore(time.perf_counter() - t0)
+            self.stats.record_restore(wall)
+        self._emit("restore", qid=meta.seq, tenant=meta.tenant,
+                   klass=cr.table.label, dur_s=wall, slot=slot,
+                   parked_s=now - entry.parked_at_s,
+                   superstep=entry.ckpt.superstep)
 
     def _preempt_for_queued(self, qclass: QueryClass, cr: _ClassRun,
                             now: float, touched: set) -> None:
@@ -613,11 +645,18 @@ class ContinuousScheduler:
                 cr.parked.refund(nbytes)
                 urgent.payload[1].set_exception(exc)
                 raise
+            wall = time.perf_counter() - t0
             cr.parked.park(ckpt, now)
+            self._emit("park", qid=vmeta.seq, tenant=vmeta.tenant,
+                       klass=cr.table.label, dur_s=wall, slot=victim,
+                       by=urgent.seq, superstep=ckpt.superstep)
             cr.table.admit({victim: urgent})
+            self._emit("admit", qid=urgent.seq, tenant=urgent.tenant,
+                       klass=cr.table.label, reason="preempt",
+                       slot=victim, victim=vmeta.seq)
             touched.add(victim)
             if self.stats is not None:
-                self.stats.record_preempt(time.perf_counter() - t0)
+                self.stats.record_preempt(wall)
 
     # ---------------- retirement ---------------------------------------
     def _retire(self, qclass: QueryClass, cr: _ClassRun) -> int:
@@ -635,12 +674,20 @@ class ContinuousScheduler:
                 res = cr.splan.engine.lane_result(host, i)
             except Exception as exc:    # noqa: BLE001 — fail one lane
                 fut.set_exception(exc)
+                self._emit("retire", qid=meta.seq, tenant=req.tenant,
+                           klass=cr.table.label, reason="error",
+                           error=type(exc).__name__)
                 continue
             fut.set_result(res)
             latency_ms = (now - req.arrival_s) * 1e3
+            # positive slack = retired before the deadline; negative =
+            # a deadline miss (an infinite deadline never misses)
+            slack_s = req.deadline_s - now
+            missed = slack_s < 0
             if self.stats is not None:
                 self.stats.record_retire(
-                    messages=res.messages, latency_ms=latency_ms)
+                    messages=res.messages, latency_ms=latency_ms,
+                    class_key=class_key(qclass))
                 self.stats.record_query_depth(class_key(qclass),
                                               res.supersteps)
                 if meta.predicted_depth > 0:
@@ -649,6 +696,16 @@ class ContinuousScheduler:
                         abs(res.supersteps - meta.predicted_depth))
                 self.stats.record_tenant(
                     req.tenant, completed=1, messages=res.messages,
-                    latency_ms=latency_ms)
+                    latency_ms=latency_ms,
+                    deadline_misses=1 if missed else 0)
+                if missed:
+                    self.stats.record_deadline_miss()
+            self._emit("retire", qid=meta.seq, tenant=req.tenant,
+                       klass=cr.table.label, reason="retired",
+                       supersteps=int(res.supersteps),
+                       messages=int(res.messages),
+                       deadline_slack_s=(slack_s if math.isfinite(slack_s)
+                                         else None),
+                       parks=meta.parks)
             self._on_result(req, res, qclass.version)
         return len(done)

@@ -74,6 +74,7 @@ re-traces (see plans.py).
 from __future__ import annotations
 
 import collections
+import dataclasses
 import threading
 import time
 from concurrent.futures import Future
@@ -82,15 +83,17 @@ from typing import Any, Dict, List, Optional
 import jax
 import numpy as np
 
+from ..core import perfmodel
 from ..core.algorithms import ALGORITHMS
 from ..core.engine import EngineResult
 from ..core.graph import Graph
-from ..store import GraphStore, TenantRegistry
+from ..store import GraphStore, StoreError, TenantRegistry
 from .batching import (BATCH_BUCKETS, AdmissionError, Batcher, QueryClass,
                        QueryRequest, bucket_for)
 from .continuous import ContinuousScheduler, class_key
 from .plans import PlanCache, PlanKey
 from .stats import ServiceStats
+from .trace import TraceBus
 
 __all__ = ["GraphQueryService"]
 
@@ -117,7 +120,10 @@ class GraphQueryService:
                  store: Optional[GraphStore] = None,
                  tenants: Optional[TenantRegistry] = None,
                  plan_cache: Optional[PlanCache] = None,
-                 stats: Optional[ServiceStats] = None):
+                 stats: Optional[ServiceStats] = None,
+                 tracing: bool = True,
+                 trace_capacity: int = 65536,
+                 roofline_platform=None):
         assert scheduling in ("bucketed", "continuous")
         self.num_shards = num_shards
         self.max_batch = max_batch
@@ -129,6 +135,10 @@ class GraphQueryService:
         self.admission_control = admission_control
         self.stats = stats or (plan_cache.stats if plan_cache
                                else ServiceStats())
+        # Lifecycle event bus. Always constructed (so dump_trace/
+        # trace_snapshot exist either way); tracing=False leaves it
+        # disabled and every emit is one attribute read.
+        self.trace = TraceBus(capacity=trace_capacity, enabled=tracing)
         if plan_cache is not None:
             # the cache brings its own store; silently dropping these
             # would leave an operator believing residency is capped
@@ -167,7 +177,8 @@ class GraphQueryService:
                 preempt_margin_s=preempt_margin_s,
                 depth_bucket_s=depth_bucket_s,
                 park_charge=self.store.reserve_parked,
-                park_release=self.store.release_parked)
+                park_release=self.store.release_parked,
+                trace=self.trace)
         # Result cache PARTITIONED BY TENANT: each tenant gets its own
         # bounded LRU of ``result_cache_size`` entries, so one tenant's
         # burst of novel queries cannot evict another tenant's hot
@@ -186,6 +197,19 @@ class GraphQueryService:
         # again (new arrivals bind the new version) — purge them instead
         # of letting dead entries squeeze live ones out of the LRU
         self.store.add_evict_listener(self._purge_stale_results)
+        # residency transitions land on the same bus as query lifecycle
+        # events, so a trace shows "this query's restore stalled on that
+        # graph's refault" on one timeline
+        self.store.set_trace(self.trace)
+        # roofline telemetry: class key -> the §5 performance model's
+        # projected TEPS (T_sys). The projector runs outside the stats
+        # lock and is cached per class (limits() is pure arithmetic but
+        # host_graph takes the store lock).
+        self._class_meta: Dict[str, QueryClass] = {}
+        self._roofline_cache: Dict[str, Optional[float]] = {}
+        self._roofline_platform = (roofline_platform or platform
+                                   or perfmodel.PAPER_PLATFORM)
+        self.stats.set_roofline_projector(self._project_teps)
         self._lock = threading.RLock()
         self._wake = threading.Condition(self._lock)
         # Serializes plan lookup + execution: PlanCache is not internally
@@ -297,6 +321,10 @@ class GraphQueryService:
         batchable = (bool(kernel.query_params) and self.max_batch > 1)
         self.stats.record_submit()
         self.stats.record_tenant(req.tenant, submitted=1)
+        self.trace.emit("submit", qid=req.qid, tenant=req.tenant,
+                        klass=class_key(qclass),
+                        deadline_ms=req.deadline_ms, kernel=req.kernel,
+                        ts=req.arrival_s)
         # Result cache: an identical completed query resolves right here,
         # without touching either scheduler (and without charging the
         # tenant's token bucket — a hit consumes no engine resources).
@@ -309,11 +337,15 @@ class GraphQueryService:
             self.stats.record_tenant(req.tenant, completed=1,
                                      result_hits=1,
                                      latency_ms=latency_ms)
+            self.trace.emit("retire", qid=req.qid, tenant=req.tenant,
+                            klass=class_key(qclass), reason="cache")
             return fut, qclass
         # Per-tenant quota: shed when the tenant's token bucket is dry.
         if not self.tenants.admit(req.tenant):
             self.stats.record_shed()
             self.stats.record_tenant(req.tenant, shed=1)
+            self.trace.emit("shed", qid=req.qid, tenant=req.tenant,
+                            klass=class_key(qclass), reason="quota")
             fut.set_exception(AdmissionError(
                 f"tenant {req.tenant!r} exceeded its rate quota "
                 f"({self.tenants.policy(req.tenant).rate_qps} qps)"))
@@ -322,6 +354,8 @@ class GraphQueryService:
         if self._should_shed(req, qclass):
             self.stats.record_shed()
             self.stats.record_tenant(req.tenant, shed=1)
+            self.trace.emit("shed", qid=req.qid, tenant=req.tenant,
+                            klass=class_key(qclass), reason="deadline")
             fut.set_exception(AdmissionError(
                 f"deadline {req.deadline_ms:.1f}ms infeasible for "
                 f"{class_key(qclass)} given current backlog"))
@@ -342,6 +376,10 @@ class GraphQueryService:
                 qclass = QueryClass.of(req, self.num_shards, self.backend,
                                        version)
             fut.add_done_callback(lambda _f: lease.release())
+        # the class's graph/kernel/mode are now final (the lease rebind
+        # above may have bumped the version) — remember them so the
+        # roofline projector can resolve this class key to a workload
+        self._class_meta.setdefault(class_key(qclass), qclass)
         try:
             if self._continuous is not None and batchable:
                 # enqueue OUTSIDE the service lock: the scheduler thread
@@ -354,6 +392,8 @@ class GraphQueryService:
             with self._wake:
                 ready = self._batcher.add(qclass, (req, fut), batchable)
                 self._wake.notify()
+            self.trace.emit("queue", qid=req.qid, tenant=req.tenant,
+                            klass=class_key(qclass))
             if ready is not None:
                 self._dispatch(*ready)
             return fut, qclass
@@ -482,6 +522,51 @@ class GraphQueryService:
                                self._slots, qclass.version),
                 method=self.partition_method)
 
+    # ---------------- roofline projection ------------------------------
+    def _project_teps(self, ck: str) -> Optional[float]:
+        """Projected TEPS for one class key from the §5 performance
+        model: ``limits()["T_sys"]`` on the class's graph workload at
+        this service's shard count. None when the graph is gone
+        (superseded and drained) or the kernel has no algo profile to
+        extrapolate from — the efficiency metric then reports 0.0
+        rather than a made-up ratio."""
+        if ck in self._roofline_cache:
+            return self._roofline_cache[ck]
+        qclass = self._class_meta.get(ck)
+        proj: Optional[float] = None
+        if qclass is not None:
+            try:
+                g = self.store.host_graph(qclass.graph_id,
+                                          qclass.version or None)
+                wl = perfmodel.Workload(num_vertices=g.num_vertices,
+                                        num_edges=g.num_edges)
+                algo = perfmodel.PAPER_ALGOS.get(qclass.kernel)
+                if algo is None:
+                    # unprofiled kernel: bfs's per-edge/-vertex op counts
+                    # are the closest stand-in for a traversal kernel
+                    algo = dataclasses.replace(
+                        perfmodel.PAPER_ALGOS["bfs"], name=qclass.kernel)
+                proj = float(perfmodel.limits(
+                    self._roofline_platform, algo, wl,
+                    n_nodes=self.num_shards,
+                    mode=qclass.mode)["T_sys"])
+            except (StoreError, KeyError, ValueError):
+                proj = None
+        self._roofline_cache[ck] = proj
+        return proj
+
+    # ---------------- trace export -------------------------------------
+    def trace_snapshot(self):
+        """Retained lifecycle events (``TraceEvent`` list, emission
+        order); ``self.trace.spans()`` assembles them per query."""
+        return self.trace.snapshot()
+
+    def dump_trace(self, path: str) -> str:
+        """Export the retained events as Chrome trace-event JSON —
+        load the file in ``chrome://tracing`` or
+        https://ui.perfetto.dev. Returns ``path``."""
+        return self.trace.dump(path)
+
     def query(self, graph_id: str, kernel: str, *, mode: str = "gravfm",
               deadline_ms: float = 50.0, tenant: str = "default",
               **query_kwargs) -> EngineResult:
@@ -524,6 +609,11 @@ class GraphQueryService:
 
     def _dispatch_locked(self, qclass: QueryClass, reqs, futs, n: int,
                          t0: float) -> None:
+        ck = class_key(qclass)
+        for r in reqs:
+            self.trace.emit("admit", qid=r.qid, tenant=r.tenant,
+                            klass=ck, reason="batch", ts=t0,
+                            batch_size=n)
         traces_before = self.plans.sync_trace_counters()
         lease = None
         try:
@@ -552,8 +642,11 @@ class GraphQueryService:
                     arrays[p] = np.asarray(col)
                 results = plan.execute(cap, **arrays)[:n]
         except Exception as exc:   # noqa: BLE001 — fail the whole batch
-            for f in futs:
+            for r, f in zip(reqs, futs):
                 f.set_exception(exc)
+                self.trace.emit("retire", qid=r.qid, tenant=r.tenant,
+                                klass=ck, reason="error",
+                                error=type(exc).__name__)
             return
         finally:
             if lease is not None:
@@ -573,22 +666,34 @@ class GraphQueryService:
             wall_s=0.0 if compiled else wall,
             messages=sum(r.messages for r in results),
             supersteps=max((r.supersteps for r in results), default=0),
-            latencies_ms=[(now - r.arrival_s) * 1e3 for r in reqs])
+            latencies_ms=[(now - r.arrival_s) * 1e3 for r in reqs],
+            class_key=ck)
         if compiled:
             self.stats.record_compile(wall)
         # feed the admission-control cost model + the result cache;
         # dispatches that traced (compiled) are excluded from the cost
         # model — a compile wall would poison the EWMA and, with
         # admission control on, shed the class forever
-        ck = class_key(qclass)
         batch_depth = max((r.supersteps for r in results), default=0)
         if batch_depth > 0 and not compiled:
             self.stats.record_superstep_time(ck, wall, n_steps=batch_depth)
         for r, res in zip(reqs, results):
             self.stats.record_query_depth(ck, res.supersteps)
+            slack_s = r.deadline_s - now
+            missed = slack_s < 0
+            if missed:
+                self.stats.record_deadline_miss()
             self.stats.record_tenant(
                 r.tenant, completed=1, messages=res.messages,
-                latency_ms=(now - r.arrival_s) * 1e3)
+                latency_ms=(now - r.arrival_s) * 1e3,
+                deadline_misses=1 if missed else 0)
+            self.trace.emit(
+                "retire", qid=r.qid, tenant=r.tenant, klass=ck,
+                reason="retired", supersteps=int(res.supersteps),
+                messages=int(res.messages),
+                deadline_slack_s=(slack_s if np.isfinite(slack_s)
+                                  else None),
+                ts=now)
             self._store_result(r, res, qclass.version)
 
     # ---------------- scheduling --------------------------------------
@@ -688,4 +793,6 @@ class GraphQueryService:
         for k, v in self.store.snapshot().items():
             snap[f"store_{k}"] = v
         snap["tenants"] = self.stats.tenant_snapshot()
+        snap["trace_events"] = self.trace.emitted
+        snap["trace_dropped"] = self.trace.dropped
         return snap

@@ -13,7 +13,7 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 __all__ = ["ServiceStats", "percentile"]
 
@@ -48,7 +48,13 @@ class ServiceStats:
     result_cache_hits: int = 0      # memoized EngineResults served
     preemptions: int = 0            # lanes parked for tighter deadlines
     lane_restores: int = 0          # parked lanes spliced back in
-    park_restore_ms: float = 0.0    # wall spent checkpointing/restoring
+    # checkpoint vs restore walls are SEPARATE counters: the two halves
+    # of a preemption have different cost structures (park = one-lane
+    # device->host fetch, restore = broadcast+select splice) and a
+    # regression in either used to hide in their sum
+    park_ms: float = 0.0            # wall spent checkpointing (parking)
+    restore_ms: float = 0.0         # wall spent restoring parked lanes
+    deadline_misses: int = 0        # queries retired past their deadline
     supersteps_total: int = 0
     messages_total: int = 0         # traversed edges (TEPS numerator)
     busy_time_s: float = 0.0        # wall time spent EXECUTING dispatches
@@ -80,15 +86,30 @@ class ServiceStats:
         # back to once a lane outlives its prediction, and the
         # ``depth_pred_abs_err`` health metric in snapshot()
         self._depth_err_ewma: Dict[str, float] = {}
+        # per query-class CUMULATIVE accounting (messages / execution
+        # busy seconds / completions) — the measured side of the
+        # roofline_efficiency metric. The projected side comes from the
+        # injected projector (set_roofline_projector): class key ->
+        # perfmodel.limits()["T_sys"] TEPS, or None when unknown.
+        self._class_acc: Dict[str, Dict[str, float]] = {}
+        self._roofline_fn: Optional[Callable[[str], Optional[float]]] = None
 
     # ------------------------------------------------------------------
     def record_submit(self, n: int = 1) -> None:
         with self._lock:
             self.queries_submitted += n
 
+    def _class_acc_of(self, class_key: str) -> Dict[str, float]:
+        acc = self._class_acc.get(class_key)
+        if acc is None:
+            acc = self._class_acc[class_key] = {
+                "messages": 0.0, "busy_s": 0.0, "completed": 0.0}
+        return acc
+
     def record_batch(self, n_queries: int, n_pad: int, wall_s: float,
                      messages: int, supersteps: int,
-                     latencies_ms: List[float]) -> None:
+                     latencies_ms: List[float],
+                     class_key: Optional[str] = None) -> None:
         with self._lock:
             self.batches_dispatched += 1
             self.queries_completed += n_queries
@@ -97,6 +118,11 @@ class ServiceStats:
             self.messages_total += messages
             self.supersteps_total += supersteps
             self._latencies_ms.extend(latencies_ms)
+            if class_key is not None:
+                acc = self._class_acc_of(class_key)
+                acc["messages"] += messages
+                acc["busy_s"] += wall_s
+                acc["completed"] += n_queries
 
     def record_cache(self, hit: bool) -> None:
         with self._lock:
@@ -128,13 +154,13 @@ class ServiceStats:
         if t is None:
             t = self._tenants[tenant] = {
                 "submitted": 0, "completed": 0, "shed": 0, "messages": 0,
-                "result_cache_hits": 0}
+                "result_cache_hits": 0, "deadline_misses": 0}
             self._tenant_lat[tenant] = collections.deque(maxlen=512)
         return t
 
     def record_tenant(self, tenant: str, *, submitted: int = 0,
                       completed: int = 0, shed: int = 0, messages: int = 0,
-                      result_hits: int = 0,
+                      result_hits: int = 0, deadline_misses: int = 0,
                       latency_ms: Optional[float] = None) -> None:
         """Fold one event into ``tenant``'s breakdown (the service calls
         this alongside the aggregate counters)."""
@@ -145,6 +171,7 @@ class ServiceStats:
             t["shed"] += shed
             t["messages"] += messages
             t["result_cache_hits"] += result_hits
+            t["deadline_misses"] += deadline_misses
             if latency_ms is not None:
                 self._tenant_lat[tenant].append(latency_ms)
 
@@ -163,12 +190,17 @@ class ServiceStats:
         table[key] = x if prev is None else (
             self.ewma_alpha * x + (1.0 - self.ewma_alpha) * prev)
 
-    def record_busy(self, wall_s: float) -> None:
+    def record_busy(self, wall_s: float,
+                    class_key: Optional[str] = None) -> None:
         """Wall time spent driving the engine (continuous pump steps —
         bucketed dispatch accounts its own via record_batch). Execution
-        only: compile walls go to :meth:`record_compile`."""
+        only: compile walls go to :meth:`record_compile`. ``class_key``
+        additionally attributes the wall to that class's roofline
+        accounting."""
         with self._lock:
             self.busy_time_s += wall_s
+            if class_key is not None:
+                self._class_acc_of(class_key)["busy_s"] += wall_s
 
     def record_compile(self, wall_s: float) -> None:
         """Wall time spent tracing/compiling a dispatch. Kept out of
@@ -214,13 +246,13 @@ class ServiceStats:
         """One lane checkpointed (parked) to admit a tighter deadline."""
         with self._lock:
             self.preemptions += 1
-            self.park_restore_ms += wall_s * 1e3
+            self.park_ms += wall_s * 1e3
 
     def record_restore(self, wall_s: float) -> None:
         """One parked lane spliced back into a free slot."""
         with self._lock:
             self.lane_restores += 1
-            self.park_restore_ms += wall_s * 1e3
+            self.restore_ms += wall_s * 1e3
 
     def record_pump_step(self) -> None:
         """One device superstep executed by the continuous scheduler —
@@ -230,7 +262,8 @@ class ServiceStats:
         with self._lock:
             self.supersteps_total += 1
 
-    def record_retire(self, messages: int, latency_ms: float) -> None:
+    def record_retire(self, messages: int, latency_ms: float,
+                      class_key: Optional[str] = None) -> None:
         """One query retired mid-flight by the continuous scheduler.
         (Device supersteps are counted per pump via record_pump_step,
         not per query — W lanes share each superstep.)"""
@@ -238,6 +271,50 @@ class ServiceStats:
             self.queries_completed += 1
             self.messages_total += messages
             self._latencies_ms.append(latency_ms)
+            if class_key is not None:
+                acc = self._class_acc_of(class_key)
+                acc["messages"] += messages
+                acc["completed"] += 1
+
+    def record_deadline_miss(self, n: int = 1) -> None:
+        """A query completed AFTER its deadline (counted where the
+        engine resolves it — bucketed dispatch and continuous retire;
+        sheds are not misses, they are ``queries_shed``)."""
+        with self._lock:
+            self.deadline_misses += n
+
+    # ---- roofline (measured vs modeled) -------------------------------
+    def set_roofline_projector(
+            self, fn: Optional[Callable[[str], Optional[float]]]) -> None:
+        """Install the class-key -> projected-TEPS function (the
+        service wires :func:`repro.core.perfmodel.limits` through it).
+        The projector is called OUTSIDE the stats lock — it may take
+        store locks of its own."""
+        self._roofline_fn = fn
+
+    def roofline_snapshot(self) -> Dict[str, Dict[str, float]]:
+        """Per-class measured TEPS vs the performance-model projection:
+        ``efficiency`` is the paper's §6 measured-over-modeled ratio
+        (GraVF-M reports 0.94 of its projected system limit), computed
+        from cumulative per-class messages / execution-busy seconds.
+        Classes with no observed busy time report 0.0; classes with no
+        projection report ``projected_teps`` 0.0 and efficiency 0.0."""
+        with self._lock:
+            acc = {ck: dict(a) for ck, a in self._class_acc.items()}
+        fn = self._roofline_fn
+        out: Dict[str, Dict[str, float]] = {}
+        for ck, a in acc.items():
+            teps = a["messages"] / a["busy_s"] if a["busy_s"] > 0 else 0.0
+            proj = fn(ck) if fn is not None else None
+            out[ck] = {
+                "teps": teps,
+                "projected_teps": float(proj) if proj else 0.0,
+                "efficiency": teps / proj if proj else 0.0,
+                "messages": a["messages"],
+                "busy_s": a["busy_s"],
+                "completed": a["completed"],
+            }
+        return out
 
     # ------------------------------------------------------------------
     def snapshot(self) -> Dict[str, float]:
@@ -245,8 +322,12 @@ class ServiceStats:
         with self._lock:
             lat = list(self._latencies_ms)
             elapsed = max(time.perf_counter() - self._started_at, 1e-9)
-            busy = max(self.busy_time_s, 1e-9)
-            return {
+            # before any dispatch has run, busy_time_s is exactly 0 and
+            # qps_busy/teps must report 0.0 — the old 1e-9 clamp leaked
+            # into the numerator-less case and reported astronomically
+            # large throughput from an idle service
+            busy = self.busy_time_s
+            snap = {
                 "queries_submitted": self.queries_submitted,
                 "queries_completed": self.queries_completed,
                 "queries_shed": self.queries_shed,
@@ -261,7 +342,11 @@ class ServiceStats:
                 "result_cache_hits": self.result_cache_hits,
                 "preemptions": self.preemptions,
                 "lane_restores": self.lane_restores,
-                "park_restore_ms": self.park_restore_ms,
+                "park_ms": self.park_ms,
+                "restore_ms": self.restore_ms,
+                # kept as the sum for dashboards that predate the split
+                "park_restore_ms": self.park_ms + self.restore_ms,
+                "deadline_misses": self.deadline_misses,
                 "depth_pred_abs_err": (
                     sum(self._depth_err_ewma.values())
                     / len(self._depth_err_ewma)
@@ -271,11 +356,21 @@ class ServiceStats:
                 "busy_time_s": self.busy_time_s,
                 "compile_time_s": self.compile_time_s,
                 "qps": self.queries_completed / elapsed,
-                "qps_busy": self.queries_completed / busy,
-                "teps": self.messages_total / busy,
+                "qps_busy": (self.queries_completed / busy
+                             if busy > 0 else 0.0),
+                "teps": self.messages_total / busy if busy > 0 else 0.0,
                 "latency_p50_ms": percentile(lat, 50),
                 "latency_p95_ms": percentile(lat, 95),
                 "latency_p99_ms": percentile(lat, 99),
                 "latency_max_ms": percentile(lat, 100),
                 "uptime_s": elapsed,
             }
+        # outside the stats lock: the roofline projector may take the
+        # graph store's lock, and store->stats is the established lock
+        # order (evict listeners sync trace counters) — nesting the
+        # store lock under the stats lock here would be an ABBA inversion
+        roofline = self.roofline_snapshot()
+        snap["roofline"] = roofline
+        snap["roofline_efficiency"] = {
+            ck: r["efficiency"] for ck, r in roofline.items()}
+        return snap

@@ -221,6 +221,20 @@ class GraphStore:
         # like a spilled layout)
         self.parked_bytes = 0
         self.lane_parks = 0             # reservations granted
+        # optional duck-typed lifecycle event bus (service.trace.TraceBus)
+        self._trace = None
+
+    def set_trace(self, bus) -> None:
+        """Attach a lifecycle event bus (anything with ``emit(kind,
+        **fields)``); residency transitions (publish / spill / refault /
+        evict) then land on the same timeline as the service's query
+        events. The bus append is a leaf lock, so emitting under the
+        store lock is ordering-safe."""
+        self._trace = bus
+
+    def _emit(self, kind: str, **fields) -> None:
+        if self._trace is not None:
+            self._trace.emit(kind, **fields)
 
     @property
     def _spill_enabled(self) -> bool:
@@ -292,6 +306,9 @@ class GraphStore:
             # (stale plans and cached results are scoped to `cur`)
             if head is not None and head.pins == 0:
                 self._retire_superseded_locked(head)
+        self._emit("publish", graph_id=graph_id, version=ver,
+                   num_vertices=int(graph.num_vertices),
+                   num_edges=int(graph.num_edges))
         if materialize:
             # outside the lock: a large publish compiles its layout
             # without stalling other tenants (same protocol as a fault)
@@ -745,6 +762,9 @@ class GraphStore:
                 self.faults += 1
                 if spilled is not None:
                     self.refault_upload_ms += wall_ms
+                self._emit("refault", graph_id=graph_id,
+                           version=entry.version, dur_s=wall_ms / 1e3,
+                           cold=spilled is None)
             entry.ever_resident = True
             lease = None
             if pin:
@@ -773,6 +793,8 @@ class GraphStore:
         if spill and pg is not None:
             entry.spilled = pg
             self.spills += 1
+            self._emit("spill", graph_id=entry.graph_id,
+                       version=entry.version, nbytes=entry.nbytes)
             # listeners fire AFTER the lock is released (the offload is
             # a device->host transfer; see _fire_pending_spills)
             self._pending_spills.append((entry.graph_id, entry.version))
@@ -786,6 +808,8 @@ class GraphStore:
         entry.spilled = None
         if count:
             self.discards += 1
+        self._emit("evict", graph_id=entry.graph_id,
+                   version=entry.version)
         for fn in self._evict_listeners:
             fn(entry.graph_id, entry.version)
 

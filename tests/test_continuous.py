@@ -368,7 +368,7 @@ def test_compile_wall_excluded_from_busy_time():
             self.busy, self.compile, self.superstep = [], [], []
             self.pump_steps = 0
 
-        def record_busy(self, w):
+        def record_busy(self, w, class_key=None):
             self.busy.append(w)
 
         def record_compile(self, w):
@@ -380,7 +380,10 @@ def test_compile_wall_excluded_from_busy_time():
         def record_superstep_time(self, ck, w, n_steps=1):
             self.superstep.append((ck, w))
 
-        def record_retire(self, messages, latency_ms):
+        def record_retire(self, messages, latency_ms, class_key=None):
+            pass
+
+        def record_deadline_miss(self, n=1):
             pass
 
         def record_query_depth(self, ck, supersteps):
