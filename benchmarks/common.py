@@ -26,6 +26,16 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(row, flush=True)
 
 
+def rmat_graph(scale: int, edge_factor: int = 16, *, seed: int = 0,
+               weighted: bool = False):
+    """R-MAT (power-law) benchmark graph — the Graph500-style generator
+    in :mod:`repro.core.graph`. Skewed degrees are what make the
+    combined exchange's degree-factor compression visible: hub vertices
+    collapse many cut edges into one wire entry."""
+    from repro.core.graph import rmat
+    return rmat(scale, edge_factor, seed=seed, weighted=weighted)
+
+
 def time_call(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
     """Median wall-time of fn() in microseconds."""
     for _ in range(warmup):

@@ -16,6 +16,7 @@ from . import service as SVC
 from . import substrate as SUB
 from . import tenancy as TEN
 from . import trace_overhead as TRC
+from . import traffic as TRF
 
 ALL = {
     "fig7": PF.fig7_scaling,
@@ -35,6 +36,7 @@ ALL = {
     "tenancy": TEN.tenancy,
     "preempt": PRE.preempt,
     "traceov": TRC.trace_overhead,
+    "traffic": TRF.traffic,
 }
 
 

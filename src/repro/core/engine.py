@@ -82,6 +82,16 @@ class EngineResult:
     comm: Dict[str, float]         # measured network words by scheme
     raw_state: Any = None          # sharded (P, Vm) state pytree
 
+    _FIELDS = ("state", "supersteps", "messages", "comm", "raw_state")
+
+    def __getitem__(self, key):
+        """Dict-style access (``res["state"]``, ``res["exchange_words"]``)
+        for callers written against the shard engine's historical result
+        dicts; unknown keys fall through to ``comm``."""
+        if key in self._FIELDS:
+            return getattr(self, key)
+        return self.comm[key]
+
 
 def collect(pg: PartitionedGraph, state) -> Dict[str, np.ndarray]:
     """(P, Vm) shard layout -> (V,) global arrays."""
@@ -430,6 +440,7 @@ class Engine:
         comm = {kk: float(v) for kk, v in jax.tree.map(np.asarray,
                                                        stats).items()}
         comm["scheme"] = comm_scheme
+        comm["wire_words"] = comm[self.wire_stat]
         return EngineResult(
             state=collect(self.pg, state),
             supersteps=int(s),
@@ -473,6 +484,7 @@ class Engine:
             state_q = jax.tree.map(lambda a: a[q], state)
             comm = {kk: float(v[q]) for kk, v in stats.items()}
             comm["scheme"] = comm_scheme
+            comm["wire_words"] = comm[self.wire_stat]
             results.append(EngineResult(
                 state=collect(self.pg, state_q),
                 supersteps=int(s[q]),
@@ -496,9 +508,18 @@ class Engine:
         st = self._steppers.get(width)
         if st is None:
             st = LaneStepper(self._prog, self._data, self.params, width,
-                             trace_hook=self._bump_traces)
+                             trace_hook=self._bump_traces,
+                             wire_stat=self.wire_stat)
             self._steppers[width] = st
         return st
+
+    @property
+    def wire_stat(self) -> str:
+        """Which stats entry counts the words this mode's scheme actually
+        puts on the wire (filtered broadcast for GraVF-M, per-edge unicast
+        for GraVF) — surfaced uniformly as ``comm["wire_words"]``."""
+        return ("bcast_filtered_words" if self.mode == "gravfm"
+                else "unicast_words")
 
     def _bump_traces(self) -> None:
         self.traces += 1
@@ -511,6 +532,7 @@ class Engine:
         comm = {kk: float(v[lane]) for kk, v in carry_host.stats.items()}
         comm["scheme"] = ("gravfm_broadcast" if self.mode == "gravfm"
                           else "gravf_unicast")
+        comm["wire_words"] = comm[self.wire_stat]
         return EngineResult(
             state=collect(self.pg, state_q),
             supersteps=int(carry_host.superstep[lane]),

@@ -29,6 +29,16 @@ paper's architectural ideas become *schedulable*:
       blocks exchanged with one ``all_to_all`` per superstep (Fig. 4
       left), gather at the receiver.
 
+  exchange="combined"   — the paper's headline degree-factor trick:
+      per-edge messages are segment-reduced AT THE SOURCE by
+      (destination shard, destination vertex) — the Pallas windowed
+      segment-combine over a dst-sorted per-pair layout — and the
+      ``all_to_all`` then ships ONE (id, payload) entry per remote
+      destination vertex instead of one per edge. The receiver folds the
+      pre-combined partials into its accumulator with the same monoid,
+      so wire words drop by roughly the average degree (perfmodel's
+      ``words_per_superstep`` predicts the exact padded-layout cost).
+
 All exchanges produce bit-identical states to ``engine.py`` (tested in a
 multi-device subprocess; see tests/test_engine_shardmap.py).
 """
@@ -36,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax
@@ -99,6 +110,19 @@ class ShardData(NamedTuple):
     pair_w: jnp.ndarray
     pair_valid: jnp.ndarray
     recv_dst_local: jnp.ndarray  # (P, P, E2)
+    # combined exchange: source-side dst-sorted edge lanes (Pallas layout
+    # over flat (dest shard, dst rank) segments) + the static per-(peer,
+    # rank) receive ids — the wire never carries ids at runtime
+    comb_wid: jnp.ndarray = None        # (P, comb_tiles)
+    comb_rel: jnp.ndarray = None        # (P, CL)
+    comb_written: jnp.ndarray = None    # (P, comb_windows)
+    comb_src_local: jnp.ndarray = None  # (P, CL)
+    comb_src_gid: jnp.ndarray = None    # (P, CL)
+    comb_src_outdeg: jnp.ndarray = None  # (P, CL)
+    comb_w: jnp.ndarray = None          # (P, CL)
+    comb_valid: jnp.ndarray = None      # (P, CL)
+    comb_seg: jnp.ndarray = None        # (P, CL) flat q*(R+1)+rank; pad Sc
+    comb_recv_dst_local: jnp.ndarray = None  # (P, P, comb_max)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +136,9 @@ class ShardMeta:
     tile_r: int
     num_vertices: int
     frontier_capacities: tuple = ()
+    comb_max: int = 0        # padded distinct remote dsts per shard pair
+    comb_tiles: int = 0
+    comb_windows: int = 0
 
 
 def _build_shard_layouts(pg: PartitionedGraph, tile_e: int, tile_r: int):
@@ -159,11 +186,67 @@ def _build_shard_layouts(pg: PartitionedGraph, tile_e: int, tile_r: int):
             n_tiles, n_windows)
 
 
+def _build_combined_layouts(pg: PartitionedGraph, tile_e: int, tile_r: int):
+    """Source-side layout for the combined exchange: each shard's edges,
+    dst-sorted within each destination-shard bucket, as a Pallas windowed
+    layout over the flat segment id ``q*(R+1) + dst_rank`` (the bucket's
+    discard bin is rank R, so the flat ids stay globally sorted). The
+    segment-combine over this layout yields the per-(peer, rank) partials
+    that go on the wire — one slot per distinct remote destination."""
+    cb = pg.combined_buckets()
+    P, Vm = pg.num_parts, pg.v_max
+    R = cb["comb_max"]
+    Sc = P * (R + 1)
+    seg_all = (np.arange(P, dtype=np.int64)[None, :, None] * (R + 1)
+               + cb["dst_rank"].astype(np.int64))      # (P, P, E2)
+    layouts = [kops.build_layout(seg_all[p].reshape(-1), Sc,
+                                 tile_e=tile_e, tile_r=tile_r)
+               for p in range(P)]
+    n_tiles = max(l.n_tiles for l in layouts)
+    n_windows = layouts[0].n_windows
+    L = n_tiles * tile_e
+
+    wid = np.zeros((P, n_tiles), np.int32)
+    rel = np.full((P, L), tile_r, np.int32)
+    written = np.zeros((P, n_windows), bool)
+    src_local = np.zeros((P, L), np.int32)
+    src_gid = np.zeros((P, L), np.int32)
+    src_outdeg = np.ones((P, L), np.int32)
+    w = np.zeros((P, L), np.float32)
+    valid = np.zeros((P, L), bool)
+    seg_l = np.full((P, L), Sc, np.int32)
+
+    for p, lo in enumerate(layouts):
+        nt, ll = lo.n_tiles, lo.num_lanes
+        wid[p, :nt] = lo.window_id
+        wid[p, nt:] = lo.window_id[-1] if nt else 0
+        rel[p, :ll] = lo.rel
+        written[p] = lo.window_written
+        src_local[p, :ll] = lo.place(cb["src_local"][p].reshape(-1), 0)
+        src_gid[p, :ll] = lo.place(cb["src_gid"][p].reshape(-1), 0)
+        src_outdeg[p, :ll] = lo.place(cb["src_outdeg"][p].reshape(-1), 1)
+        w[p, :ll] = lo.place(cb["w"][p].reshape(-1), 0.0)
+        valid[p, :ll] = (lo.place(cb["valid"][p].reshape(-1), False)
+                         & lo.lane_valid)
+        seg_l[p, :ll] = lo.place(
+            seg_all[p].reshape(-1).astype(np.int32), Sc)
+
+    return (dict(comb_wid=wid, comb_rel=rel, comb_written=written,
+                 comb_src_local=src_local, comb_src_gid=src_gid,
+                 comb_src_outdeg=src_outdeg, comb_w=w, comb_valid=valid,
+                 comb_seg=seg_l,
+                 comb_recv_dst_local=np.ascontiguousarray(
+                     cb["comb_dst"].swapaxes(0, 1))),
+            R, n_tiles, n_windows)
+
+
 def build_shard_data(pg: PartitionedGraph, *, tile_e: int = 512,
                      tile_r: int = 256) -> tuple:
     """(ShardData of numpy arrays, ShardMeta)."""
     P, Vm = pg.num_parts, pg.v_max
     lanes, n_tiles, n_windows = _build_shard_layouts(pg, tile_e, tile_r)
+    comb, comb_max, comb_tiles, comb_windows = _build_combined_layouts(
+        pg, tile_e, tile_r)
 
     flt = pg.nbr_filter.copy()
     flt[np.arange(pg.num_vertices), pg.part_of] = False
@@ -190,6 +273,7 @@ def build_shard_data(pg: PartitionedGraph, *, tile_e: int = 512,
         pair_src_outdeg=pg.pair_src_outdeg, pair_w=pg.pair_w,
         pair_valid=pg.pair_valid,
         recv_dst_local=pg.pair_dst_local.swapaxes(0, 1),
+        **{k: np.ascontiguousarray(v) for k, v in comb.items()},
     )
     # frontier capacity buckets: powers of two up to Vm
     caps = []
@@ -202,7 +286,9 @@ def build_shard_data(pg: PartitionedGraph, *, tile_e: int = 512,
                      n_tiles=n_tiles, n_windows=n_windows,
                      tile_e=tile_e, tile_r=tile_r,
                      num_vertices=pg.num_vertices,
-                     frontier_capacities=tuple(caps))
+                     frontier_capacities=tuple(caps),
+                     comb_max=comb_max, comb_tiles=comb_tiles,
+                     comb_windows=comb_windows)
     return data, meta
 
 
@@ -213,6 +299,7 @@ def abstract_shard_data(meta: ShardMeta, mesh=None,
     signature, so argument bytes reflect what that architecture loads)."""
     P, Vm, E2 = meta.P, meta.v_max, meta.e_pair_max
     Lf = meta.n_tiles * meta.tile_e
+    CL = meta.comb_tiles * meta.tile_e
     i32, f32, b = jnp.int32, jnp.float32, jnp.bool_
 
     def sds(shape, dt):
@@ -222,6 +309,7 @@ def abstract_shard_data(meta: ShardMeta, mesh=None,
     csc = exchange in ("allgather", "frontier")
     ring = exchange == "ring"
     uni = exchange == "unicast"
+    comb = exchange == "combined"
     return ShardData(
         vert_gid=sds((P, Vm), i32), vert_valid=sds((P, Vm), b),
         out_deg=sds((P, Vm), i32), flt_cnt=sds((P, Vm), i32),
@@ -246,6 +334,17 @@ def abstract_shard_data(meta: ShardMeta, mesh=None,
         pair_w=sds((P, P, E2), f32) if uni else None,
         pair_valid=sds((P, P, E2), b) if uni else None,
         recv_dst_local=sds((P, P, E2), i32) if uni else None,
+        comb_wid=sds((P, meta.comb_tiles), i32) if comb else None,
+        comb_rel=sds((P, CL), i32) if comb else None,
+        comb_written=sds((P, meta.comb_windows), b) if comb else None,
+        comb_src_local=sds((P, CL), i32) if comb else None,
+        comb_src_gid=sds((P, CL), i32) if comb else None,
+        comb_src_outdeg=sds((P, CL), i32) if comb else None,
+        comb_w=sds((P, CL), f32) if comb else None,
+        comb_valid=sds((P, CL), b) if comb else None,
+        comb_seg=sds((P, CL), i32) if comb else None,
+        comb_recv_dst_local=sds((P, P, meta.comb_max), i32)
+        if comb else None,
     )
 
 
@@ -257,7 +356,8 @@ class ShardEngine:
                  backend: str = "pallas",
                  tile_e: int = 512, tile_r: int = 256,
                  params: Optional[Dict[str, Any]] = None):
-        assert exchange in ("allgather", "ring", "frontier", "unicast")
+        assert exchange in ("allgather", "ring", "frontier", "unicast",
+                            "combined")
         self.kernel = kernel
         self.mesh = mesh
         self.exchange = exchange
@@ -275,6 +375,7 @@ class ShardEngine:
             self.pg = None
             self.meta = pg_or_meta
             self._data = None
+        self._device_resident = self._data is not None
         self.params.setdefault("num_vertices", self.meta.num_vertices)
         self._interpret = jax.default_backend() != "tpu"
         # jitted program cache (per superstep cap) + trace counter; see
@@ -292,6 +393,7 @@ class ShardEngine:
             "ring": self._deliver_ring,
             "frontier": self._deliver_frontier,
             "unicast": self._deliver_unicast,
+            "combined": self._deliver_combined,
         }[self.exchange]
 
         def init_stats():
@@ -312,19 +414,29 @@ class ShardEngine:
     # ---------------- per-shard delivery kernels ----------------------
     def _local_combine(self, masked, d, combiner):
         """Per-shard segmented combine (Pallas kernel or jnp oracle)."""
-        k, m = self.kernel, self.meta
+        m = self.meta
         if self.backend == "pallas":
-            from ..kernels.edge_gather import segment_combine_pallas
-            out = segment_combine_pallas(
+            from ..kernels.edge_gather import segment_combine_windows
+            return segment_combine_windows(
                 d.wid, d.rel, masked, combiner=combiner,
                 tile_e=m.tile_e, tile_r=m.tile_r, n_windows=m.n_windows,
-                interpret=self._interpret)
-            ident = kops.identity_for(combiner, masked.dtype)
-            written = jnp.repeat(d.window_written, m.tile_r,
-                                 total_repeat_length=m.n_windows * m.tile_r)
-            out = jnp.where(written, out, ident)
-            return out[: m.v_max + 1]
+                window_written=d.window_written,
+                num_segments=m.v_max + 1, interpret=self._interpret)
         return kref.segment_combine(masked, d.seg, m.v_max + 1, combiner)
+
+    def _comb_combine(self, masked, d, combiner):
+        """Source-side segmented combine over the dst-sorted combined
+        layout: one output slot per (destination shard, dst rank)."""
+        m = self.meta
+        n_seg = m.P * (m.comb_max + 1)
+        if self.backend == "pallas":
+            from ..kernels.edge_gather import segment_combine_windows
+            return segment_combine_windows(
+                d.comb_wid, d.comb_rel, masked, combiner=combiner,
+                tile_e=m.tile_e, tile_r=m.tile_r,
+                n_windows=m.comb_windows, window_written=d.comb_written,
+                num_segments=n_seg, interpret=self._interpret)
+        return kref.segment_combine(masked, d.comb_seg, n_seg, combiner)
 
     def _consume(self, d, payload_flat, active_flat):
         """Receiver-side scatter+gather against the local CSC lanes given
@@ -529,6 +641,69 @@ class ShardEngine:
         words = jnp.float32(m.e_pair_max * (m.P - 1))
         return acc, got, carry, {"n_msgs": n_msgs, "words": words}
 
+    def _deliver_combined(self, d, payload, active):
+        """Combine-at-source (the paper's degree-factor headline): fold
+        the per-edge messages down to one partial per (destination shard,
+        destination vertex) BEFORE the wire, then all_to_all blocks of
+        ``comb_max`` slots — the receiver merges pre-combined partials
+        with the same monoid, so the two-level fold is exact for min/max
+        (SSSP's lexicographic carry rides the same two-level winner
+        select as unicast) and reorder-tolerant for add."""
+        k, m = self.kernel, self.meta
+        R = m.comb_max
+        n_seg = m.P * (R + 1)
+        vals = jnp.take(payload, d.comb_src_local)
+        act = jnp.take(active, d.comb_src_local) & d.comb_valid
+        msg = k.scatter(vals, d.comb_w, d.comb_src_gid, d.comb_src_outdeg)
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+        masked = jnp.where(act, msg, ident)
+        accs = self._comb_combine(masked, d, k.combiner)       # (n_seg,)
+        send = accs.reshape(m.P, R + 1)[:, :R]                 # (P, R)
+        send_act = self._comb_combine(
+            jnp.where(act, 1, 0).astype(jnp.int32), d, "max"
+        ).reshape(m.P, R + 1)[:, :R] > 0
+        recv = jax.lax.all_to_all(send, AXIS, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        recv_act = jax.lax.all_to_all(send_act, AXIS, split_axis=0,
+                                      concat_axis=0, tiled=False)
+        seg = d.comb_recv_dst_local                            # (P, R)
+        acc = kref.segment_combine(recv.reshape(-1), seg.reshape(-1),
+                                   m.v_max, k.combiner)
+        gv = kref.segment_combine(
+            jnp.where(recv_act, 1, 0).astype(jnp.int32).reshape(-1),
+            seg.reshape(-1), m.v_max, "max")
+        got = gv > 0
+        carry = None
+        if k.carry_dtype is not None:
+            cident = kops.identity_for("min", k.carry_dtype)
+            cvals = k.scatter_carry(vals, d.comb_w, d.comb_src_gid,
+                                    d.comb_src_outdeg)
+            # source-level winner: the edge whose key equals its
+            # (dest, rank) slot's combined key; min carry breaks ties —
+            # the per-slot (key, carry) pair then folds at the receiver
+            # exactly like a unicast edge would
+            accs_pad = jnp.concatenate(
+                [accs, jnp.full((1,), ident, accs.dtype)])
+            win = act & (masked == jnp.take(
+                accs_pad, jnp.minimum(d.comb_seg, n_seg)))
+            csend = self._comb_combine(
+                jnp.where(win, cvals, cident), d, "min"
+            ).reshape(m.P, R + 1)[:, :R]
+            crecv = jax.lax.all_to_all(csend, AXIS, split_axis=0,
+                                       concat_axis=0, tiled=False)
+            acc_pad = jnp.concatenate(
+                [acc, jnp.full((1,), ident, acc.dtype)])
+            winner = recv_act & (recv == jnp.take(
+                acc_pad, jnp.minimum(seg, m.v_max)))
+            carry = kref.segment_combine(
+                jnp.where(winner, crecv, cident).reshape(-1),
+                seg.reshape(-1), m.v_max, "min")
+        n_msgs = jnp.sum(act.astype(jnp.int32))
+        # actual wire: one (id, payload) slot per padded remote dst —
+        # the degree-factor win over unicast's e_pair_max per-edge blocks
+        words = jnp.float32(2 * R * (m.P - 1))
+        return acc, got, carry, {"n_msgs": n_msgs, "words": words}
+
     # ---------------- superstep + loop ---------------------------------
     def _shard_step(self, d: ShardData, payload, active, state, superstep):
         """One superstep as a plain function (kept for the dry-run /
@@ -538,16 +713,17 @@ class ShardEngine:
         return (c.state, c.payload, c.active, c.stats["messages"],
                 c.stats["words"])
 
-    def _make_run(self, cap: int):
-        if ("single", cap) in self._run_cache:
-            return self._run_cache[("single", cap)]
+    def _make_run(self, cap: int, qkeys: tuple = ()):
+        ck = ("single", cap, qkeys)
+        if ck in self._run_cache:
+            return self._run_cache[ck]
         prog = self._prog
 
-        def shard_fn(d: ShardData):
+        def shard_fn(d: ShardData, qkw):
             self.traces += 1  # trace-time side effect (see Engine.traces)
             # shard_map blocks keep a size-1 leading (sharded) axis
             d = jax.tree.map(lambda a: a[0], d)
-            c = prog.while_run(d, cap, self.params, {})
+            c = prog.while_run(d, cap, self.params, qkw)
             total_msgs = jax.lax.psum(c.stats["messages"], AXIS)
             total_words = jax.lax.psum(c.stats["words"], AXIS)
             # re-add shard axis
@@ -557,13 +733,14 @@ class ShardEngine:
         m = self.meta
         in_specs = jax.tree.map(lambda _: P(AXIS), self._data,
                                 is_leaf=lambda x: x is None)
+        qspec = {kk: P() for kk in qkeys}
         state_spec = P(AXIS)
         fn = _shard_map(
             shard_fn, mesh=self.mesh,
-            in_specs=(in_specs,),
+            in_specs=(in_specs, qspec),
             out_specs=(state_spec, P(), P(), P()))
         fn = jax.jit(fn)
-        self._run_cache[("single", cap)] = fn
+        self._run_cache[ck] = fn
         return fn
 
     def _make_run_batch(self, cap: int, qkeys: tuple):
@@ -622,19 +799,35 @@ class ShardEngine:
         self._run_cache[ck] = fn
         return fn
 
-    def run(self, max_supersteps: Optional[int] = None):
+    def _result_comm(self, words: float) -> Dict[str, Any]:
+        return {"exchange_words": words, "wire_words": words,
+                "exchange": self.exchange,
+                "scheme": f"shard_{self.exchange}"}
+
+    def run(self, max_supersteps: Optional[int] = None, **query_kwargs):
+        """Single query (an :class:`~.engine.EngineResult`; also indexable
+        like the historical result dict). ``query_kwargs`` (e.g.
+        ``root=7``) are traced scalars, matching ``Engine.run``."""
+        unknown = set(query_kwargs) - set(self.kernel.query_params)
+        if unknown:
+            raise ValueError(
+                f"kernel {self.kernel.name!r} takes query params "
+                f"{tuple(self.kernel.query_params)}, got unexpected "
+                f"{sorted(unknown)}")
         cap = (max_supersteps or self.kernel.max_supersteps or 100_000)
-        fn = self._make_run(cap)
-        state, s, msgs, words = fn(self._data)
-        from .engine import collect
+        qkw = {kk: jnp.asarray(v) for kk, v in query_kwargs.items()}
+        fn = self._make_run(cap, tuple(sorted(qkw)))
+        state, s, msgs, words = fn(self._data, qkw)
+        from .engine import EngineResult, collect
         state_np = jax.tree.map(np.asarray, state)
-        return {
-            "state": collect(self.pg, state_np) if self.pg else state_np,
-            "supersteps": int(np.asarray(s)[0] if np.ndim(s) else s),
-            "messages": int(np.asarray(msgs).reshape(-1)[0]),
-            "exchange_words": float(np.asarray(words).reshape(-1)[0]),
-            "exchange": self.exchange,
-        }
+        return EngineResult(
+            state=collect(self.pg, state_np) if self.pg else state_np,
+            supersteps=int(np.asarray(s)[0] if np.ndim(s) else s),
+            messages=int(np.asarray(msgs).reshape(-1)[0]),
+            comm=self._result_comm(
+                float(np.asarray(words).reshape(-1)[0])),
+            raw_state=state_np,
+        )
 
     def run_batch(self, max_supersteps: Optional[int] = None,
                   **query_arrays):
@@ -654,7 +847,7 @@ class ShardEngine:
                for kk, v in query_arrays.items()}
         fn = self._make_run_batch(cap, tuple(sorted(qkw)))
         state, sq, msgs, words = fn(self._data, qkw)
-        from .engine import collect
+        from .engine import EngineResult, collect
         state_np = jax.tree.map(np.asarray, state)   # leaves (P, B, ...)
         sq = np.asarray(sq).reshape(-1, np.asarray(sq).shape[-1])[0]
         msgs = np.asarray(msgs).reshape(-1, np.asarray(msgs).shape[-1])[0]
@@ -662,13 +855,13 @@ class ShardEngine:
         out = []
         for q in range(sq.shape[0]):
             state_q = jax.tree.map(lambda a: a[:, q], state_np)
-            out.append({
-                "state": collect(self.pg, state_q) if self.pg else state_q,
-                "supersteps": int(sq[q]),
-                "messages": int(msgs[q]),
-                "exchange_words": words,
-                "exchange": self.exchange,
-            })
+            out.append(EngineResult(
+                state=collect(self.pg, state_q) if self.pg else state_q,
+                supersteps=int(sq[q]),
+                messages=int(msgs[q]),
+                comm=self._result_comm(words),
+                raw_state=state_q,
+            ))
         return out
 
     @property
@@ -677,6 +870,37 @@ class ShardEngine:
         if self._data is None:
             return 0
         return int(sum(a.nbytes for a in jax.tree.leaves(self._data)))
+
+    # ---------------- residency tier (see Engine.offload/upload) -------
+    @property
+    def device_resident(self) -> bool:
+        return self._device_resident
+
+    def offload(self) -> int:
+        """Demote the sharded layout to host numpy copies (the engine
+        tier of the store's host-spill residency); jitted programs and
+        their caches survive untouched. Returns the bytes demoted."""
+        if self._data is None or not self._device_resident:
+            return 0
+        host = jax.tree.map(np.asarray, self._data)
+        self._data = host
+        self._device_resident = False
+        return int(sum(a.nbytes for a in jax.tree.leaves(host)))
+
+    def upload(self) -> float:
+        """Promote offloaded arrays back into mesh-sharded device
+        buffers. Avals are unchanged, so the next dispatch hits the
+        existing jit caches (zero re-traces). Returns wall seconds."""
+        if self._data is None or self._device_resident:
+            return 0.0
+        t0 = time.perf_counter()
+        sharding = NamedSharding(self.mesh, P(AXIS))
+        data = jax.tree.map(
+            lambda a: jax.device_put(jnp.asarray(a), sharding), self._data)
+        jax.block_until_ready(data)
+        self._data = data
+        self._device_resident = True
+        return time.perf_counter() - t0
 
     # ---------------- step-granular entry point ------------------------
     def make_stepper(self, width: int) -> "ShardLaneStepper":
@@ -692,21 +916,22 @@ class ShardEngine:
             self._steppers[width] = st
         return st
 
-    def lane_result(self, carry_host, lane: int) -> Dict[str, Any]:
-        """Package one retired stepper lane as a result dict (same fields
-        as :meth:`run`); per-shard stats are folded across the shard axis
-        (the host-side psum)."""
-        from .engine import collect
+    def lane_result(self, carry_host, lane: int):
+        """Package one retired stepper lane as an
+        :class:`~.engine.EngineResult` (same fields as :meth:`run`);
+        per-shard stats are folded across the shard axis (the host-side
+        psum)."""
+        from .engine import EngineResult, collect
         state_q = jax.tree.map(lambda a: np.asarray(a[:, lane]),
                                carry_host.state)
-        return {
-            "state": collect(self.pg, state_q) if self.pg else state_q,
-            "supersteps": int(carry_host.superstep[0, lane]),
-            "messages": int(carry_host.stats["messages"][:, lane].sum()),
-            "exchange_words":
-                float(carry_host.stats["words"][:, lane].sum()),
-            "exchange": self.exchange,
-        }
+        return EngineResult(
+            state=collect(self.pg, state_q) if self.pg else state_q,
+            supersteps=int(carry_host.superstep[0, lane]),
+            messages=int(carry_host.stats["messages"][:, lane].sum()),
+            comm=self._result_comm(
+                float(carry_host.stats["words"][:, lane].sum())),
+            raw_state=state_q,
+        )
 
     # ---------------- dry-run hooks ------------------------------------
     def superstep_fn(self):
@@ -749,11 +974,14 @@ class ShardLaneStepper(LaneStepperBase):
 
         self._fetch_lane = jax.jit(fetch_lane_fn)
 
-    @staticmethod
-    def _probe_of(carry):
+    def _probe_of(self, carry):
         # on the GLOBAL carry (outside shard_map): lane-alive is the
-        # host-side form of the §4.3 pmax'd activity bit
-        return jnp.any(carry.active, axis=(0, 2)), carry.superstep[0]
+        # host-side form of the §4.3 pmax'd activity bit; the third
+        # element is the cumulative wire words over all shards+lanes
+        # (LaneStepperBase peels it off into ``last_wire_words`` so the
+        # public (carry, act, steps) contract is unchanged)
+        return (jnp.any(carry.active, axis=(0, 2)), carry.superstep[0],
+                jnp.sum(carry.stats["words"]))
 
     def _build(self, qkw):
         eng, prog = self.eng, self.eng._prog

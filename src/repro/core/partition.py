@@ -205,6 +205,56 @@ class PartitionedGraph:
                        if f.name not in skip
                        and isinstance(getattr(self, f.name), np.ndarray)))
 
+    # -- combine-at-source buckets (degree-factor exchange compression) ----
+    def combined_buckets(self) -> Dict[str, np.ndarray]:
+        """Re-sort each (source shard p, dest shard q) edge bucket by
+        destination vertex and rank its DISTINCT destinations — the layout
+        the ``combined`` exchange segment-reduces into before the wire.
+
+        Returns a dict of (P, P, e_pair_max) edge arrays (the ``pair_*``
+        fields reordered dst-sorted within each bucket, stable), plus:
+          dst_rank : (P, P, e_pair_max) int32 — rank of the edge's dst
+                     among the bucket's distinct dsts; invalid -> comb_max
+                     (the per-bucket discard bin).
+          comb_dst : (P, P, comb_max) int32 — the r-th distinct dst_local
+                     of bucket (p, q); pad = v_max. Static layout, so the
+                     receiver never needs ids on the wire.
+          comb_max : max distinct dsts over all buckets, padded to a
+                     multiple of 8 (the all_to_all block width).
+        """
+        P, E2, Vm = self.num_parts, self.e_pair_max, self.v_max
+        key = np.where(self.pair_valid, self.pair_dst_local, Vm)
+        order = np.argsort(key, axis=-1, kind="stable")
+
+        def take(a):
+            return np.ascontiguousarray(
+                np.take_along_axis(a, order, axis=-1))
+
+        dst = np.take_along_axis(key, order, axis=-1)
+        valid = take(self.pair_valid)
+        new = np.zeros_like(valid)
+        new[..., 0] = valid[..., 0]
+        new[..., 1:] = valid[..., 1:] & (dst[..., 1:] != dst[..., :-1])
+        counts = new.sum(axis=-1)
+        R = int(counts.max()) if counts.size else 1
+        R = int(-(-max(R, 1) // 8) * 8)
+        rank = np.cumsum(new, axis=-1) - 1
+        rank = np.where(valid, rank, R).astype(np.int32)
+        comb_dst = np.full((P, P, R), Vm, np.int32)
+        pp, qq, _ = np.nonzero(new)
+        comb_dst[pp, qq, rank[new]] = dst[new]
+        return dict(
+            src_local=take(self.pair_src_local),
+            src_gid=take(self.pair_src_gid),
+            src_outdeg=take(self.pair_src_outdeg),
+            dst_local=take(self.pair_dst_local),
+            w=take(self.pair_w),
+            valid=valid,
+            dst_rank=rank,
+            comb_dst=comb_dst,
+            comb_max=R,
+        )
+
     # -- paper §4.3 accounting: how much the filter + broadcast save -------
     def comm_stats(self) -> Dict[str, float]:
         """Per-superstep worst-case traffic (units: payload words), for the

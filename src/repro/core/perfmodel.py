@@ -33,6 +33,7 @@ from typing import Dict, Optional
 __all__ = [
     "Platform", "AlgoProfile", "Workload", "limits", "speedup_eq5",
     "optimize", "PAPER_PLATFORM", "TPU_V5E", "PAPER_ALGOS", "tpu_algo",
+    "words_per_superstep", "traffic_reduction", "EXCHANGES",
 ]
 
 GiB = 1024.0 ** 3
@@ -131,11 +132,101 @@ def tpu_algo(name: str, *, tile_r: int = 256, ops_per_pair: float = 4.0,
                        m_update=m_update, m_message=m_message, m_edge=m_edge)
 
 
+# --- Exchange-schedule traffic model (degree-factor compression) --------
+EXCHANGES = ("allgather", "ring", "frontier", "unicast", "combined")
+
+
+def words_per_superstep(exchange: str, wl: Workload, n_nodes: int, *,
+                        v_max: Optional[float] = None,
+                        e_pair_max: Optional[float] = None,
+                        remote_dst_max: Optional[float] = None,
+                        frontier_cap: Optional[float] = None,
+                        ) -> Dict[str, float]:
+    """Wire words one superstep moves under each exchange schedule.
+
+    Per-shard words (each of the ``P`` shards sends this much):
+
+      allgather/ring:  v_max * (P-1)            — whole vertex window, P-1x
+      frontier:        2 * cap * (P-1)          — (id, payload) per slot
+      unicast:         e_pair_max * (P-1)       — one payload per cut edge
+      combined:        min(2*r, e_pair_max) * (P-1)
+                                                — (id, payload) per DISTINCT
+                                                  remote destination vertex
+
+    where ``r`` is the per-(shard, peer) distinct-destination count. The
+    ``min`` clamps combined at the per-edge cost: when fewer than two
+    edges share a destination, shipping per-edge blocks (ids static in the
+    layout, as unicast does) is never worse, so a schedule that combines
+    at source degrades to that. By default the shape parameters are the
+    uniform-partition estimates v_max = ceil(V/P), e_pair_max =
+    ceil(E/P^2), and r follows the occupancy (coupon-collector) estimate
+    ``v*(1-(1-1/v)^e)`` — e edges thrown at v destination slots. Pass the
+    exact padded layout values (``meta.v_max``, ``meta.e_pair_max``,
+    ``meta.comb_max``) to reproduce the engine's measured counters
+    exactly.
+    """
+    P = int(n_nodes)
+    if P <= 1:
+        return {"per_shard": 0.0, "total": 0.0}
+    vm = float(v_max) if v_max is not None else float(
+        math.ceil(wl.num_vertices / P))
+    epm = float(e_pair_max) if e_pair_max is not None else float(
+        math.ceil(wl.num_edges / (P * P)))
+    if exchange in ("allgather", "ring"):
+        per = vm * (P - 1)
+    elif exchange == "frontier":
+        cap = float(frontier_cap) if frontier_cap is not None else vm
+        per = 2.0 * cap * (P - 1)
+    elif exchange == "unicast":
+        per = epm * (P - 1)
+    elif exchange == "combined":
+        if remote_dst_max is not None:
+            r = float(remote_dst_max)
+        else:
+            v = max(vm, 1.0)
+            r = v * (1.0 - (1.0 - 1.0 / v) ** epm)
+        per = min(2.0 * r, epm) * (P - 1)
+    else:
+        raise ValueError(f"unknown exchange {exchange!r}")
+    return {"per_shard": float(per), "total": float(per * P)}
+
+
+def traffic_reduction(wl: Workload, n_nodes: int, **shape) -> float:
+    """Degree-factor traffic reduction: unicast words / combined words.
+
+    Saturates at ~e_pair_max/(2*remote_dst) ~= deg/(2*P) * v/r — the
+    paper's combine-at-source claim that traffic drops by the average
+    degree once many edges share each remote destination."""
+    uni = words_per_superstep("unicast", wl, n_nodes, **shape)["total"]
+    comb = words_per_superstep("combined", wl, n_nodes, **shape)["total"]
+    if comb <= 0.0:
+        return 1.0
+    return uni / comb
+
+
 # ------------------------------------------------------------------------
 def limits(platform: Platform, algo: AlgoProfile, wl: Workload, *,
            n_nodes: int, n_pe: Optional[int] = None, mode: str = "gravfm",
-           granularity: bool = False) -> Dict[str, float]:
-    """All four §5 limits (TEPS) + the binding constraint (eq. 9)."""
+           granularity: bool = False, exchange: Optional[str] = None,
+           wire_words: Optional[float] = None,
+           v_max: Optional[float] = None,
+           e_pair_max: Optional[float] = None,
+           remote_dst_max: Optional[float] = None,
+           frontier_cap: Optional[float] = None) -> Dict[str, float]:
+    """All four §5 limits (TEPS) + the binding constraint (eq. 9).
+
+    When ``exchange`` (or a measured ``wire_words`` total per superstep)
+    is given, L_if and L_net are derived from the exchange schedule's
+    actual wire traffic instead of the closed-form eq. 3/6 (which assume
+    the allgather/update-combining schedule): a superstep traverses |E|
+    edges while moving ``w`` words per shard, so
+
+        L_if  = BW_if * |E| / (2 * w * m_update)       (send+recv)
+        L_net = BW_net * |E| / (P * w * m_update)
+
+    This reproduces eq. 3/6 exactly for ``exchange="allgather"`` with the
+    analytic v_max = |V|/P.
+    """
     assert mode in ("gravf", "gravfm")
     n_pe = platform.n_pe_max if n_pe is None else n_pe
     deg = wl.avg_degree
@@ -153,6 +244,23 @@ def limits(platform: Platform, algo: AlgoProfile, wl: Workload, *,
     if n_nodes <= 1:
         l_if = math.inf
         l_net = math.inf
+    elif exchange is not None or wire_words is not None:
+        if wire_words is not None:
+            w_total = float(wire_words)
+        else:
+            w_total = words_per_superstep(
+                exchange, wl, n_nodes, v_max=v_max, e_pair_max=e_pair_max,
+                remote_dst_max=remote_dst_max,
+                frontier_cap=frontier_cap)["total"]
+        if w_total <= 0.0:
+            l_if = math.inf
+            l_net = math.inf
+        else:
+            w_shard = w_total / n_nodes
+            l_if = (platform.bw_if * wl.num_edges
+                    / (2 * w_shard * algo.m_update))
+            l_net = (platform.bw_network * wl.num_edges
+                     / (w_total * algo.m_update))
     elif mode == "gravfm":
         l_if = (platform.bw_if / (2 * algo.m_update)
                 * n_nodes / (n_nodes - 1) * deg)                      # eq. 3

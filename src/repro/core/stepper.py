@@ -158,18 +158,25 @@ class LaneStepperBase:
     lane-indexing axis differs: the global-array stepper's carry leads
     with the lane axis, the shard stepper's with the shard axis)."""
 
-    @staticmethod
-    def _unpack(out):
-        carry, act, steps = out
-        return carry, np.asarray(act), np.asarray(steps)
+    # cumulative wire words (across all lanes) as of the last dispatch —
+    # updated by ``_unpack`` when the fused probe carries a words element;
+    # LaneTable.step turns consecutive values into per-superstep deltas
+    # for the trace bus.
+    last_wire_words: float = 0.0
+
+    def _unpack(self, out):
+        carry = out[0]
+        if len(out) > 3:
+            self.last_wire_words = float(np.asarray(out[3]))
+        return carry, np.asarray(out[1]), np.asarray(out[2])
 
     @staticmethod
     def _qdev(qkw: Dict[str, np.ndarray]):
         return {k: jnp.asarray(v) for k, v in qkw.items()}
 
     def probe(self, carry: StepCarry):
-        act, steps = self._probe(carry)
-        return np.asarray(act), np.asarray(steps)
+        out = self._probe(carry)
+        return np.asarray(out[0]), np.asarray(out[1])
 
     def fetch(self, carry: StepCarry) -> StepCarry:
         return jax.tree.map(np.asarray, carry)
@@ -229,13 +236,21 @@ class LaneStepper(LaneStepperBase):
     """
 
     def __init__(self, prog: SuperstepProgram, data, params: Dict[str, Any],
-                 width: int, *, trace_hook: Callable[[], None] = None):
+                 width: int, *, trace_hook: Callable[[], None] = None,
+                 wire_stat: Optional[str] = None):
         self.width = width
         hook = trace_hook or (lambda: None)
 
         def probe_of(carry):
-            return (jax.vmap(lambda c: jnp.any(c.active))(carry),
-                    carry.superstep)
+            # ``wire_stat`` names the stats entry that counts words this
+            # engine's scheme actually puts on the wire; its lane sum
+            # rides the fused probe so per-superstep traffic telemetry
+            # costs no extra dispatch (see LaneStepperBase._unpack)
+            out = (jax.vmap(lambda c: jnp.any(c.active))(carry),
+                   carry.superstep)
+            if wire_stat is not None:
+                out = out + (jnp.sum(carry.stats[wire_stat]),)
+            return out
 
         def init_fn(d, qkw):
             hook()
@@ -491,14 +506,17 @@ class LaneTable:
         # that retires this superstep must still be attributed to it)
         lanes = {int(i): self.meta[i].seq
                  for i in np.flatnonzero(alive) if self.meta[i] is not None}
+        w0 = getattr(self.stepper, "last_wire_words", 0.0)
         t0 = time.perf_counter()
         self.carry, self.act, self.steps = self.stepper.step(
             self.carry, alive)
         # the probe arrays in the return are host numpy, so perf_counter
         # here bounds the full dispatch+sync, not just the enqueue
+        w1 = getattr(self.stepper, "last_wire_words", 0.0)
         self.trace.emit("superstep", klass=self.label,
                         ts=t0, dur_s=time.perf_counter() - t0,
-                        lanes=lanes, n_alive=len(lanes))
+                        lanes=lanes, n_alive=len(lanes),
+                        words=max(0.0, w1 - w0))
 
     def fetch(self) -> StepCarry:
         return self.stepper.fetch(self.carry)

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["segment_combine_pallas"]
+__all__ = ["segment_combine_pallas", "segment_combine_windows"]
 
 
 def _identity_for(combiner: str, dtype):
@@ -127,3 +127,26 @@ def segment_combine_pallas(window_id, rel, vals, *, combiner: str,
         interpret=interpret,
     )(window_id, rel, vals)
     return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("combiner", "tile_e", "tile_r", "n_windows",
+                     "num_segments", "interpret"))
+def segment_combine_windows(window_id, rel, vals, *, combiner: str,
+                            tile_e: int, tile_r: int, n_windows: int,
+                            window_written, num_segments: int,
+                            interpret: bool = True):
+    """Windowed segment-combine with the full post-processing both engine
+    paths need: run :func:`segment_combine_pallas`, force never-written
+    windows (gaps in the segment range) back to the combiner identity via
+    ``window_written`` (an ``(n_windows,)`` bool mask from the layout),
+    and slice the ``(n_windows*tile_r,)`` window grid down to the first
+    ``num_segments`` true segments."""
+    out = segment_combine_pallas(window_id, rel, vals, combiner=combiner,
+                                 tile_e=tile_e, tile_r=tile_r,
+                                 n_windows=n_windows, interpret=interpret)
+    ident = _identity_for(combiner, vals.dtype)
+    written = jnp.repeat(window_written, tile_r,
+                         total_repeat_length=n_windows * tile_r)
+    return jnp.where(written, out, ident)[:num_segments]

@@ -65,6 +65,7 @@ class QueryRequest:
     deadline_ms: float = 50.0
     tenant: str = "default"
     priority: int = 0
+    exchange: str = ""   # shard exchange schedule ("" = service default)
     qid: int = dataclasses.field(default_factory=lambda: next(_qid_counter))
     arrival_s: float = dataclasses.field(default_factory=time.perf_counter)
 
@@ -86,12 +87,14 @@ class QueryClass:
     num_shards: int
     backend: str
     version: int = 0
+    exchange: str = ""   # "" = single-host Engine; else a ShardEngine mode
 
     @classmethod
     def of(cls, req: QueryRequest, num_shards: int,
-           backend: str, version: int = 0) -> "QueryClass":
+           backend: str, version: int = 0,
+           exchange: str = "") -> "QueryClass":
         return cls(req.graph_id, req.kernel, req.mode, num_shards, backend,
-                   version)
+                   version, req.exchange or exchange)
 
 
 class Batcher:

@@ -76,8 +76,11 @@ __all__ = ["ContinuousScheduler", "ParkedQueue", "class_key"]
 
 def class_key(qclass: QueryClass) -> str:
     """Stable string key for per-class cost-model stats."""
-    return (f"{qclass.graph_id}@v{qclass.version}/"
+    base = (f"{qclass.graph_id}@v{qclass.version}/"
             f"{qclass.kernel}/{qclass.mode}")
+    if getattr(qclass, "exchange", ""):
+        base += f"+{qclass.exchange}"
+    return base
 
 
 @dataclasses.dataclass
@@ -687,7 +690,9 @@ class ContinuousScheduler:
             if self.stats is not None:
                 self.stats.record_retire(
                     messages=res.messages, latency_ms=latency_ms,
-                    class_key=class_key(qclass))
+                    class_key=class_key(qclass),
+                    wire_words=float((getattr(res, "comm", None) or {})
+                                     .get("wire_words", 0.0)))
                 self.stats.record_query_depth(class_key(qclass),
                                               res.supersteps)
                 if meta.predicted_depth > 0:

@@ -67,6 +67,9 @@ class PlanKey:
     batch_size: int      # leading query axis (1 = unbatched program)
     backend: str = "ref"
     version: int = 0     # published graph version (0 = latest at lookup)
+    exchange: str = ""   # "" = single-host Engine; else ShardEngine mode
+                         # ("allgather"|"ring"|"frontier"|"unicast"|
+                         #  "combined") over a num_shards-device mesh
 
 
 class CompiledPlan:
@@ -155,11 +158,11 @@ class PlanCache:
         # ordering is store lock -> this lock -> stats lock, never the
         # reverse, so it cannot deadlock with either
         self._sync_lock = threading.Lock()
-        self._engines: Dict[Tuple[str, int, str, str, int, str],
+        self._engines: Dict[Tuple[str, int, str, str, int, str, str],
                             Engine] = {}
         # bytes each engine reported to the store's budget (so a
         # discard can un-charge exactly what was charged)
-        self._engine_nbytes: Dict[Tuple[str, int, str, str, int, str],
+        self._engine_nbytes: Dict[Tuple[str, int, str, str, int, str, str],
                                   int] = {}
         self._plans: Dict[PlanKey, CompiledPlan] = {}
         self._steppers: Dict[PlanKey, StepperPlan] = {}
@@ -205,7 +208,7 @@ class PlanCache:
 
     def _engine_for(self, key: PlanKey, method: str) -> Engine:
         ek = (key.graph_id, key.version, key.kernel, key.mode,
-              key.num_shards, key.backend)
+              key.num_shards, key.backend, key.exchange)
         eng = self._engines.get(ek)
         if eng is None:
             if key.kernel not in ALGORITHMS:
@@ -213,8 +216,16 @@ class PlanCache:
                                f"{sorted(ALGORITHMS)}")
             pg = self.graph(key.graph_id, key.num_shards, method,
                             version=key.version or None)
-            eng = Engine(ALGORITHMS[key.kernel](), pg, mode=key.mode,
-                         backend=key.backend)
+            if key.exchange:
+                from ..core.engine_shardmap import ShardEngine
+                from ..launch.mesh import compat_make_mesh
+                mesh = compat_make_mesh((key.num_shards,), ("graph",))
+                eng = ShardEngine(ALGORITHMS[key.kernel](), pg, mesh=mesh,
+                                  exchange=key.exchange,
+                                  backend=key.backend)
+            else:
+                eng = Engine(ALGORITHMS[key.kernel](), pg, mode=key.mode,
+                             backend=key.backend)
             self._engines[ek] = eng
             # charge the TRUE engine-tier device bytes against the
             # store's budget (replacing the partition-layout proxy): a

@@ -103,6 +103,7 @@ class GraphQueryService:
 
     def __init__(self, *, num_shards: int = 4, max_batch: int = 32,
                  backend: str = "ref", partition_method: str = "greedy",
+                 exchange: str = "",
                  slack_ms: float = 5.0,
                  scheduling: str = "bucketed",
                  slots: Optional[int] = None,
@@ -129,6 +130,11 @@ class GraphQueryService:
         self.max_batch = max_batch
         self.backend = backend
         self.partition_method = partition_method
+        # default shard exchange schedule: "" serves via the single-host
+        # Engine; "allgather"/"ring"/"frontier"/"unicast"/"combined"
+        # serve via a num_shards-device ShardEngine. A request's
+        # ``exchange`` field overrides per query class.
+        self.exchange = exchange
         self.scheduling = scheduling
         self.max_supersteps = max_supersteps
         self.result_cache_size = result_cache_size
@@ -249,13 +255,15 @@ class GraphQueryService:
         return self
 
     def warm(self, graph_id: str, kernel: str, *, mode: str = "gravfm",
-             batch_sizes: Optional[List[int]] = None) -> None:
+             batch_sizes: Optional[List[int]] = None,
+             exchange: Optional[str] = None) -> None:
         """Pre-trace plans for a query class so first requests don't pay
         compile latency (steady-state serving then re-traces nothing).
         Defaults to EVERY bucket up to max_batch — deadline flushes
         dispatch partial batches, so intermediate buckets are hot paths
         too."""
         version = self.store.known_version(graph_id)
+        exchange = self.exchange if exchange is None else exchange
         kern = ALGORITHMS[kernel]() if kernel in ALGORITHMS else None
         if (self._continuous is not None and kern is not None
                 and kern.query_params):
@@ -263,7 +271,7 @@ class GraphQueryService:
             # per class; pre-trace its init/admit/step/probe programs
             splan = self._stepper_for(QueryClass(
                 graph_id, kernel, mode, self.num_shards, self.backend,
-                version))
+                version, exchange))
             qkw = {p: np.zeros((self._slots,), np.int32)
                    for p in splan.query_params}
             carry, _, _ = splan.stepper.init(qkw)
@@ -286,7 +294,8 @@ class GraphQueryService:
             sizes = batch_sizes
         for b in sizes:
             self.plans.get_plan(
-                self._plan_key(graph_id, kernel, mode, b, version),
+                self._plan_key(graph_id, kernel, mode, b, version,
+                               exchange=exchange),
                 method=self.partition_method, warm=True)
         self.plans.sync_trace_counters()
 
@@ -317,7 +326,8 @@ class GraphQueryService:
         # New arrivals bind the latest published version; anything
         # already queued/in flight keeps draining on its bound version.
         version = self.store.known_version(req.graph_id)
-        qclass = QueryClass.of(req, self.num_shards, self.backend, version)
+        qclass = QueryClass.of(req, self.num_shards, self.backend, version,
+                               exchange=self.exchange)
         batchable = (bool(kernel.query_params) and self.max_batch > 1)
         self.stats.record_submit()
         self.stats.record_tenant(req.tenant, submitted=1)
@@ -374,7 +384,7 @@ class GraphQueryService:
             if lease.version != version:    # publish raced the checks
                 version = lease.version
                 qclass = QueryClass.of(req, self.num_shards, self.backend,
-                                       version)
+                                       version, exchange=self.exchange)
             fut.add_done_callback(lambda _f: lease.release())
         # the class's graph/kernel/mode are now final (the lease rebind
         # above may have bumped the version) — remember them so the
@@ -519,7 +529,8 @@ class GraphQueryService:
         with self._dispatch_lock:
             return self.plans.get_stepper(
                 self._plan_key(qclass.graph_id, qclass.kernel, qclass.mode,
-                               self._slots, qclass.version),
+                               self._slots, qclass.version,
+                               exchange=qclass.exchange),
                 method=self.partition_method)
 
     # ---------------- roofline projection ------------------------------
@@ -549,7 +560,8 @@ class GraphQueryService:
                 proj = float(perfmodel.limits(
                     self._roofline_platform, algo, wl,
                     n_nodes=self.num_shards,
-                    mode=qclass.mode)["T_sys"])
+                    mode=qclass.mode,
+                    exchange=qclass.exchange or None)["T_sys"])
             except (StoreError, KeyError, ValueError):
                 proj = None
         self._roofline_cache[ck] = proj
@@ -586,10 +598,13 @@ class GraphQueryService:
 
     # ---------------- dispatch ----------------------------------------
     def _plan_key(self, graph_id: str, kernel: str, mode: str,
-                  batch_size: int, version: int = 0) -> PlanKey:
+                  batch_size: int, version: int = 0,
+                  exchange: Optional[str] = None) -> PlanKey:
         return PlanKey(graph_id=graph_id, kernel=kernel, mode=mode,
                        num_shards=self.num_shards, batch_size=batch_size,
-                       backend=self.backend, version=version)
+                       backend=self.backend, version=version,
+                       exchange=(self.exchange if exchange is None
+                                 else exchange))
 
     def _dispatch(self, qclass: QueryClass, items: List[Any]) -> None:
         """Execute one formed batch: pad to the plan bucket, run, resolve
@@ -625,7 +640,7 @@ class GraphQueryService:
             plan = self.plans.get_plan(
                 self._plan_key(qclass.graph_id, qclass.kernel, qclass.mode,
                                bucket_for(n, self.max_batch),
-                               qclass.version),
+                               qclass.version, exchange=qclass.exchange),
                 method=self.partition_method)
             bucket = plan.key.batch_size
             cap = self.max_supersteps
@@ -667,7 +682,9 @@ class GraphQueryService:
             messages=sum(r.messages for r in results),
             supersteps=max((r.supersteps for r in results), default=0),
             latencies_ms=[(now - r.arrival_s) * 1e3 for r in reqs],
-            class_key=ck)
+            class_key=ck,
+            wire_words=sum(float(r.comm.get("wire_words", 0.0))
+                           for r in results))
         if compiled:
             self.stats.record_compile(wall)
         # feed the admission-control cost model + the result cache;

@@ -57,6 +57,7 @@ class ServiceStats:
     deadline_misses: int = 0        # queries retired past their deadline
     supersteps_total: int = 0
     messages_total: int = 0         # traversed edges (TEPS numerator)
+    wire_words_total: float = 0.0   # exchange words moved across shards
     busy_time_s: float = 0.0        # wall time spent EXECUTING dispatches
     compile_time_s: float = 0.0     # wall time spent tracing/compiling
 
@@ -103,13 +104,15 @@ class ServiceStats:
         acc = self._class_acc.get(class_key)
         if acc is None:
             acc = self._class_acc[class_key] = {
-                "messages": 0.0, "busy_s": 0.0, "completed": 0.0}
+                "messages": 0.0, "busy_s": 0.0, "completed": 0.0,
+                "wire_words": 0.0}
         return acc
 
     def record_batch(self, n_queries: int, n_pad: int, wall_s: float,
                      messages: int, supersteps: int,
                      latencies_ms: List[float],
-                     class_key: Optional[str] = None) -> None:
+                     class_key: Optional[str] = None,
+                     wire_words: float = 0.0) -> None:
         with self._lock:
             self.batches_dispatched += 1
             self.queries_completed += n_queries
@@ -117,12 +120,14 @@ class ServiceStats:
             self.busy_time_s += wall_s
             self.messages_total += messages
             self.supersteps_total += supersteps
+            self.wire_words_total += wire_words
             self._latencies_ms.extend(latencies_ms)
             if class_key is not None:
                 acc = self._class_acc_of(class_key)
                 acc["messages"] += messages
                 acc["busy_s"] += wall_s
                 acc["completed"] += n_queries
+                acc["wire_words"] += wire_words
 
     def record_cache(self, hit: bool) -> None:
         with self._lock:
@@ -263,18 +268,21 @@ class ServiceStats:
             self.supersteps_total += 1
 
     def record_retire(self, messages: int, latency_ms: float,
-                      class_key: Optional[str] = None) -> None:
+                      class_key: Optional[str] = None,
+                      wire_words: float = 0.0) -> None:
         """One query retired mid-flight by the continuous scheduler.
         (Device supersteps are counted per pump via record_pump_step,
         not per query — W lanes share each superstep.)"""
         with self._lock:
             self.queries_completed += 1
             self.messages_total += messages
+            self.wire_words_total += wire_words
             self._latencies_ms.append(latency_ms)
             if class_key is not None:
                 acc = self._class_acc_of(class_key)
                 acc["messages"] += messages
                 acc["completed"] += 1
+                acc["wire_words"] += wire_words
 
     def record_deadline_miss(self, n: int = 1) -> None:
         """A query completed AFTER its deadline (counted where the
@@ -306,6 +314,7 @@ class ServiceStats:
         for ck, a in acc.items():
             teps = a["messages"] / a["busy_s"] if a["busy_s"] > 0 else 0.0
             proj = fn(ck) if fn is not None else None
+            ww = a.get("wire_words", 0.0)
             out[ck] = {
                 "teps": teps,
                 "projected_teps": float(proj) if proj else 0.0,
@@ -313,6 +322,11 @@ class ServiceStats:
                 "messages": a["messages"],
                 "busy_s": a["busy_s"],
                 "completed": a["completed"],
+                "wire_words": ww,
+                # wire cost per traversed edge: the degree-factor
+                # compression shows up here as words/message << 1
+                "words_per_message": (ww / a["messages"]
+                                      if a["messages"] > 0 else 0.0),
             }
         return out
 
@@ -353,6 +367,7 @@ class ServiceStats:
                     if self._depth_err_ewma else 0.0),
                 "supersteps_total": self.supersteps_total,
                 "messages_total": self.messages_total,
+                "wire_words_total": self.wire_words_total,
                 "busy_time_s": self.busy_time_s,
                 "compile_time_s": self.compile_time_s,
                 "qps": self.queries_completed / elapsed,

@@ -1,4 +1,4 @@
-"""Multi-device shard_map engine: all four exchange schedules must be
+"""Multi-device shard_map engine: all five exchange schedules must be
 bit-identical to the global-array engine.
 
 Needs >1 device, so the check runs in a SUBPROCESS with
@@ -26,7 +26,7 @@ g = G.uniform(300, 6.0, seed=3).symmetrized()
 pg = PT.partition_graph(g, 8, method="greedy", pad_multiple=16)
 
 ref = Engine(ALG.wcc(), pg, mode="gravfm", backend="ref").run()
-for exch in ("allgather", "ring", "frontier", "unicast"):
+for exch in ("allgather", "ring", "frontier", "unicast", "combined"):
     out = ShardEngine(ALG.wcc(), pg, mesh=mesh, exchange=exch,
                       backend="ref").run()
     assert np.array_equal(out["state"]["label"], ref.state["label"]), exch
@@ -37,11 +37,30 @@ out = ShardEngine(ALG.wcc(), pg, mesh=mesh, exchange="allgather",
                   backend="pallas", tile_e=64, tile_r=32).run()
 assert np.array_equal(out["state"]["label"], ref.state["label"])
 
+# pallas segment-combine driving BOTH levels of the combined exchange
+# (source-side per-destination fold + receiver-side merge)
+out = ShardEngine(ALG.wcc(), pg, mesh=mesh, exchange="combined",
+                  backend="pallas", tile_e=64, tile_r=32).run()
+assert np.array_equal(out["state"]["label"], ref.state["label"])
+
+# combine-at-source must move fewer words than per-edge unicast once
+# many cut edges share a destination: dense power-law R-MAT (avg degree
+# 64 over 8 shards -> ~8 edges per (pair, destination) bucket slot)
+gd = G.rmat(8, 64, seed=1)
+pgd = PT.partition_graph(gd, 8, method="greedy", pad_multiple=16)
+uni = ShardEngine(ALG.wcc(), pgd, mesh=mesh, exchange="unicast",
+                  backend="ref").run()
+comb = ShardEngine(ALG.wcc(), pgd, mesh=mesh, exchange="combined",
+                   backend="ref").run()
+assert np.array_equal(comb["state"]["label"], uni["state"]["label"])
+assert comb["exchange_words"] < uni["exchange_words"], (
+    comb["exchange_words"], uni["exchange_words"])
+
 # SSSP carry through the ring schedule
 gw = G.uniform(200, 5.0, seed=4, weighted=True).symmetrized()
 pgw = PT.partition_graph(gw, 8, method="round_robin", pad_multiple=16)
 refs = Engine(ALG.sssp(0), pgw, mode="gravfm", backend="ref").run()
-for exch in ("allgather", "ring", "unicast"):
+for exch in ("allgather", "ring", "unicast", "combined"):
     out = ShardEngine(ALG.sssp(0), pgw, mesh=mesh, exchange=exch,
                       backend="ref").run()
     assert np.allclose(out["state"]["dist"], refs.state["dist"],
@@ -64,7 +83,7 @@ assert compact["exchange_words"] < dense["exchange_words"], (
 # batched multi-query execution through the explicit collectives: every
 # exchange must match per-root single-query Engine runs exactly
 roots = np.array([0, 5, 17, 100, 250, 7, 99, 3], np.int32)
-for exch in ("allgather", "ring", "frontier", "unicast"):
+for exch in ("allgather", "ring", "frontier", "unicast", "combined"):
     se = ShardEngine(ALG.bfs(), pg, mesh=mesh, exchange=exch, backend="ref")
     outs = se.run_batch(root=roots)
     for i, r in enumerate(roots):
@@ -77,7 +96,7 @@ for exch in ("allgather", "ring", "frontier", "unicast"):
 # continuous stepping through the explicit collectives: a query spliced
 # into the in-flight slot array at superstep t must match a solo run
 # exactly, for every exchange schedule; slot recycling re-traces nothing
-for exch in ("allgather", "ring", "frontier", "unicast"):
+for exch in ("allgather", "ring", "frontier", "unicast", "combined"):
     se = ShardEngine(ALG.bfs(), pg, mesh=mesh, exchange=exch, backend="ref")
     st = se.make_stepper(4)
     qkw = {{"root": np.zeros(4, np.int32)}}

@@ -104,6 +104,85 @@ def test_min_nodes_for_memory():
     assert pm.min_nodes_for_memory(pm.PAPER_PLATFORM, a, wl) > 1
 
 
+# ---- exchange-schedule traffic model (degree-factor compression) ------
+
+def test_words_allgather_reproduces_eq3():
+    """The word-based L_if/L_net derivation must reproduce the paper's
+    closed-form eq. 3/6 exactly for the allgather schedule with the
+    analytic v_max = |V|/P."""
+    a = pm.PAPER_ALGOS["bfs"]
+    for n in (2, 4, 8):   # divide |V| evenly, so ceil() is exact
+        wl = pm.Workload(2 ** 20, 12 * 2 ** 20)
+        base = pm.limits(pm.PAPER_PLATFORM, a, wl, n_nodes=n)
+        wlim = pm.limits(pm.PAPER_PLATFORM, a, wl, n_nodes=n,
+                         exchange="allgather")
+        assert math.isclose(base["L_if"], wlim["L_if"], rel_tol=1e-9)
+        assert math.isclose(base["L_net"], wlim["L_net"], rel_tol=1e-9)
+
+
+def test_combined_never_exceeds_unicast():
+    """min(2*remote_dst, e_pair) clamps the combined schedule at the
+    per-edge cost, so combined <= unicast for EVERY workload — sparse
+    graphs degrade to per-edge blocks instead of paying the (id,
+    payload) doubling on singleton destinations."""
+    for deg in (1, 2, 4, 8, 32, 128):
+        for p in (2, 4, 8):
+            wl = pm.Workload(1 << 16, deg << 16)
+            uni = pm.words_per_superstep("unicast", wl, p)["total"]
+            comb = pm.words_per_superstep("combined", wl, p)["total"]
+            assert comb <= uni + 1e-9, (deg, p, comb, uni)
+
+
+def test_traffic_reduction_monotone_in_degree():
+    """The degree-factor claim: as avg degree grows, more cut edges share
+    each remote destination and the reduction grows monotonically."""
+    reds = [pm.traffic_reduction(pm.Workload(1 << 16, d << 16), 4)
+            for d in (2, 4, 8, 16, 32, 64, 128)]
+    assert all(b >= a - 1e-9 for a, b in zip(reds, reds[1:])), reds
+    assert reds[-1] > 10.0   # deg 128 over 4 shards: >> degree/2P floor
+
+
+def test_exact_layout_overrides():
+    """Passing the engine's padded layout counters reproduces its wire
+    counters exactly: unicast = e_pair_max*(P-1)*P, combined =
+    2*comb_max*(P-1)*P per superstep."""
+    wl = pm.Workload(1024, 57266)
+    uni = pm.words_per_superstep("unicast", wl, 4, e_pair_max=3784)
+    comb = pm.words_per_superstep("combined", wl, 4, e_pair_max=3784,
+                                  remote_dst_max=264)
+    assert uni["total"] == 3784 * 3 * 4
+    assert comb["total"] == 2 * 264 * 3 * 4
+
+
+def test_combined_lifts_interface_limit_on_paper_platform():
+    """On the paper's platform at edgefactor 32, switching the traffic
+    term from per-edge unicast to combine-at-source lifts L_if by the
+    degree factor — the systems claim the whole PR reproduces."""
+    a = pm.PAPER_ALGOS["wcc"]
+    uni = pm.limits(pm.PAPER_PLATFORM, a, WL_PEAK, n_nodes=4,
+                    exchange="unicast")
+    comb = pm.limits(pm.PAPER_PLATFORM, a, WL_PEAK, n_nodes=4,
+                     exchange="combined")
+    red = pm.traffic_reduction(WL_PEAK, 4)
+    assert math.isclose(comb["L_if"] / uni["L_if"], red, rel_tol=1e-9)
+    # dense graph: reduction saturates at deg/(2P) = 32/8 = 4x
+    assert math.isclose(red, 4.0, rel_tol=1e-3)
+    # measured-wire override takes precedence over the schedule name
+    w = pm.words_per_superstep("combined", WL_PEAK, 4)["total"]
+    meas = pm.limits(pm.PAPER_PLATFORM, a, WL_PEAK, n_nodes=4,
+                     wire_words=w)
+    assert math.isclose(meas["L_if"], comb["L_if"], rel_tol=1e-9)
+
+
+def test_words_single_node_and_unknown_exchange():
+    wl = pm.Workload(1 << 16, 8 << 16)
+    assert pm.words_per_superstep("combined", wl, 1)["total"] == 0.0
+    assert pm.limits(pm.PAPER_PLATFORM, pm.PAPER_ALGOS["wcc"], wl,
+                     n_nodes=1, exchange="combined")["L_if"] == math.inf
+    with pytest.raises(ValueError):
+        pm.words_per_superstep("bogus", wl, 4)
+
+
 def test_tpu_profile_mxu_flips_bottleneck():
     """The VPU mask kernel is compute-limited; the one-hot MXU variant
     moves the bottleneck to network/memory — the §Perf hillclimb axis."""
