@@ -9,8 +9,10 @@ backend: interpret-mode Pallas is a correctness vehicle, not a timing one.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, List, Optional
 
 ROWS = []
 
@@ -19,11 +21,48 @@ ROWS = []
 # CI workflow uploads the file as a build artifact).
 TRACE_OUT = None
 
+# ``--metrics-out PATH``: the service-driving benchmarks dump a
+# MetricsRegistry JSON snapshot here (also a CI artifact).
+METRICS_OUT = None
+
+# git-tracked trajectory history entries kept per suite
+TRAJECTORY_CAP = 200
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def append_trajectory(suite: str, rows: List[str], wall_s: float,
+                      root: Optional[str] = None) -> str:
+    """Append one run's rows to ``BENCH_<suite>.json`` at the repo root
+    — the git-tracked performance trajectory (each CI run extends it;
+    diffs show the numbers moving). Returns the file path."""
+    root = root or os.path.dirname(os.path.dirname(os.path.abspath(
+        __file__)))
+    path = os.path.join(root, f"BENCH_{suite}.json")
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (OSError, ValueError):
+            history = []   # a corrupt history never fails the suite
+    parsed = []
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        parsed.append({"name": name, "us_per_call": float(us),
+                       "derived": derived})
+    history.append({"ts": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                        time.gmtime()),
+                    "wall_s": round(wall_s, 3), "rows": parsed})
+    history = history[-TRAJECTORY_CAP:]
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+        f.write("\n")
+    return path
 
 
 def rmat_graph(scale: int, edge_factor: int = 16, *, seed: int = 0,

@@ -4,8 +4,13 @@ micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows.
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig7 fig12 # subset by prefix
   PYTHONPATH=src python -m benchmarks.run traceov --trace-out trace.json
+
+Each suite also appends its rows to ``BENCH_<suite>.json`` at the repo
+root — the git-tracked performance trajectory (``--no-trajectory``
+skips the write, e.g. for scratch runs).
 """
 import argparse
+import time
 
 from . import common
 from . import continuous as CONT
@@ -50,14 +55,25 @@ def main() -> None:
     ap.add_argument("--trace-out", metavar="PATH", default=None,
                     help="export a Chrome-trace JSON (Perfetto-loadable) "
                          "of a service benchmark's query lifecycle here")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="dump a service benchmark's metrics-registry "
+                         "JSON snapshot here")
+    ap.add_argument("--no-trajectory", action="store_true",
+                    help="don't append this run to BENCH_<suite>.json")
     args = ap.parse_args()
     common.TRACE_OUT = args.trace_out
+    common.METRICS_OUT = args.metrics_out
     print("name,us_per_call,derived")
     for key, fn in ALL.items():
         if args.prefixes and not any(key.startswith(w)
                                      for w in args.prefixes):
             continue
+        rows0 = len(common.ROWS)
+        t0 = time.perf_counter()
         fn()
+        if not args.no_trajectory:
+            common.append_trajectory(key, common.ROWS[rows0:],
+                                     time.perf_counter() - t0)
 
 
 if __name__ == "__main__":

@@ -1,19 +1,27 @@
-"""Tracing overhead on the continuous-scheduling hot path.
+"""Tracing + metrics/watchdog overhead on the continuous hot path.
 
-Runs the continuous benchmark's mixed-depth BFS stream twice through
-identical services — tracing off, then tracing on — and reports the qps
-ratio. The TraceBus is designed to be negligible on the hot path (one
-enabled-flag read when off, one leaf-lock deque append per event when
-on), so the two runs should be statistically indistinguishable.
+Runs the continuous benchmark's mixed-depth BFS stream through
+identical services with the observability layers toggled and reports
+the qps ratios:
 
-``GRAVFM_BENCH_CI=1`` turns the ratio into a gate: qps with tracing on
-must stay >= ``GATE`` (95%) of tracing off, with retries because shared
-runners make single wall-clock samples noisy. When ``--trace-out PATH``
-was passed to the harness, the tracing-on service's Chrome-trace JSON
-is exported there (the CI workflow uploads it as an artifact).
+  * tracing off vs tracing on — the TraceBus is designed to be
+    negligible (one enabled-flag read when off, one leaf-lock deque
+    append per event when on);
+  * observability off vs metrics registry + SLO watchdog on — the
+    registry is pull-time (collectors run at scrape, not per query)
+    and the watchdog samples a stats snapshot a few times a second, so
+    serving should again be statistically indistinguishable.
+
+``GRAVFM_BENCH_CI=1`` turns both ratios into gates: qps with the layer
+on must stay >= ``GATE`` (95%) of off, with retries because shared
+runners make single wall-clock samples noisy. ``--trace-out PATH``
+exports the tracing-on service's Chrome-trace JSON; ``--metrics-out
+PATH`` dumps the metrics-on service's registry snapshot (both uploaded
+as CI artifacts).
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -29,12 +37,16 @@ GATE = 0.95
 
 
 def _measure(tracing: bool, g, roots, cap, width: int,
-             trace_out=None) -> float:
+             trace_out=None, metrics: bool = False,
+             watchdog: bool = False, metrics_out=None) -> float:
     svc = GraphQueryService(num_shards=4, max_batch=width, slots=width,
                             scheduling="continuous", max_supersteps=cap,
-                            result_cache_size=0, tracing=tracing)
+                            result_cache_size=0, tracing=tracing,
+                            metrics=metrics)
     svc.add_graph("uniform-16-tail", g)
     svc.warm("uniform-16-tail", "bfs")
+    if watchdog:
+        svc.start_watchdog()
     reqs = [QueryRequest("uniform-16-tail", "bfs", {"root": r},
                          deadline_ms=60_000) for r in roots]
     t0 = time.perf_counter()
@@ -43,12 +55,35 @@ def _measure(tracing: bool, g, roots, cap, width: int,
     for f in futs:
         f.result()
     wall = time.perf_counter() - t0
+    if watchdog:
+        svc.stop_watchdog()
     if tracing and trace_out:
         path = svc.dump_trace(trace_out)
         emit("trace_export", 0.0,
              f"path={path};events={svc.trace.emitted};"
              f"dropped={svc.trace.dropped}")
+    if metrics and metrics_out:
+        with open(metrics_out, "w") as f:
+            json.dump(svc.metrics_snapshot(), f, indent=1)
+        emit("metrics_export", 0.0, f"path={metrics_out}")
     return len(roots) / wall
+
+
+def _gated(label: str, ci: bool, run_off, run_on) -> None:
+    attempts = 3 if ci else 1
+    for _ in range(attempts):
+        qps_off = run_off()
+        qps_on = run_on()
+        ratio = qps_on / max(qps_off, 1e-9)
+        emit(label, 0.0, f"qps_off={qps_off:.1f};qps_on={qps_on:.1f};"
+                         f"ratio={ratio:.3f}")
+        if ratio >= GATE:
+            return
+    if ci:
+        raise SystemExit(
+            f"{label}: on-qps is {ratio:.3f}x off-qps (< {GATE}) after "
+            f"{attempts} attempts — observability overhead regression "
+            "on the continuous hot path")
 
 
 def trace_overhead():
@@ -65,20 +100,14 @@ def trace_overhead():
     for i in range(0, n_queries, 4):
         roots[i] = n_core
 
-    attempts = 3 if ci else 1
-    for attempt in range(attempts):
-        qps_off = _measure(False, g, roots, cap, width)
-        qps_on = _measure(True, g, roots, cap, width,
-                          trace_out=common.TRACE_OUT)
-        ratio = qps_on / max(qps_off, 1e-9)
-        emit("service_bfs_tracing_overhead",
-             0.0, f"qps_off={qps_off:.1f};qps_on={qps_on:.1f};"
-                  f"ratio={ratio:.3f}")
-        if ratio >= GATE:
-            break
-    else:
-        if ci:
-            raise SystemExit(
-                f"tracing-on qps is {ratio:.3f}x tracing-off "
-                f"(< {GATE}) after {attempts} attempts — tracing "
-                "overhead regression on the continuous hot path")
+    _gated("service_bfs_tracing_overhead", ci,
+           lambda: _measure(False, g, roots, cap, width),
+           lambda: _measure(True, g, roots, cap, width,
+                            trace_out=common.TRACE_OUT))
+    # metrics + watchdog gate: tracing on both sides so the delta is
+    # the registry + watchdog alone
+    _gated("service_bfs_metrics_overhead", ci,
+           lambda: _measure(True, g, roots, cap, width),
+           lambda: _measure(True, g, roots, cap, width, metrics=True,
+                            watchdog=True,
+                            metrics_out=common.METRICS_OUT))

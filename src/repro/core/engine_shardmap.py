@@ -1053,6 +1053,34 @@ class ShardLaneStepper(LaneStepperBase):
                                           lane_spec),
                                 out_specs=carry_spec)
 
+        # profiled-mode phase programs: the superstep cut at the
+        # exchange/apply boundary. Inside shard_map the collective and
+        # the receiver-side combine cannot be host-separated (the
+        # delivered intermediates only exist per-shard), so the shard
+        # profile is exchange (deliver + gather-combine, the L_if/L_net
+        # + part of L_node term) then apply. The exchange output is
+        # carry-shaped (step counter advances in apply), so both
+        # programs run carry_spec -> carry_spec.
+        def exchange_fn(d, carry):
+            eng.traces += 1
+            d, c = strip(d), strip(carry)
+            return readd(jax.vmap(
+                lambda cc: prog.step_exchange(d, cc))(c))
+
+        def apply_fn(d, carry, mid, alive):
+            eng.traces += 1
+            d, c, m = strip(d), strip(carry), strip(mid)
+            return readd(select_lanes(
+                alive, jax.vmap(lambda cc: prog.step_apply(d, cc))(m), c))
+
+        exchange_sm = _shard_map(exchange_fn, mesh=eng.mesh,
+                                 in_specs=(data_spec, carry_spec),
+                                 out_specs=carry_spec)
+        apply_sm = _shard_map(apply_fn, mesh=eng.mesh,
+                              in_specs=(data_spec, carry_spec,
+                                        carry_spec, lane_spec),
+                              out_specs=carry_spec)
+
         # fuse the lane probe into the same dispatch (see LaneStepper)
         def with_probe(sm):
             def f(*args):
@@ -1063,6 +1091,8 @@ class ShardLaneStepper(LaneStepperBase):
         self._fns = (with_probe(init_sm), with_probe(admit_sm),
                      with_probe(step_sm))
         self._restore = with_probe(restore_sm)
+        self._exchange_p = jax.jit(exchange_sm)
+        self._apply_p = jax.jit(apply_sm)
 
     def init(self, qkw):
         q = self._qdev(qkw)
@@ -1076,5 +1106,32 @@ class ShardLaneStepper(LaneStepperBase):
                                          jnp.asarray(fresh)))
 
     def step(self, carry, alive):
-        return self._unpack(self._fns[2](self.eng._data, carry,
-                                         jnp.asarray(alive)))
+        if not self.profile:
+            self.last_phases = None
+            return self._unpack(self._fns[2](self.eng._data, carry,
+                                             jnp.asarray(alive)))
+        return self._profiled_step(carry, alive)
+
+    def _profiled_step(self, carry, alive):
+        """Exchange/apply/probe with host-timed boundaries — the shard
+        twin of ``LaneStepper._profiled_step`` (same select/masking as
+        the fused program, bit-identical results)."""
+        d, alive_dev = self.eng._data, jnp.asarray(alive)
+        phases = {}
+        t = time.perf_counter()
+        mid = self._exchange_p(d, carry)
+        jax.block_until_ready(mid)
+        now = time.perf_counter()
+        phases["exchange"] = now - t
+        t = now
+        new = self._apply_p(d, carry, mid, alive_dev)
+        jax.block_until_ready(new)
+        now = time.perf_counter()
+        phases["apply"] = now - t
+        t = now
+        out = self._probe(new)
+        act, steps = np.asarray(out[0]), np.asarray(out[1])
+        self.last_wire_words = float(np.asarray(out[2]))
+        phases["probe"] = time.perf_counter() - t
+        self.last_phases = phases
+        return new, act, steps

@@ -34,6 +34,7 @@ __all__ = [
     "Platform", "AlgoProfile", "Workload", "limits", "speedup_eq5",
     "optimize", "PAPER_PLATFORM", "TPU_V5E", "PAPER_ALGOS", "tpu_algo",
     "words_per_superstep", "traffic_reduction", "EXCHANGES",
+    "PHASE_TERMS", "phase_projection",
 ]
 
 GiB = 1024.0 ** 3
@@ -278,6 +279,30 @@ def limits(platform: Platform, algo: AlgoProfile, wl: Workload, *,
         key=lambda kv: kv[1])[0]
     return {"L_PE": l_pe, "L_mem": l_mem, "L_if": l_if, "L_net": l_net,
             "T_sys": t_sys, "bottleneck": bottleneck}
+
+
+# Which §5 limit term a measured superstep phase exercises. The phase
+# profiler (core/stepper.py profiled mode) attributes superstep wall
+# time into these phases; mapping each onto its model term lets the
+# observability layer compare the measured split against ``limits()``
+# term by term (§6's roofline methodology, per term instead of per
+# T_sys). ``probe`` is pure host/dispatch overhead — no model term.
+PHASE_TERMS: Dict[str, Optional[str]] = {
+    "scatter": "L_mem",       # receiver-side scatter: memory traffic
+    "combine": "L_PE",        # gather-combine fold: PE compute (L_node)
+    "apply": "L_PE",          # vertex apply: PE compute (L_node)
+    "exchange": "L_if",       # shard collective: interface/network wire
+    "probe": None,            # host sync — outside the model
+}
+
+
+def phase_projection(lim: Dict[str, float]) -> Dict[str, Optional[float]]:
+    """Per-phase TEPS ceiling from a :func:`limits` dict: the model term
+    (eq. 1/2/3/6) each measured phase is bounded by, keyed like the
+    profiler's ``last_phases``. ``None`` for phases the model has no
+    term for (host overhead)."""
+    return {phase: (float(lim[term]) if term is not None else None)
+            for phase, term in PHASE_TERMS.items()}
 
 
 def speedup_eq5(algo: AlgoProfile, wl: Workload, n_nodes: int) -> float:

@@ -113,19 +113,52 @@ class SuperstepProgram:
         return StepCarry(state, payload, active, jnp.int32(0),
                          self.init_stats())
 
-    def step(self, data, carry: StepCarry) -> StepCarry:
+    # The superstep, split at the paper's pipeline-stage boundaries so a
+    # profiled stepper can host-time each piece (scatter ~ L_mem, combine
+    # + apply ~ L_PE/L_node, the deliver collective ~ L_if/L_net — see
+    # perfmodel.PHASE_TERMS). ``step`` composes them back into the exact
+    # pre-split op sequence, so the fused fast path traces identically.
+
+    def step_deliver(self, data, carry: StepCarry):
+        """Scatter/exchange: move this superstep's pending updates to
+        their receivers. Returns the opaque delivered tuple
+        ``(acc, got, carry_vals, aux)`` that ``step_combine`` folds."""
+        return self.deliver(data, carry.payload, carry.active)
+
+    def step_combine(self, data, carry: StepCarry, delivered) -> StepCarry:
+        """Gather-combine the delivered updates into vertex state and
+        fold the superstep's stats. Same superstep index as ``carry``
+        (the counter advances in ``step_apply``)."""
         k = self.kernel
         state, payload, active, s, stats = carry
-        acc, got, carry_v, aux = self.deliver(data, payload, active)
+        acc, got, carry_v, aux = delivered
         if k.carry_dtype is not None:
             state = k.gather(state, acc, carry_v, got, s)
         else:
             state = k.gather(state, acc, got, s)
         stats = self.update_stats(stats, data, active, aux)
+        return StepCarry(state, payload, active, s, stats)
+
+    def step_exchange(self, data, carry: StepCarry) -> StepCarry:
+        """deliver + combine fused — the shard stepper's profiled unit
+        (inside shard_map the collective and the receiver-side fold
+        cannot be host-separated without materializing per-shard
+        intermediates)."""
+        return self.step_combine(data, carry,
+                                 self.step_deliver(data, carry))
+
+    def step_apply(self, data, mid: StepCarry) -> StepCarry:
+        """The vertex apply of the *next* superstep's updates: advances
+        the superstep counter and re-masks activity."""
+        k = self.kernel
+        state, _, active, s, stats = mid
         state, payload, active = k.apply(state, data.vert_gid,
                                          data.out_deg, s + 1)
         active = active & data.vert_valid
         return StepCarry(state, payload, active, s + 1, stats)
+
+    def step(self, data, carry: StepCarry) -> StepCarry:
+        return self.step_apply(data, self.step_exchange(data, carry))
 
     def alive(self, carry: StepCarry) -> jnp.ndarray:
         return self.global_any(jnp.any(carry.active))
@@ -163,6 +196,17 @@ class LaneStepperBase:
     # LaneTable.step turns consecutive values into per-superstep deltas
     # for the trace bus.
     last_wire_words: float = 0.0
+
+    # Opt-in phase profiling: when True, ``step`` dispatches the
+    # superstep as separate phase programs with a ``block_until_ready``
+    # host-timing boundary between them and leaves the wall split in
+    # ``last_phases`` ({phase: seconds}); the default fused single
+    # dispatch is untouched and leaves it None. The phase select/masking
+    # is identical to the fused path, so results are bit-identical —
+    # only the dispatch granularity (and therefore XLA's fusion scope
+    # and the wall clock) changes.
+    profile: bool = False
+    last_phases: Optional[Dict[str, float]] = None
 
     def _unpack(self, out):
         carry = out[0]
@@ -270,6 +314,23 @@ class LaneStepper(LaneStepperBase):
             c = select_lanes(alive, new, carry)
             return (c, *probe_of(c))
 
+        # profiled-mode phase programs (traced only if profiling is ever
+        # turned on): the same superstep as step_fn, cut at the
+        # scatter / combine / apply boundaries so the host can time each
+        def deliver_fn(d, carry):
+            hook()
+            return jax.vmap(lambda c: prog.step_deliver(d, c))(carry)
+
+        def combine_fn(d, carry, delivered):
+            hook()
+            return jax.vmap(
+                lambda c, dv: prog.step_combine(d, c, dv))(carry, delivered)
+
+        def apply_fn(d, carry, mid, alive):
+            hook()
+            new = jax.vmap(lambda c: prog.step_apply(d, c))(mid)
+            return select_lanes(alive, new, carry)
+
         def fetch_lane_fn(carry, lane):
             hook()
             return jax.tree.map(
@@ -292,6 +353,9 @@ class LaneStepper(LaneStepperBase):
         self._probe = jax.jit(probe_of)
         self._fetch_lane = jax.jit(fetch_lane_fn)
         self._restore = jax.jit(restore_fn)
+        self._deliver_p = jax.jit(deliver_fn)
+        self._combine_p = jax.jit(combine_fn)
+        self._apply_p = jax.jit(apply_fn)
 
     def init(self, qkw: Dict[str, np.ndarray]):
         return self._unpack(self._init(self._data, self._qdev(qkw)))
@@ -303,8 +367,43 @@ class LaneStepper(LaneStepperBase):
                                         jnp.asarray(fresh)))
 
     def step(self, carry: StepCarry, alive: np.ndarray):
-        return self._unpack(self._step(self._data, carry,
-                                       jnp.asarray(alive)))
+        if not self.profile:
+            self.last_phases = None
+            return self._unpack(self._step(self._data, carry,
+                                           jnp.asarray(alive)))
+        return self._profiled_step(carry, alive)
+
+    def _profiled_step(self, carry: StepCarry, alive: np.ndarray):
+        """One superstep as four phase dispatches with host-timed
+        ``block_until_ready`` boundaries. Same ops and the same
+        select/masking as the fused path (bit-identical results); the
+        extra syncs are the profiling overhead, which is exactly what
+        makes the per-phase wall split measurable."""
+        d, alive_dev = self._data, jnp.asarray(alive)
+        phases: Dict[str, float] = {}
+        t = time.perf_counter()
+        delivered = self._deliver_p(d, carry)
+        jax.block_until_ready(delivered)
+        now = time.perf_counter()
+        phases["scatter"] = now - t
+        t = now
+        mid = self._combine_p(d, carry, delivered)
+        jax.block_until_ready(mid)
+        now = time.perf_counter()
+        phases["combine"] = now - t
+        t = now
+        new = self._apply_p(d, carry, mid, alive_dev)
+        jax.block_until_ready(new)
+        now = time.perf_counter()
+        phases["apply"] = now - t
+        t = now
+        out = self._probe(new)
+        act, steps = np.asarray(out[0]), np.asarray(out[1])
+        if len(out) > 2:
+            self.last_wire_words = float(np.asarray(out[2]))
+        phases["probe"] = time.perf_counter() - t
+        self.last_phases = phases
+        return new, act, steps
 
 
 # ---------------------------------------------------------------------------
@@ -513,10 +612,17 @@ class LaneTable:
         # the probe arrays in the return are host numpy, so perf_counter
         # here bounds the full dispatch+sync, not just the enqueue
         w1 = getattr(self.stepper, "last_wire_words", 0.0)
+        extra = {}
+        ph = getattr(self.stepper, "last_phases", None)
+        if ph is not None:
+            # profiled mode: the measured scatter/combine/apply/probe
+            # wall split rides the event (Perfetto args pane / L_* term
+            # comparison against perfmodel.phase_projection)
+            extra["phase"] = dict(ph)
         self.trace.emit("superstep", klass=self.label,
                         ts=t0, dur_s=time.perf_counter() - t0,
                         lanes=lanes, n_alive=len(lanes),
-                        words=max(0.0, w1 - w0))
+                        words=max(0.0, w1 - w0), **extra)
 
     def fetch(self) -> StepCarry:
         return self.stepper.fetch(self.carry)

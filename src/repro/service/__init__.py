@@ -17,6 +17,8 @@ from ..store import (GraphLease, GraphStore, StoreError, TenantPolicy,
 from .batching import (BATCH_BUCKETS, AdmissionError, Batcher, QueryClass,
                        QueryRequest, bucket_for)
 from .continuous import ContinuousScheduler, class_key
+from .metrics import (Alert, MetricsRegistry, Watchdog, WatchdogConfig,
+                      feed_service_snapshot)
 from .plans import CompiledPlan, PlanCache, PlanKey, StepperPlan
 from .server import GraphQueryService
 from .stats import ServiceStats, percentile
@@ -33,4 +35,6 @@ __all__ = [
     "TenantPolicy", "TenantRegistry", "TokenBucket",
     "EVENT_KINDS", "QuerySpan", "TraceBus", "TraceEvent",
     "assemble_spans", "chrome_trace",
+    "Alert", "MetricsRegistry", "Watchdog", "WatchdogConfig",
+    "feed_service_snapshot",
 ]

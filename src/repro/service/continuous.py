@@ -212,13 +212,19 @@ class ContinuousScheduler:
                  preempt_margin_s: float = 0.05,
                  park_charge: Callable[[int], bool] = None,
                  park_release: Callable[[int], None] = None,
-                 trace=None):
+                 trace=None, metrics=None, profile: bool = False):
         assert slots >= 1
         self.slots = slots
         self.max_supersteps = max_supersteps
         self.stats = stats
         # duck-typed event bus (service.trace.TraceBus); None = no tracing
         self.trace = trace
+        # duck-typed metrics registry (service.metrics.MetricsRegistry);
+        # None = no per-class phase histograms
+        self.metrics = metrics
+        # when True every class's stepper runs in profiled mode (phase
+        # wall split on superstep events + phase histograms)
+        self.profile = profile
         self.preemption = preemption
         self.aging_rate = aging_rate
         self.depth_bucket_s = depth_bucket_s
@@ -272,6 +278,11 @@ class ContinuousScheduler:
                                            self._park_release),
                                trace=self.trace,
                                label=class_key(qclass))
+                # profiled mode is a stepper-level switch: flip it when
+                # the class's stepper enters service (steppers are
+                # engine-cached per width, so a re-created class run
+                # keeps the mode consistent)
+                splan.stepper.profile = self.profile
                 self._classes[qclass] = cr
             q = cr.queues.get(req.tenant)
             if q is None:
@@ -437,6 +448,18 @@ class ContinuousScheduler:
                 # control on, shed the class forever) AND inflate
                 # busy_time_s, understating qps_busy/TEPS for the run
                 self.stats.record_compile(wall)
+        if self.metrics is not None and eng.traces == traces0:
+            # profiled mode: per-class phase histograms (compile walls
+            # excluded for the same reason as above)
+            phases = getattr(cr.splan.stepper, "last_phases", None)
+            if phases:
+                ck = class_key(qclass)
+                for phase, secs in phases.items():
+                    self.metrics.observe(
+                        "gravfm_superstep_phase_seconds", secs,
+                        help="Measured superstep wall split by phase "
+                             "(profiled mode)",
+                        **{"class": ck, "phase": phase})
         return retired
 
     # ---------------- queue selection ----------------------------------
@@ -574,6 +597,11 @@ class ContinuousScheduler:
                     self._emit("admit", qid=meta.seq, tenant=meta.tenant,
                                klass=cr.table.label, reason="fresh",
                                slot=slot)
+                    if self.stats is not None:
+                        # submit->lane wait (the SLO watchdog's
+                        # queue_wait_p95 rule reads the percentile)
+                        self.stats.record_queue_wait(
+                            (now - meta.payload[0].arrival_s) * 1e3)
         except BaseException as exc:   # noqa: BLE001 — no stranding
             # popped-but-not-yet-installed items are invisible to
             # _fail_class (they are in neither the table, the queues,

@@ -91,6 +91,8 @@ from ..store import GraphStore, StoreError, TenantRegistry
 from .batching import (BATCH_BUCKETS, AdmissionError, Batcher, QueryClass,
                        QueryRequest, bucket_for)
 from .continuous import ContinuousScheduler, class_key
+from .metrics import (MetricsRegistry, Watchdog, WatchdogConfig,
+                      feed_service_snapshot)
 from .plans import PlanCache, PlanKey
 from .stats import ServiceStats
 from .trace import TraceBus
@@ -124,7 +126,11 @@ class GraphQueryService:
                  stats: Optional[ServiceStats] = None,
                  tracing: bool = True,
                  trace_capacity: int = 65536,
-                 roofline_platform=None):
+                 roofline_platform=None,
+                 metrics: bool = True,
+                 watchdog: bool = False,
+                 watchdog_config: Optional[WatchdogConfig] = None,
+                 profile_phases: bool = False):
         assert scheduling in ("bucketed", "continuous")
         self.num_shards = num_shards
         self.max_batch = max_batch
@@ -145,6 +151,15 @@ class GraphQueryService:
         # trace_snapshot exist either way); tracing=False leaves it
         # disabled and every emit is one attribute read.
         self.trace = TraceBus(capacity=trace_capacity, enabled=tracing)
+        # Aggregate metrics registry (same always-constructed contract):
+        # a pull-time collector maps stats_snapshot() onto counters/
+        # gauges at scrape, so serving pays nothing per query.
+        self.metrics = MetricsRegistry(enabled=metrics)
+        self.metrics.add_collector(self._collect_metrics)
+        self.profile_phases = profile_phases
+        self._watchdog: Optional[Watchdog] = None
+        self._watchdog_on = watchdog
+        self._watchdog_config = watchdog_config
         if plan_cache is not None:
             # the cache brings its own store; silently dropping these
             # would leave an operator believing residency is capped
@@ -184,7 +199,8 @@ class GraphQueryService:
                 depth_bucket_s=depth_bucket_s,
                 park_charge=self.store.reserve_parked,
                 park_release=self.store.release_parked,
-                trace=self.trace)
+                trace=self.trace, metrics=self.metrics,
+                profile=profile_phases)
         # Result cache PARTITIONED BY TENANT: each tenant gets its own
         # bounded LRU of ``result_cache_size`` entries, so one tenant's
         # burst of novel queries cannot evict another tenant's hot
@@ -212,7 +228,8 @@ class GraphQueryService:
         # lock and is cached per class (limits() is pure arithmetic but
         # host_graph takes the store lock).
         self._class_meta: Dict[str, QueryClass] = {}
-        self._roofline_cache: Dict[str, Optional[float]] = {}
+        self._limits_cache: \
+            Dict[str, Optional[Dict[str, float]]] = {}
         self._roofline_platform = (roofline_platform or platform
                                    or perfmodel.PAPER_PLATFORM)
         self.stats.set_roofline_projector(self._project_teps)
@@ -274,6 +291,9 @@ class GraphQueryService:
                 version, exchange))
             qkw = {p: np.zeros((self._slots,), np.int32)
                    for p in splan.query_params}
+            # profiled serving dispatches the phase programs instead of
+            # the fused step — warm whichever path will actually run
+            splan.stepper.profile = self.profile_phases
             carry, _, _ = splan.stepper.init(qkw)
             carry, _, _ = splan.stepper.admit(
                 carry, qkw, np.zeros(self._slots, bool))
@@ -534,17 +554,16 @@ class GraphQueryService:
                 method=self.partition_method)
 
     # ---------------- roofline projection ------------------------------
-    def _project_teps(self, ck: str) -> Optional[float]:
-        """Projected TEPS for one class key from the §5 performance
-        model: ``limits()["T_sys"]`` on the class's graph workload at
-        this service's shard count. None when the graph is gone
-        (superseded and drained) or the kernel has no algo profile to
-        extrapolate from — the efficiency metric then reports 0.0
-        rather than a made-up ratio."""
-        if ck in self._roofline_cache:
-            return self._roofline_cache[ck]
+    def _project_limits(self, ck: str) -> Optional[Dict[str, float]]:
+        """The §5 performance model's full ``limits()`` dict for one
+        class key (L_PE/L_mem/L_if/L_net/T_sys on the class's graph
+        workload at this service's shard count), cached per class. None
+        when the graph is gone (superseded and drained) or the kernel
+        has no algo profile to extrapolate from."""
+        if ck in self._limits_cache:
+            return self._limits_cache[ck]
         qclass = self._class_meta.get(ck)
-        proj: Optional[float] = None
+        lim: Optional[Dict[str, float]] = None
         if qclass is not None:
             try:
                 g = self.store.host_graph(qclass.graph_id,
@@ -557,15 +576,29 @@ class GraphQueryService:
                     # are the closest stand-in for a traversal kernel
                     algo = dataclasses.replace(
                         perfmodel.PAPER_ALGOS["bfs"], name=qclass.kernel)
-                proj = float(perfmodel.limits(
+                lim = perfmodel.limits(
                     self._roofline_platform, algo, wl,
                     n_nodes=self.num_shards,
                     mode=qclass.mode,
-                    exchange=qclass.exchange or None)["T_sys"])
+                    exchange=qclass.exchange or None)
             except (StoreError, KeyError, ValueError):
-                proj = None
-        self._roofline_cache[ck] = proj
-        return proj
+                lim = None
+        self._limits_cache[ck] = lim
+        return lim
+
+    def projected_limits(self, ck: str) -> Optional[Dict[str, float]]:
+        """Public per-term model projection for one class key; combine
+        with :func:`~repro.core.perfmodel.phase_projection` to set a
+        profiled phase split against the model term by term."""
+        return self._project_limits(ck)
+
+    def _project_teps(self, ck: str) -> Optional[float]:
+        """Projected TEPS (``T_sys``) for one class key — what the
+        stats roofline efficiency divides by. None when no projection
+        exists; the efficiency metric then reports 0.0 rather than a
+        made-up ratio."""
+        lim = self._project_limits(ck)
+        return float(lim["T_sys"]) if lim is not None else None
 
     # ---------------- trace export -------------------------------------
     def trace_snapshot(self):
@@ -629,6 +662,9 @@ class GraphQueryService:
             self.trace.emit("admit", qid=r.qid, tenant=r.tenant,
                             klass=ck, reason="batch", ts=t0,
                             batch_size=n)
+            # submit->dispatch wait (the SLO watchdog's queue_wait_p95
+            # rule; the continuous path records at lane admission)
+            self.stats.record_queue_wait((t0 - r.arrival_s) * 1e3)
         traces_before = self.plans.sync_trace_counters()
         lease = None
         try:
@@ -763,9 +799,12 @@ class GraphQueryService:
                 target=self._loop, name="gravfm-query-scheduler",
                 daemon=True)
             self._thread.start()
+        if self._watchdog_on:
+            self.start_watchdog()
         return self
 
     def stop(self, drain: bool = True) -> None:
+        self.stop_watchdog()
         with self._wake:
             self._running = False
             self._wake.notify()
@@ -813,3 +852,52 @@ class GraphQueryService:
         snap["trace_events"] = self.trace.emitted
         snap["trace_dropped"] = self.trace.dropped
         return snap
+
+    # ---------------- metrics endpoint ---------------------------------
+    def _collect_metrics(self, reg: MetricsRegistry) -> None:
+        """Pull-time feeder registered on :attr:`metrics`: maps the
+        current stats snapshot (plus the per-term model limits for every
+        live class) onto the registry. Runs outside the registry lock —
+        stats_snapshot takes the stats/scheduler/store locks."""
+        snap = self.stats_snapshot()
+        feed_service_snapshot(
+            reg, snap,
+            store_counter_keys=type(self.store).METRIC_COUNTER_KEYS)
+        for ck in (snap.get("roofline") or {}):
+            lim = self._project_limits(ck)
+            if lim is None:
+                continue
+            for term in ("L_PE", "L_mem", "L_if", "L_net", "T_sys"):
+                reg.set_gauge(
+                    "gravfm_model_limit_teps", float(lim[term]),
+                    help="Perfmodel §5 limit terms (TEPS) per class",
+                    **{"class": ck, "term": term})
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """JSON-able registry dump (collectors run first, so values are
+        scrape-fresh)."""
+        return self.metrics.snapshot()
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the registry — the scrape
+        endpoint payload."""
+        return self.metrics.expose_text()
+
+    # ---------------- SLO watchdog -------------------------------------
+    def start_watchdog(self, **overrides) -> Watchdog:
+        """Start (or return) the background SLO watchdog; ``overrides``
+        replace :class:`WatchdogConfig` fields for a fresh start."""
+        if self._watchdog is None:
+            self._watchdog = Watchdog(self, self._watchdog_config,
+                                      **overrides)
+            self._watchdog.start()
+        return self._watchdog
+
+    def stop_watchdog(self) -> None:
+        if self._watchdog is not None:
+            self._watchdog.stop()
+            self._watchdog = None
+
+    @property
+    def watchdog(self) -> Optional[Watchdog]:
+        return self._watchdog

@@ -72,6 +72,9 @@ class ServiceStats:
     def __post_init__(self):
         self._lock = threading.Lock()
         self._latencies_ms = collections.deque(maxlen=self.latency_window)
+        # queue-wait (submit -> lane/batch admission) window: the SLO
+        # watchdog's queue_wait_p95 rule reads these percentiles
+        self._queue_waits_ms = collections.deque(maxlen=self.latency_window)
         self._started_at = time.perf_counter()
         # per-tenant breakdown (submitted/completed/shed/messages and a
         # bounded latency window) for the multi-tenant stats endpoint
@@ -153,6 +156,12 @@ class ServiceStats:
         with self._lock:
             self.queries_shed += n
 
+    def record_queue_wait(self, wait_ms: float) -> None:
+        """One query's submit->admission wait (recorded where a request
+        leaves a queue for a lane or a dispatched batch)."""
+        with self._lock:
+            self._queue_waits_ms.append(wait_ms)
+
     # ---- per-tenant breakdown -----------------------------------------
     def _tenant(self, tenant: str) -> Dict[str, float]:
         t = self._tenants.get(tenant)
@@ -160,7 +169,11 @@ class ServiceStats:
             t = self._tenants[tenant] = {
                 "submitted": 0, "completed": 0, "shed": 0, "messages": 0,
                 "result_cache_hits": 0, "deadline_misses": 0}
-            self._tenant_lat[tenant] = collections.deque(maxlen=512)
+            # same window as the aggregate percentiles: a hardcoded 512
+            # here used to give tenant p95s different (shorter-memory)
+            # semantics than the service-wide ones
+            self._tenant_lat[tenant] = collections.deque(
+                maxlen=self.latency_window)
         return t
 
     def record_tenant(self, tenant: str, *, submitted: int = 0,
@@ -335,6 +348,7 @@ class ServiceStats:
         """The stats endpoint payload."""
         with self._lock:
             lat = list(self._latencies_ms)
+            qwait = list(self._queue_waits_ms)
             elapsed = max(time.perf_counter() - self._started_at, 1e-9)
             # before any dispatch has run, busy_time_s is exactly 0 and
             # qps_busy/teps must report 0.0 — the old 1e-9 clamp leaked
@@ -378,6 +392,8 @@ class ServiceStats:
                 "latency_p95_ms": percentile(lat, 95),
                 "latency_p99_ms": percentile(lat, 99),
                 "latency_max_ms": percentile(lat, 100),
+                "queue_wait_p50_ms": percentile(qwait, 50),
+                "queue_wait_p95_ms": percentile(qwait, 95),
                 "uptime_s": elapsed,
             }
         # outside the stats lock: the roofline projector may take the

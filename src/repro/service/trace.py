@@ -28,6 +28,9 @@ shared, thread-safe, bounded :class:`TraceBus`:
   refault     store — a fault promoted a layout back to device
               (``cold``: the host copy was gone too)
   evict       store — a layout was discarded from both tiers
+  alert       watchdog (metrics.py) — an SLO/model rule transitioned
+              (``rule``, ``state``: firing | resolved, ``value``,
+              ``threshold``; ``klass`` carries the subject)
   ==========  =======================================================
 
 The bus is a ring buffer: a long-running service keeps the most recent
@@ -57,7 +60,7 @@ __all__ = ["TraceEvent", "TraceBus", "QuerySpan", "EVENT_KINDS",
 
 EVENT_KINDS = frozenset({
     "submit", "queue", "admit", "superstep", "park", "restore", "retire",
-    "shed", "publish", "spill", "refault", "evict",
+    "shed", "publish", "spill", "refault", "evict", "alert",
 })
 
 

@@ -573,6 +573,25 @@ class GraphStore:
             return sum(e.nbytes for e in self._versions.values()
                        if e.in_spill)
 
+    # snapshot() keys that are MONOTONE event counts (Prometheus
+    # counters); everything else in the snapshot is a point-in-time
+    # level (gauge). The metrics registry classifies the feed with this.
+    METRIC_COUNTER_KEYS = frozenset({
+        "publishes", "evictions", "spills", "discards", "faults",
+        "budget_overcommits", "lane_parks",
+    })
+
+    def metrics_feed(self) -> "tuple[Dict[str, float], Dict[str, float]]":
+        """``(counters, gauges)`` split of :meth:`snapshot` for the
+        metrics registry (``refault_upload_ms`` is cumulative wall and
+        counts as a counter too)."""
+        snap = self.snapshot()
+        counter_keys = self.METRIC_COUNTER_KEYS | {"refault_upload_ms"}
+        counters = {k: float(snap[k]) for k in counter_keys}
+        gauges = {k: float(v) for k, v in snap.items()
+                  if k not in counter_keys}
+        return counters, gauges
+
     def snapshot(self) -> Dict[str, float]:
         """Store counters for the service stats endpoint."""
         with self._lock:

@@ -407,6 +407,9 @@ def test_compile_wall_excluded_from_busy_time():
         def record_tenant(self, tenant, **kw):
             pass
 
+        def record_queue_wait(self, wait_ms):
+            pass
+
     stats = _RecordingStats()
     sched, qclass = _fake_scheduler(stats=stats, trace_on_first_step=True)
     fut = _submit_fake(sched, qclass, depth=3)
