@@ -1,0 +1,34 @@
+"""Static-analysis suite for the serving stack.
+
+Three CI-gated passes police the invariants the runtime only asserts
+dynamically (``python -m repro.analysis check``):
+
+* ``locks`` — the declared lock hierarchy (server -> scheduler ->
+  dispatch -> store -> plans_sync -> leaves) with order-inversion,
+  leaf-outcall, blocking-under-lock, and callback-under-lock rules.
+* ``retrace`` — zero-steady-state-retrace hazards: tracer branches,
+  jit built on hot paths, array-valued static args, closure-captured
+  device arrays.
+* ``taxonomy`` — trace kinds closed over ``trace.EVENT_KINDS`` and
+  ``gravfm_*`` metric names well-formed, type-consistent, and
+  documented in the README taxonomy tables.
+
+Plus an informational ``deadcode`` pass (unused imports / unreferenced
+private defs) that never gates.
+
+See the README "Static analysis" section for the rule catalog,
+annotation syntax (``# lock: <domain>``, ``# analysis: allow(<rule>)``,
+``# analysis: traced``/``host``), and baseline workflow.
+"""
+from .cli import main, run_check
+from .deadcode import DeadCodePass
+from .findings import Baseline, Finding, SourceFile, load_source
+from .locks import ATTR_DOMAINS, HIERARCHY, LockDomain, LockPass
+from .retrace import RetracePass
+from .taxonomy import TaxonomyPass
+
+__all__ = [
+    "main", "run_check", "Baseline", "Finding", "SourceFile",
+    "load_source", "LockPass", "LockDomain", "HIERARCHY",
+    "ATTR_DOMAINS", "RetracePass", "TaxonomyPass", "DeadCodePass",
+]

@@ -1,0 +1,168 @@
+"""``python -m repro.analysis check`` — run the static-analysis suite.
+
+Exit code 0 when no *new* error-severity findings remain (info
+findings and baselined/annotated findings never gate); 1 otherwise.
+
+    python -m repro.analysis check
+    python -m repro.analysis check --baseline analysis-baseline.json
+    python -m repro.analysis check --json > report.json
+    python -m repro.analysis check --write-baseline analysis-baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from .deadcode import DeadCodePass
+from .findings import Baseline, Finding, SourceFile, load_source
+from .locks import LockPass
+from .retrace import RetracePass
+from .taxonomy import TaxonomyPass
+
+__all__ = ["run_check", "main", "LOCK_FILES", "RETRACE_FILES"]
+
+# Files each pass polices. Lock files are the concurrency-bearing
+# modules; retrace files are the compiled-program factories plus the
+# steady-state serving paths.
+LOCK_FILES = [
+    "src/repro/service/server.py",
+    "src/repro/service/continuous.py",
+    "src/repro/service/stats.py",
+    "src/repro/service/trace.py",
+    "src/repro/service/metrics.py",
+    "src/repro/service/plans.py",
+    "src/repro/store/registry.py",
+    "src/repro/store/tenancy.py",
+]
+RETRACE_FILES = [
+    "src/repro/core/stepper.py",
+    "src/repro/core/engine.py",
+    "src/repro/core/engine_shardmap.py",
+    "src/repro/service/plans.py",
+    "src/repro/service/continuous.py",
+    "src/repro/service/server.py",
+]
+# taxonomy + deadcode sweep everything live under src/repro; the seed
+# leftovers keep their own (unshipped) vocabulary
+EXCLUDE_DIRS = {"configs", "models", "train", "data"}
+README = "README.md"
+
+
+def _tree_files(root: Path) -> List[str]:
+    out = []
+    base = root / "src" / "repro"
+    for p in sorted(base.rglob("*.py")):
+        rel = p.relative_to(root).as_posix()
+        parts = p.relative_to(base).parts
+        if parts and parts[0] in EXCLUDE_DIRS:
+            continue
+        out.append(rel)
+    return out
+
+
+def run_check(root, baseline: Optional[Baseline] = None,
+              lock_files: Optional[Sequence[str]] = None,
+              retrace_files: Optional[Sequence[str]] = None,
+              taxonomy_files: Optional[Sequence[str]] = None,
+              deadcode_files: Optional[Sequence[str]] = None,
+              readme: Optional[str] = README) -> Dict[str, object]:
+    """Run all passes rooted at ``root``; returns the report dict."""
+    root = Path(root)
+    baseline = baseline or Baseline()
+
+    def load(rels) -> List[SourceFile]:
+        return [load_source(root, r) for r in rels
+                if (root / r).exists()]
+
+    lock_srcs = load(LOCK_FILES if lock_files is None else lock_files)
+    retrace_srcs = load(RETRACE_FILES if retrace_files is None
+                        else retrace_files)
+    tree = _tree_files(root)
+    tax_srcs = load(tree if taxonomy_files is None else taxonomy_files)
+    dead_srcs = load(tree if deadcode_files is None else deadcode_files)
+
+    readme_text = None
+    if readme is not None and (root / readme).exists():
+        readme_text = (root / readme).read_text(encoding="utf-8")
+
+    per_pass = {
+        "locks": LockPass().run(lock_srcs),
+        "retrace": RetracePass().run(retrace_srcs),
+        "taxonomy": TaxonomyPass(readme_text=readme_text).run(tax_srcs),
+        "deadcode": DeadCodePass().run(dead_srcs),
+    }
+
+    findings: List[Finding] = [f for fs in per_pass.values() for f in fs]
+    new = [f for f in findings
+           if f.severity == "error" and f not in baseline]
+    baselined = [f for f in findings
+                 if f.severity == "error" and f in baseline]
+    info = [f for f in findings if f.severity != "error"]
+    return {
+        "passes": {k: [f.to_json() for f in v]
+                   for k, v in per_pass.items()},
+        "new": new,
+        "baselined": baselined,
+        "info": info,
+        "ok": not new,
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    chk = sub.add_parser(
+        "check", help="run the lock/retrace/taxonomy/dead-code passes")
+    chk.add_argument("--root", default=".",
+                     help="repo root (default: cwd)")
+    chk.add_argument("--baseline", default=None,
+                     help="baseline JSON of accepted fingerprints")
+    chk.add_argument("--write-baseline", default=None, metavar="PATH",
+                     help="write current error findings as the "
+                          "baseline and exit 0")
+    chk.add_argument("--json", action="store_true",
+                     help="print the full JSON report to stdout")
+    chk.add_argument("--json-out", default=None, metavar="PATH",
+                     help="also write the JSON report to PATH")
+    args = ap.parse_args(argv)
+
+    baseline = (Baseline.load(args.baseline)
+                if args.baseline else Baseline())
+    report = run_check(args.root, baseline=baseline)
+    new: List[Finding] = report["new"]          # type: ignore[assignment]
+    info: List[Finding] = report["info"]        # type: ignore[assignment]
+
+    if args.write_baseline:
+        Baseline().save(args.write_baseline, new)
+        print(f"wrote {len(new)} fingerprint(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    payload = {
+        "ok": report["ok"],
+        "new": [f.to_json() for f in new],
+        "baselined": [f.to_json() for f in report["baselined"]],
+        "info": [f.to_json() for f in info],
+        "passes": report["passes"],
+    }
+    if args.json_out:
+        Path(args.json_out).write_text(
+            json.dumps(payload, indent=2) + "\n", encoding="utf-8")
+    if args.json:
+        print(json.dumps(payload, indent=2))
+    else:
+        for f in new:
+            print(f.render())
+        for f in info:
+            print(f"{f.render()} [info]")
+        nb = len(report["baselined"])           # type: ignore[arg-type]
+        print(f"analysis: {len(new)} new finding(s), {nb} baselined, "
+              f"{len(info)} informational")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

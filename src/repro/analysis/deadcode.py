@@ -1,0 +1,119 @@
+"""Dead-code pass (informational; rules DC001-DC002).
+
+* **DC001** unused import: a module-level import whose bound name is
+  never referenced in the module (``__all__`` re-exports count as
+  references; ``from __future__`` and intentionally-re-exported
+  ``__init__`` imports are exempt — package ``__init__`` modules only
+  report imports absent from ``__all__``).
+* **DC002** unused private definition: a module-level ``_name``
+  function/class never referenced elsewhere in its module.
+
+Findings are ``severity="info"`` — they show up in the report and the
+JSON artifact but never gate the exit code; the point is a standing
+cleanup list, not a build break.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Sequence, Set
+
+from .findings import Finding, SourceFile
+
+__all__ = ["DeadCodePass"]
+
+
+def _ann_refs(node, refs: Set[str]) -> None:
+    """Names inside a quoted annotation ('list[EngineResult]')."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        try:
+            sub = ast.parse(node.value, mode="eval")
+        except SyntaxError:
+            return
+        for n in ast.walk(sub):
+            if isinstance(n, ast.Name):
+                refs.add(n.id)
+
+
+def _module_refs(tree: ast.Module) -> Set[str]:
+    refs: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            refs.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.returns is not None:
+                _ann_refs(node.returns, refs)
+            args = node.args
+            for a in (args.posonlyargs + args.args + args.kwonlyargs
+                      + [x for x in (args.vararg, args.kwarg) if x]):
+                if a.annotation is not None:
+                    _ann_refs(a.annotation, refs)
+        elif isinstance(node, ast.AnnAssign):
+            _ann_refs(node.annotation, refs)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    for e in ast.walk(node.value):
+                        if isinstance(e, ast.Constant) and \
+                                isinstance(e.value, str):
+                            refs.add(e.value)
+    return refs
+
+
+class DeadCodePass:
+    name = "deadcode"
+
+    def run(self, files: Sequence[SourceFile]) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in files:
+            refs = _module_refs(sf.tree)
+            is_pkg_init = sf.rel.endswith("__init__.py")
+            for node in sf.tree.body:
+                if isinstance(node, ast.ImportFrom):
+                    if node.module == "__future__":
+                        continue
+                    for alias in node.names:
+                        if alias.name == "*":
+                            continue
+                        bound = alias.asname or alias.name
+                        self._check_import(sf, node, bound, refs,
+                                           is_pkg_init, findings)
+                elif isinstance(node, ast.Import):
+                    for alias in node.names:
+                        bound = alias.asname or \
+                            alias.name.split(".")[0]
+                        self._check_import(sf, node, bound, refs,
+                                           is_pkg_init, findings)
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef,
+                                       ast.ClassDef)):
+                    name = node.name
+                    if not name.startswith("_") or \
+                            name.startswith("__"):
+                        continue
+                    uses = sum(1 for n in ast.walk(sf.tree)
+                               if isinstance(n, ast.Name)
+                               and n.id == name)
+                    # the def itself binds no Name node; attribute
+                    # references self._x are methods, not these
+                    if uses == 0 and not sf.allows(node.lineno,
+                                                   "DC002"):
+                        findings.append(sf.make(
+                            "DC002", node.lineno, name,
+                            f"private module-level {name!r} is never "
+                            f"referenced in its module",
+                            severity="info"))
+        return findings
+
+    @staticmethod
+    def _check_import(sf, node, bound, refs, is_pkg_init, findings):
+        # the import statement itself does not create a Name node, so
+        # any Name occurrence is a genuine use (or an __all__ entry)
+        if bound in refs:
+            return
+        if is_pkg_init:
+            return  # package re-export surface; __all__ covered above
+        if sf.allows(node.lineno, "DC001"):
+            return
+        findings.append(sf.make(
+            "DC001", node.lineno, "<module>",
+            f"import {bound!r} is unused", severity="info"))

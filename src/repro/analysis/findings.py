@@ -1,0 +1,166 @@
+"""Shared infrastructure for the static-analysis passes.
+
+A :class:`Finding` is one rule violation at one source location. Each
+finding carries a *fingerprint* — a stable hash of (rule, file,
+enclosing scope, normalized source line) — so a baseline file can
+suppress known findings without pinning line numbers: inserting code
+above a finding does not invalidate its fingerprint, editing the
+flagged line does.
+
+Suppression annotations, checked on the flagged line (or, for findings
+inside a multi-line statement, the statement's first line):
+
+    # analysis: allow(RULE_ID)        suppress RULE_ID here, with a
+                                      one-line justification in the
+                                      same comment
+    # analysis: allow(RULE_A, RULE_B) suppress several rules
+    # analysis: traced                mark a def as jit-traced (seeds
+                                      the retrace pass)
+    # analysis: host                  mark a def as host-side (removes
+                                      it from the traced set)
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+__all__ = ["Finding", "SourceFile", "Baseline", "load_source",
+           "fingerprint_of"]
+
+_ALLOW_RE = re.compile(r"#\s*analysis:\s*allow\(([^)]*)\)")
+_MARK_RE = re.compile(r"#\s*analysis:\s*(traced|host)\b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation. ``severity`` is ``"error"`` (gates the exit
+    code) or ``"info"`` (report-only, e.g. the dead-code pass)."""
+    rule: str
+    path: str            # repo-relative, forward slashes
+    line: int
+    message: str
+    severity: str = "error"
+    fingerprint: str = ""
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def fingerprint_of(rule: str, path: str, scope: str, line_text: str) -> str:
+    """Line-number-independent identity for baselining."""
+    norm = " ".join(line_text.split())
+    h = hashlib.sha1(
+        f"{rule}|{path}|{scope}|{norm}".encode()).hexdigest()
+    return h[:16]
+
+
+class SourceFile:
+    """One parsed module: AST plus the comment-level annotation maps the
+    passes consult (``# analysis:`` suppressions and traced/host
+    markers are comments, invisible to ``ast``)."""
+
+    def __init__(self, path: Path, rel: str, text: str):
+        self.path = path
+        self.rel = rel
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=str(path))
+        # line -> set of allowed rule ids ("*" allows everything)
+        self.allow: Dict[int, Set[str]] = {}
+        # line -> "traced" | "host"
+        self.marks: Dict[int, str] = {}
+        for i, ln in enumerate(self.lines, start=1):
+            m = _ALLOW_RE.search(ln)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",")
+                         if r.strip()}
+                self.allow.setdefault(i, set()).update(rules)
+            m = _MARK_RE.search(ln)
+            if m:
+                self.marks[i] = m.group(1)
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1]
+        return ""
+
+    def allows(self, line: int, rule: str) -> bool:
+        """True when ``rule`` is suppressed at ``line`` (annotation on
+        the line itself or on the line directly above it)."""
+        for ln in (line, line - 1):
+            rules = self.allow.get(ln)
+            if rules and (rule in rules or "*" in rules):
+                return True
+        return False
+
+    def make(self, rule: str, node_or_line, scope: str, message: str,
+             severity: str = "error") -> Finding:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        return Finding(
+            rule=rule, path=self.rel, line=line, message=message,
+            severity=severity,
+            fingerprint=fingerprint_of(rule, self.rel, scope,
+                                       self.line_text(line)))
+
+
+def load_source(root: Path, rel: str) -> SourceFile:
+    p = Path(root) / rel
+    return SourceFile(p, rel.replace("\\", "/"),
+                      p.read_text(encoding="utf-8"))
+
+
+class Baseline:
+    """A JSON set of fingerprints to suppress ("known, accepted")."""
+
+    def __init__(self, fingerprints: Iterable[str] = ()):
+        self.fingerprints = set(fingerprints)
+
+    @classmethod
+    def load(cls, path) -> "Baseline":
+        p = Path(path)
+        if not p.exists():
+            return cls()
+        data = json.loads(p.read_text(encoding="utf-8") or "{}")
+        if isinstance(data, list):         # bare list form
+            return cls(data)
+        return cls(data.get("fingerprints", []))
+
+    def save(self, path, findings: Iterable[Finding] = ()) -> None:
+        fps = sorted(self.fingerprints
+                     | {f.fingerprint for f in findings})
+        Path(path).write_text(
+            json.dumps({"fingerprints": fps}, indent=2) + "\n",
+            encoding="utf-8")
+
+    def __contains__(self, finding: Finding) -> bool:
+        return finding.fingerprint in self.fingerprints
+
+
+def qualname_chain(stack: List[ast.AST]) -> str:
+    parts = []
+    for node in stack:
+        name = getattr(node, "name", None)
+        if name:
+            parts.append(name)
+    return ".".join(parts) or "<module>"
+
+
+def attr_chain(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """``a.b.c`` -> ("a", "b", "c"); None when the chain bottoms out in
+    something other than a Name (a call, a subscript, ...)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None

@@ -1,0 +1,602 @@
+"""Lock-discipline pass (rules LCK001-LCK005).
+
+The serving stack's declared lock hierarchy, outermost first::
+
+    server (10)  ->  scheduler (20)  ->  dispatch (25)  ->  store (30)
+       ->  plans_sync (35)  ->  leaf {stats, trace, metrics, watchdog,
+                                      rcache, tenancy} (40)
+
+A thread may acquire a lock only while holding locks of strictly lower
+level (re-acquiring a held RLock domain is fine). Leaf locks may never
+be held across *any* unresolved outbound call; the store lock and the
+leaves may not be held across blocking operations (device syncs,
+``Condition.wait`` on a foreign lock, joins, sleeps) or
+listener/callback invocations — the scheduler, by contrast, *does*
+hold its lock across the device step by design.
+
+Lock construction sites bind an attribute to a domain with a
+``# lock: <domain>`` comment; every `threading.Lock/RLock/Condition`
+constructed in a scanned file must carry one (LCK005).
+
+Rules:
+
+* **LCK001** lock-order inversion: acquiring a domain whose level is
+  <= a held domain's level (same-domain re-entry on an RLock exempt).
+* **LCK002** leaf lock held across an unresolved outbound call.
+* **LCK003** blocking operation under a domain that forbids blocking
+  (``Condition.wait`` on the held lock's own condition is exempt —
+  it releases the lock).
+* **LCK004** listener/callback invocation while holding the store lock
+  or a leaf lock.
+* **LCK005** unregistered lock: construction without a ``# lock:``
+  annotation, or an annotation naming an undeclared domain.
+
+Cross-module effects are modelled by declaration: ``ATTR_DOMAINS`` maps
+well-known object attributes (``self.store``, ``self.stats``, the
+scheduler's injected callbacks) to the set of domains a call through
+them may acquire, so ordering is checked across module boundaries
+without whole-program resolution.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding, SourceFile, attr_chain
+
+__all__ = ["LockDomain", "HIERARCHY", "ATTR_DOMAINS", "LockPass"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LockDomain:
+    name: str
+    level: int
+    reentrant: bool = False      # RLock: same-domain re-entry is legal
+    leaf: bool = False           # no outbound calls while held
+    blocking_ok: bool = True     # may block (device sync, wait, join)
+
+
+HIERARCHY: Dict[str, LockDomain] = {d.name: d for d in [
+    LockDomain("server", 10, reentrant=True),
+    LockDomain("scheduler", 20, reentrant=True),
+    LockDomain("dispatch", 25),
+    LockDomain("store", 30, reentrant=True, blocking_ok=False),
+    LockDomain("plans_sync", 35, blocking_ok=False),
+    LockDomain("tenancy", 40, leaf=True, blocking_ok=False),
+    LockDomain("stats", 40, leaf=True, blocking_ok=False),
+    LockDomain("trace", 40, leaf=True, blocking_ok=False),
+    LockDomain("metrics", 40, leaf=True, blocking_ok=False),
+    LockDomain("watchdog", 40, leaf=True, blocking_ok=False),
+    LockDomain("rcache", 40, leaf=True, blocking_ok=False),
+]}
+
+# Object attributes through which cross-module lock acquisitions happen.
+# ``self.store.acquire(...)`` may take the store lock; the continuous
+# scheduler's injected callbacks acquire what their server-side
+# implementations acquire (documented contracts, checked on the server
+# side by this same pass).
+ATTR_DOMAINS: Dict[str, Set[str]] = {
+    "store": {"store"}, "_store": {"store"},
+    "stats": {"stats"}, "_stats": {"stats"},
+    "trace": {"trace"}, "_trace": {"trace"}, "bus": {"trace"},
+    "metrics": {"metrics"}, "_metrics": {"metrics"},
+    "tenants": {"tenancy"},
+    "plans": {"plans_sync", "store", "stats"},
+    "_continuous": {"scheduler", "dispatch", "store", "plans_sync",
+                    "stats", "trace", "metrics", "rcache", "tenancy"},
+    # continuous-scheduler injection seams (ContinuousScheduler ctor)
+    "_get_stepper": {"dispatch", "store", "plans_sync", "stats",
+                     "trace", "metrics"},
+    "_on_result": {"rcache"},
+    "_acquire": {"store"},
+    "_park_charge": {"store"}, "_park_release": {"store"},
+    "_charge": {"store"}, "_release": {"store"},
+    "_weight": {"tenancy"},
+    # store listener lists (server purge + plan-cache invalidation)
+    "_evict_listeners": {"plans_sync", "stats", "store", "rcache"},
+    "_spill_listeners": {"plans_sync"},
+    "_refault_listeners": {"plans_sync"},
+}
+
+# Completing a Future runs its done-callbacks on the calling thread;
+# the service attaches lease releases there, which take the store lock.
+METHOD_DOMAINS: Dict[str, Set[str]] = {
+    "set_result": {"store"},
+    "set_exception": {"store"},
+}
+
+CALLBACK_ATTRS = {
+    "_evict_listeners", "_spill_listeners", "_refault_listeners",
+    "_discard_listeners", "_on_result", "_get_stepper", "_acquire",
+    "_park_charge", "_park_release", "_charge", "_release", "_weight",
+    "_collectors",
+}
+
+BLOCKING_METHODS = {"wait", "join", "result", "block_until_ready",
+                    "device_put", "sleep"}
+
+# Pure-python helpers / containers: calling these never leaves the
+# module or blocks.
+SAFE_CALLS = {
+    "len", "int", "float", "str", "bool", "list", "dict", "set",
+    "tuple", "frozenset", "sorted", "reversed", "min", "max", "sum",
+    "abs", "round", "any", "all", "enumerate", "zip", "range", "map",
+    "filter", "isinstance", "issubclass", "getattr", "setattr",
+    "hasattr", "repr", "format", "id", "hash", "iter", "next", "type",
+    "divmod", "print", "vars", "super", "ValueError", "KeyError",
+    "RuntimeError", "TypeError", "AssertionError", "StopIteration",
+    "Exception", "object",
+}
+SAFE_MODULES = {"math", "np", "numpy", "collections", "dataclasses",
+                "itertools", "bisect", "json", "re", "heapq",
+                "statistics", "os"}
+SAFE_MODULE_FUNCS = {("time", "perf_counter"), ("time", "monotonic"),
+                     ("time", "time")}
+CONTAINER_METHODS = {
+    "append", "appendleft", "extend", "extendleft", "pop", "popleft",
+    "popitem", "push", "get", "items", "keys", "values", "setdefault",
+    "update", "move_to_end", "add", "remove", "discard", "clear",
+    "insert", "index", "count", "copy", "sort", "reverse", "join",
+    "split", "rsplit", "strip", "lstrip", "rstrip", "startswith",
+    "endswith", "format", "replace", "lower", "upper", "encode",
+    "decode", "notify", "notify_all", "total_seconds", "isoformat",
+    "astype", "tolist", "item", "sum", "mean", "reshape", "most_common",
+    "is_integer", "bit_length", "title", "capitalize", "zfill",
+}
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition"}
+
+
+@dataclasses.dataclass(frozen=True)
+class LockBinding:
+    domain: str
+    is_condition: bool
+    line: int
+
+
+class _Effect:
+    """One thing a function (transitively) does that matters under a
+    lock. ``kind``: acquire | domains | outcall | callback | blocking.
+    ``site`` is the (SourceFile, line, scope) where it textually
+    happens — findings anchor there so one ``allow`` annotation covers
+    every caller path."""
+
+    __slots__ = ("kind", "domains", "detail", "sf", "line", "scope",
+                 "cond_domain")
+
+    def __init__(self, kind, domains, detail, sf, line, scope,
+                 cond_domain=None):
+        self.kind = kind
+        self.domains = domains
+        self.detail = detail
+        self.sf = sf
+        self.line = line
+        self.scope = scope
+        self.cond_domain = cond_domain
+
+
+class _FnIndex:
+    """Functions of one module, resolvable by (class, name) and name."""
+
+    def __init__(self, sf: SourceFile):
+        self.sf = sf
+        self.by_qual: Dict[Tuple[Optional[str], str], ast.AST] = {}
+        self.by_name: Dict[str, List[Tuple[Optional[str], ast.AST]]] = {}
+        self.classes: Set[str] = set()
+        for node in sf.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add(None, node)
+            elif isinstance(node, ast.ClassDef):
+                self.classes.add(node.name)
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        self._add(node.name, sub)
+
+    def _add(self, cls: Optional[str], fn: ast.AST):
+        self.by_qual[(cls, fn.name)] = fn
+        self.by_name.setdefault(fn.name, []).append((cls, fn))
+
+
+class LockPass:
+    """Runs the lock-discipline rules over a set of source files."""
+
+    name = "locks"
+
+    def __init__(self, hierarchy: Optional[Dict[str, LockDomain]] = None,
+                 attr_domains: Optional[Dict[str, Set[str]]] = None):
+        self.hierarchy = dict(hierarchy or HIERARCHY)
+        self.attr_domains = dict(attr_domains or ATTR_DOMAINS)
+
+    # -------------------- binding collection ------------------------
+    def _collect_bindings(self, files: Sequence[SourceFile],
+                          findings: List[Finding]):
+        """(module, class|None, attr) -> LockBinding, plus per-module
+        attr fallbacks when unambiguous."""
+        bindings: Dict[Tuple[str, Optional[str], str], LockBinding] = {}
+        for sf in files:
+            stack: List[ast.AST] = []
+
+            def visit(node, cls):
+                for child in ast.iter_child_nodes(node):
+                    ncls = cls
+                    if isinstance(child, ast.ClassDef):
+                        ncls = child.name
+                    self._bind_in_node(sf, child, cls, bindings, findings)
+                    visit(child, ncls)
+
+            visit(sf.tree, None)
+        return bindings
+
+    def _bind_in_node(self, sf, node, cls, bindings, findings):
+        if not isinstance(node, (ast.Assign, ast.AnnAssign, ast.keyword)):
+            # lock ctor as a call keyword: Foo(cond=threading.Condition())
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if self._is_lock_ctor(kw.value):
+                        self._register(sf, kw.value, cls, kw.arg,
+                                       bindings, findings)
+            return
+        if isinstance(node, ast.Assign):
+            value, targets = node.value, node.targets
+        elif isinstance(node, ast.AnnAssign):
+            value, targets = node.value, [node.target]
+        else:
+            return
+        if value is None or not self._is_lock_ctor(value):
+            return
+        for t in targets:
+            if isinstance(t, ast.Attribute):
+                self._register(sf, value, cls, t.attr, bindings, findings)
+            elif isinstance(t, ast.Name):
+                self._register(sf, value, cls, t.id, bindings, findings)
+
+    @staticmethod
+    def _is_lock_ctor(value) -> bool:
+        if not isinstance(value, ast.Call):
+            return False
+        chain = attr_chain(value.func)
+        return bool(chain) and chain[-1] in _LOCK_CTORS and (
+            len(chain) == 1 or chain[0] in ("threading", "th"))
+
+    def _register(self, sf, value, cls, attr, bindings, findings):
+        chain = attr_chain(value.func)
+        is_cond = chain[-1] == "Condition"
+        text = sf.line_text(value.lineno)
+        import re as _re
+        m = _re.search(r"#\s*lock:\s*([\w-]+)", text)
+        if not m:
+            if not sf.allows(value.lineno, "LCK005"):
+                findings.append(sf.make(
+                    "LCK005", value, cls or "<module>",
+                    f"lock construction for {attr!r} has no "
+                    f"'# lock: <domain>' annotation"))
+            return
+        domain = m.group(1)
+        if domain not in self.hierarchy:
+            findings.append(sf.make(
+                "LCK005", value, cls or "<module>",
+                f"annotation '# lock: {domain}' names an undeclared "
+                f"domain (declared: {sorted(self.hierarchy)})"))
+            return
+        bindings[(sf.rel, cls, attr)] = LockBinding(
+            domain, is_cond, value.lineno)
+
+    def _lookup(self, bindings, sf, cls, attr) -> Optional[LockBinding]:
+        b = bindings.get((sf.rel, cls, attr))
+        if b:
+            return b
+        # module-wide fallback when the attr name is unambiguous there
+        cands = [v for (rel, _c, a), v in bindings.items()
+                 if rel == sf.rel and a == attr]
+        if len({c.domain for c in cands}) == 1:
+            return cands[0]
+        # cross-module: unique attr name anywhere (entry.cond style)
+        cands = [v for (_r, _c, a), v in bindings.items() if a == attr]
+        if len({c.domain for c in cands}) == 1:
+            return cands[0]
+        return None
+
+    # -------------------- effect summaries --------------------------
+    def run(self, files: Sequence[SourceFile]) -> List[Finding]:
+        findings: List[Finding] = []
+        bindings = self._collect_bindings(files, findings)
+        for sf in files:
+            idx = _FnIndex(sf)
+            memo: Dict[int, List[_Effect]] = {}
+            visiting: Set[int] = set()
+            for (cls, name), fn in idx.by_qual.items():
+                scope = f"{cls}.{name}" if cls else name
+                self._check_function(sf, idx, fn, cls, scope, bindings,
+                                     memo, visiting, findings)
+        # dedup (multiple caller paths reach the same effect site)
+        seen, out = set(), []
+        for f in findings:
+            key = (f.rule, f.path, f.line, f.message)
+            if key not in seen:
+                seen.add(key)
+                out.append(f)
+        return out
+
+    def _effects_of(self, sf, idx, fn, cls, scope, bindings, memo,
+                    visiting) -> List[_Effect]:
+        key = id(fn)
+        if key in memo:
+            return memo[key]
+        if key in visiting:
+            return []
+        visiting.add(key)
+        effects: List[_Effect] = []
+        loop_vars = self._listener_loop_vars(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.With):
+                for item in node.items:
+                    b = self._with_lock(bindings, sf, cls, item)
+                    if b:
+                        effects.append(_Effect(
+                            "acquire", {b.domain}, f"lock '{b.domain}'",
+                            sf, node.lineno, scope))
+            elif isinstance(node, ast.Call):
+                effects.extend(self._classify_call(
+                    sf, idx, node, cls, scope, bindings, memo, visiting,
+                    loop_vars))
+        visiting.discard(key)
+        memo[key] = effects
+        return effects
+
+    @staticmethod
+    def _listener_loop_vars(fn) -> Dict[str, str]:
+        """Loop targets iterating ``self.<attr>`` / ``list(self.<attr>)``
+        -> attr (callback lists)."""
+        out: Dict[str, str] = {}
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.For):
+                continue
+            it = node.iter
+            if (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+                    and it.func.id in ("list", "tuple") and it.args):
+                it = it.args[0]
+            chain = attr_chain(it)
+            if chain and isinstance(node.target, ast.Name):
+                out[node.target.id] = chain[-1]
+        return out
+
+    def _with_lock(self, bindings, sf, cls, item) -> Optional[LockBinding]:
+        chain = attr_chain(item.context_expr)
+        if not chain:
+            return None
+        # foreign receiver (store._lock, svc.store._lock): the owner's
+        # declared domain wins over any same-named attr in this class
+        if len(chain) >= 3 or (len(chain) == 2
+                               and chain[0] not in ("self", "cls")):
+            owner = chain[-2]
+            domains = self.attr_domains.get(owner)
+            if domains and len(domains) == 1:
+                return LockBinding(next(iter(domains)), False, 0)
+        return self._lookup(bindings, sf, cls, chain[-1])
+
+    def _classify_call(self, sf, idx, call, cls, scope, bindings, memo,
+                       visiting, loop_vars) -> List[_Effect]:
+        func = call.func
+        line = call.lineno
+        # --- bare-name calls -----------------------------------------
+        if isinstance(func, ast.Name):
+            name = func.id
+            if name in SAFE_CALLS:
+                return []
+            if name in loop_vars:
+                attr = loop_vars[name]
+                domains = self.attr_domains.get(attr, set())
+                return [_Effect("callback", domains,
+                                f"listener from '{attr}'", sf, line,
+                                scope)]
+            target = self._resolve(idx, cls, None, name)
+            if target is not None:
+                sub = f"{cls}.{name}" if cls else name
+                return self._effects_of(sf, idx, target[1], target[0],
+                                        sub, bindings, memo, visiting)
+            if name in idx.classes:
+                # same-module constructor: its effects are __init__'s
+                init = idx.by_qual.get((name, "__init__"))
+                if init is None:
+                    return []
+                return self._effects_of(sf, idx, init,
+                                        name, f"{name}.__init__",
+                                        bindings, memo, visiting)
+            return [_Effect("outcall", set(), f"call to '{name}'",
+                            sf, line, scope)]
+        # --- attribute calls -----------------------------------------
+        # a method on a string/number literal (",".join, ...) is pure —
+        # and must not collide with Thread.join in BLOCKING_METHODS
+        if isinstance(func, ast.Attribute) and \
+                isinstance(func.value, ast.Constant):
+            return []
+        chain = attr_chain(func)
+        if chain is None:
+            # chained / subscripted receiver: classify by method name
+            if isinstance(func, ast.Attribute):
+                if func.attr in BLOCKING_METHODS:
+                    return [_Effect("blocking", set(),
+                                    f"blocking '{func.attr}()'", sf,
+                                    line, scope)]
+                if func.attr in CONTAINER_METHODS:
+                    return []
+            return [_Effect("outcall", set(), "dynamic call", sf, line,
+                            scope)]
+        method = chain[-1]
+        recv = chain[-2] if len(chain) >= 2 else None
+        root = chain[0]
+        # blocking first (Condition.wait on own lock handled by caller)
+        if method in BLOCKING_METHODS:
+            cond_domain = None
+            if method == "wait" and recv is not None:
+                b = self._lookup(bindings, sf, cls, recv)
+                if b is not None:
+                    cond_domain = b.domain
+            return [_Effect("blocking", set(), f"blocking '{method}()'",
+                            sf, line, scope, cond_domain=cond_domain)]
+        if root in SAFE_MODULES or (root, method) in SAFE_MODULE_FUNCS \
+                or (len(chain) >= 2 and chain[0] == "jnp"):
+            return []
+        if method in METHOD_DOMAINS:
+            return [_Effect("domains", METHOD_DOMAINS[method],
+                            f"'{method}()' (future completion runs "
+                            f"lease-release callbacks)", sf, line, scope)]
+        if root in ("self", "cls") and len(chain) == 2:
+            # self.m(...): own method, or an injected callback attr
+            if method in self.attr_domains and method in CALLBACK_ATTRS:
+                return [_Effect("callback", self.attr_domains[method],
+                                f"callback 'self.{method}'", sf, line,
+                                scope)]
+            target = self._resolve(idx, cls, cls, method)
+            if target is not None:
+                sub = f"{target[0]}.{method}" if target[0] else method
+                return self._effects_of(sf, idx, target[1], target[0],
+                                        sub, bindings, memo, visiting)
+        if recv is not None and recv in self.attr_domains:
+            domains = self.attr_domains[recv]
+            kind = "callback" if recv in CALLBACK_ATTRS else "domains"
+            return [_Effect(kind, domains,
+                            f"call through '{recv}' (may acquire "
+                            f"{sorted(domains)})", sf, line, scope)]
+        if method in CONTAINER_METHODS:
+            return []
+        # method of a same-module class (head.spec() style): union over
+        # every class defining that method name — except the enclosing
+        # class itself (a non-self receiver is almost never another
+        # instance of the class being analysed, and including it makes
+        # Histogram.observe look like MetricsRegistry.observe)
+        cands = [(c, f) for c, f in idx.by_name.get(method, ())
+                 if c != cls]
+        if cands and root != "self":
+            effects: List[_Effect] = []
+            for ccls, cfn in cands:
+                sub = f"{ccls}.{method}" if ccls else method
+                effects.extend(self._effects_of(
+                    sf, idx, cfn, ccls, sub, bindings, memo, visiting))
+            return effects
+        return [_Effect("outcall", set(),
+                        f"call to '{'.'.join(chain)}'", sf, line, scope)]
+
+    @staticmethod
+    def _resolve(idx, cls, want_cls, name):
+        fn = idx.by_qual.get((want_cls, name))
+        if fn is not None:
+            return (want_cls, fn)
+        fn = idx.by_qual.get((None, name))
+        if fn is not None:
+            return (None, fn)
+        return None
+
+    # -------------------- per-function check ------------------------
+    def _check_function(self, sf, idx, fn, cls, scope, bindings, memo,
+                        visiting, findings):
+        loop_vars = self._listener_loop_vars(fn)
+
+        def walk(node, held: List[str]):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                return  # nested defs run later, not here
+            if isinstance(node, ast.With):
+                new_held = list(held)
+                for item in node.items:
+                    b = self._with_lock(bindings, sf, cls, item)
+                    if b:
+                        self._check_acquire(sf, node.lineno, scope,
+                                            b.domain, new_held, findings)
+                        new_held = new_held + [b.domain]
+                for sub in node.body:
+                    walk(sub, new_held)
+                return
+            if isinstance(node, ast.Call) and held:
+                effs = self._classify_call(
+                    sf, idx, node, cls, scope, bindings, memo,
+                    visiting, loop_vars)
+                for e in effs:
+                    self._check_effect(e, held, node.lineno, scope,
+                                       sf, findings)
+            for child in ast.iter_child_nodes(node):
+                walk(child, held)
+
+        for child in ast.iter_child_nodes(fn):
+            walk(child, [])
+
+    def _check_acquire(self, sf, line, scope, domain, held, findings):
+        if not held:
+            return
+        d = self.hierarchy[domain]
+        for h in held:
+            hd = self.hierarchy[h]
+            if h == domain:
+                if not hd.reentrant and not sf.allows(line, "LCK001"):
+                    findings.append(sf.make(
+                        "LCK001", line, scope,
+                        f"re-acquiring non-reentrant lock '{domain}' "
+                        f"(self-deadlock)"))
+                continue
+            if d.level <= hd.level and not sf.allows(line, "LCK001"):
+                findings.append(sf.make(
+                    "LCK001", line, scope,
+                    f"acquiring '{domain}' (level {d.level}) while "
+                    f"holding '{h}' (level {hd.level}) inverts the "
+                    f"declared order"))
+
+    def _check_effect(self, e: _Effect, held: List[str], call_line,
+                      caller_scope, caller_sf, findings):
+        innermost = held[-1]
+        leaf_held = [h for h in held if self.hierarchy[h].leaf]
+        via = ("" if (e.sf is caller_sf and e.line == call_line)
+               else f" (via {caller_scope}:{call_line})")
+
+        def report(rule, msg):
+            if e.sf.allows(e.line, rule):
+                return
+            findings.append(e.sf.make(rule, e.line, e.scope, msg + via))
+
+        if e.kind == "acquire" or e.kind == "domains":
+            for dom in e.domains:
+                d = self.hierarchy.get(dom)
+                if d is None:
+                    continue
+                for h in held:
+                    hd = self.hierarchy[h]
+                    if dom == h:
+                        if not hd.reentrant:
+                            report("LCK001",
+                                   f"re-acquiring non-reentrant lock "
+                                   f"'{dom}' ({e.detail})")
+                        continue
+                    if d.level <= hd.level:
+                        report("LCK001",
+                               f"may acquire '{dom}' (level {d.level}) "
+                               f"while holding '{h}' (level {hd.level}): "
+                               f"{e.detail}")
+        elif e.kind == "callback":
+            bad = leaf_held + [h for h in held if h == "store"]
+            if bad:
+                report("LCK004",
+                       f"{e.detail} invoked while holding "
+                       f"'{bad[-1]}' — listeners must fire with the "
+                       f"lock released")
+            # callbacks also carry their declared acquisitions
+            if e.domains:
+                self._check_effect(
+                    _Effect("domains", e.domains, e.detail, e.sf, e.line,
+                            e.scope), held, call_line, caller_scope,
+                    caller_sf, findings)
+        elif e.kind == "blocking":
+            if e.cond_domain is not None and e.cond_domain in held:
+                return  # Condition.wait on the held lock releases it
+            blocked = [h for h in held
+                       if not self.hierarchy[h].blocking_ok]
+            if blocked:
+                report("LCK003",
+                       f"{e.detail} while holding '{blocked[-1]}', "
+                       f"which forbids blocking")
+        elif e.kind == "outcall":
+            if leaf_held:
+                report("LCK002",
+                       f"leaf lock '{leaf_held[-1]}' held across "
+                       f"{e.detail}")
+        _ = innermost

@@ -1,0 +1,450 @@
+"""Retrace-hazard pass (rules RTR001-RTR004).
+
+The serving stack's perf gates all assume *zero steady-state
+re-traces*: compiled programs are built once (``__init__`` /
+``_make_*`` / ``_build``) and every per-query / per-superstep dispatch
+reuses them; graph data is a jit *argument* (the spill/refault and
+exchange-switch machinery depends on data-as-arg). This pass flags the
+source patterns that silently break that contract:
+
+* **RTR001** tracer branch: a Python ``if``/``while`` whose condition
+  derives from a parameter of a jit-traced function. Branches on
+  static configuration (``self.*``, closure constants) are fine;
+  ``x is None`` structure checks and static array attributes
+  (``.shape``/``.ndim``/``.dtype``) are exempt.
+* **RTR002** jit built on a hot path: ``jax.jit`` / ``shard_map`` /
+  ``jax.pmap`` constructed outside module scope, ``__init__``,
+  ``_build`` or ``make_*``/``_make*`` factories.
+* **RTR003** bad static argument: ``static_argnums``/``static_argnames``
+  whose spec is not an int/str (tuple) literal, or whose resolvable
+  call sites pass an array/list/dict/set value in a static position
+  (retrace per value — or an outright unhashable error).
+* **RTR004** closure-captured array: a traced function closes over a
+  name bound in a *host* scope by an array constructor
+  (``jnp.asarray``/``zeros``/``device_put``/...) — it should be a jit
+  argument so residency changes don't re-trace.
+
+Traced scopes are discovered from seeds (arguments to ``jax.jit``,
+``jax.vmap``, ``lax.while_loop``/``fori_loop``/``scan``/``switch``/
+``cond``, ``shard_map`` wrappers), closed over (a) functions defined
+inside traced functions and (b) same-file defs whose name matches a
+call made inside a traced function. A ``# analysis: traced`` comment
+on the ``def`` line force-marks a function (for callbacks invoked from
+traced code in *other* modules — the deliver kernels); ``# analysis:
+host`` removes a def the propagation over-approximated.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set
+
+from .findings import Finding, SourceFile, attr_chain
+
+__all__ = ["RetracePass"]
+
+JIT_WRAPPERS = {"jit", "pmap"}                   # jax.jit / jax.pmap
+TRACE_TAKERS = {"while_loop", "fori_loop", "scan", "switch", "cond",
+                "vmap", "jit", "pmap", "grad", "value_and_grad",
+                "checkpoint", "remat", "eval_shape", "shard_map",
+                "_shard_map", "custom_vjp", "custom_jvp"}
+ARRAY_CTORS = {"asarray", "array", "zeros", "ones", "full", "arange",
+               "linspace", "empty", "device_put", "zeros_like",
+               "ones_like", "full_like"}
+STATIC_ARRAY_ATTRS = {"shape", "ndim", "dtype", "size", "aval"}
+HOT_JIT_ALLOWED = {"__init__", "_build", "__post_init__"}
+
+
+def _is_jit_call(call: ast.Call) -> Optional[str]:
+    """'jit'-like wrapper name when this call builds a compiled
+    program, else None."""
+    chain = attr_chain(call.func)
+    if not chain:
+        return None
+    name = chain[-1]
+    if name in JIT_WRAPPERS and (len(chain) == 1 or chain[0] == "jax"):
+        return name
+    if name in ("shard_map", "_shard_map"):
+        return name
+    return None
+
+
+class _FnInfo:
+    __slots__ = ("node", "qual", "cls", "parent", "params", "sf")
+
+    def __init__(self, node, qual, cls, parent, sf):
+        self.node = node
+        self.qual = qual
+        self.cls = cls
+        self.parent = parent      # enclosing _FnInfo or None
+        self.sf = sf
+        if isinstance(node, ast.Lambda):
+            a = node.args
+        else:
+            a = node.args
+        names = [p.arg for p in
+                 a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        self.params = [n for n in names if n not in ("self", "cls")]
+
+
+class RetracePass:
+    name = "retrace"
+
+    def run(self, files: Sequence[SourceFile]) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in files:
+            infos = self._index(sf)
+            traced = self._traced_set(sf, infos)
+            for info in infos.values():
+                if id(info.node) in traced:
+                    self._check_traced(sf, info, infos, traced, findings)
+            self._check_hot_jits(sf, infos, findings)
+            self._check_static_args(sf, findings)
+        return findings
+
+    # ------------------------ discovery ------------------------------
+    def _index(self, sf: SourceFile) -> Dict[int, _FnInfo]:
+        infos: Dict[int, _FnInfo] = {}
+
+        def visit(node, cls, parent):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.ClassDef):
+                    visit(child, child.name, parent)
+                elif isinstance(child, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef,
+                                        ast.Lambda)):
+                    name = getattr(child, "name", "<lambda>")
+                    qual = (f"{parent.qual}.{name}" if parent
+                            else (f"{cls}.{name}" if cls else name))
+                    info = _FnInfo(child, qual, cls, parent, sf)
+                    infos[id(child)] = info
+                    visit(child, cls, info)
+                else:
+                    visit(child, cls, parent)
+
+        visit(sf.tree, None, None)
+        return infos
+
+    def _traced_set(self, sf: SourceFile,
+                    infos: Dict[int, _FnInfo]) -> Set[int]:
+        by_name: Dict[str, List[_FnInfo]] = {}
+        for info in infos.values():
+            nm = getattr(info.node, "name", None)
+            if nm:
+                by_name.setdefault(nm, []).append(info)
+
+        traced: Set[int] = set()
+        # comment markers
+        for info in infos.values():
+            mark = sf.marks.get(info.node.lineno)
+            if mark == "traced":
+                traced.add(id(info.node))
+
+        # seeds: function-valued arguments to jit/vmap/while_loop/...
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = attr_chain(node.func)
+            if not chain or chain[-1] not in TRACE_TAKERS:
+                continue
+            cands = list(node.args) + [kw.value for kw in node.keywords]
+            for arg in cands:
+                if isinstance(arg, ast.Lambda):
+                    traced.add(id(arg))
+                elif isinstance(arg, ast.Name):
+                    for info in by_name.get(arg.id, []):
+                        traced.add(id(info.node))
+                else:
+                    ac = attr_chain(arg)
+                    if ac and len(ac) >= 2:
+                        for info in by_name.get(ac[-1], []):
+                            traced.add(id(info.node))
+
+        # closure: defs nested inside traced functions are traced; and
+        # same-file defs called (by name) from traced bodies
+        changed = True
+        while changed:
+            changed = False
+            for info in infos.values():
+                if id(info.node) in traced:
+                    continue
+                p = info.parent
+                while p is not None:
+                    if id(p.node) in traced:
+                        traced.add(id(info.node))
+                        changed = True
+                        break
+                    p = p.parent
+            for info in list(infos.values()):
+                if id(info.node) not in traced:
+                    continue
+                for node in ast.walk(info.node):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    chain = attr_chain(node.func)
+                    if not chain:
+                        continue
+                    callee = chain[-1]
+                    for cand in by_name.get(callee, []):
+                        if id(cand.node) not in traced:
+                            traced.add(id(cand.node))
+                            changed = True
+
+        # explicit host markers win over propagation
+        for info in infos.values():
+            if sf.marks.get(info.node.lineno) == "host":
+                traced.discard(id(info.node))
+        return traced
+
+    # ------------------------ RTR001 + RTR004 ------------------------
+    def _check_traced(self, sf, info, infos, traced, findings):
+        node = info.node
+        tainted: Set[str] = set(info.params)
+        body = node.body if not isinstance(node, ast.Lambda) else []
+
+        def expr_tainted(e) -> bool:
+            for sub in ast.walk(e):
+                if isinstance(sub, ast.Attribute) and \
+                        sub.attr in STATIC_ARRAY_ATTRS:
+                    return False  # handled by pruning below instead
+            return any(isinstance(s, ast.Name) and s.id in tainted
+                       for s in ast.walk(e))
+
+        def prune_static(e):
+            """Names reachable only through static attrs / len() don't
+            count."""
+            class _Taint(ast.NodeVisitor):
+                def __init__(self):
+                    self.hit = False
+
+                def visit_Attribute(self, a):
+                    if a.attr in STATIC_ARRAY_ATTRS:
+                        return
+                    self.generic_visit(a)
+
+                def visit_Call(self, c):
+                    ch = attr_chain(c.func)
+                    if ch and ch[-1] in ("len", "isinstance", "hasattr",
+                                         "getattr", "type"):
+                        return
+                    self.generic_visit(c)
+
+                def visit_Name(self, n):
+                    if n.id in tainted:
+                        self.hit = True
+
+            t = _Taint()
+            t.visit(e)
+            return t.hit
+
+        def is_none_check(test) -> bool:
+            return (isinstance(test, ast.Compare)
+                    and len(test.ops) == 1
+                    and isinstance(test.ops[0], (ast.Is, ast.IsNot))
+                    and isinstance(test.comparators[0], ast.Constant)
+                    and test.comparators[0].value is None)
+
+        # forward pass: propagate taint through simple assignments,
+        # flag if/while tests on tainted values
+        def walk(stmts):
+            for st in stmts:
+                if isinstance(st, ast.Assign):
+                    src_t = expr_tainted(st.value)
+                    for t in st.targets:
+                        for nm in ast.walk(t):
+                            if isinstance(nm, ast.Name):
+                                if src_t:
+                                    tainted.add(nm.id)
+                                else:
+                                    tainted.discard(nm.id)
+                elif isinstance(st, (ast.If, ast.While)):
+                    if not is_none_check(st.test) and \
+                            prune_static(st.test) and \
+                            not sf.allows(st.lineno, "RTR001"):
+                        kind = ("while"
+                                if isinstance(st, ast.While) else "if")
+                        findings.append(sf.make(
+                            "RTR001", st.lineno, info.qual,
+                            f"Python '{kind}' on a traced value inside "
+                            f"jit-traced '{info.qual}' — concretization "
+                            f"error or a re-trace per value; use "
+                            f"lax.cond/select"))
+                # recurse into nested statement bodies (not nested defs)
+                for field in ("body", "orelse", "finalbody"):
+                    sub = getattr(st, field, None)
+                    if sub:
+                        walk([s for s in sub
+                              if not isinstance(s, (ast.FunctionDef,
+                                                    ast.AsyncFunctionDef
+                                                    ))])
+
+        walk(body)
+        self._check_closure_arrays(sf, info, infos, traced, findings)
+
+    def _check_closure_arrays(self, sf, info, infos, traced, findings):
+        """RTR004: free names bound by array constructors in host
+        scopes."""
+        node = info.node
+        local: Set[str] = set(info.params) | {"self", "cls"}
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and isinstance(sub.ctx,
+                                                        ast.Store):
+                local.add(sub.id)
+            elif isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if sub is not node:
+                    local.add(sub.name)
+        free = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+                if sub.id not in local:
+                    free.add(sub.id)
+        if not free:
+            return
+        p = info.parent
+        while p is not None:
+            if id(p.node) in traced:
+                p = p.parent
+                continue  # bindings inside a trace are fine
+            for st in ast.walk(p.node):
+                if not isinstance(st, ast.Assign):
+                    continue
+                names = [t.id for t in st.targets
+                         if isinstance(t, ast.Name)]
+                hit = [n for n in names if n in free]
+                if not hit or not isinstance(st.value, ast.Call):
+                    continue
+                chain = attr_chain(st.value.func)
+                if not chain:
+                    continue
+                if chain[-1] in ARRAY_CTORS and \
+                        chain[0] in ("jnp", "jax", "np", "numpy"):
+                    if chain[0] in ("np", "numpy") and \
+                            chain[-1] != "device_put":
+                        continue  # host numpy constants are static-safe
+                    if not sf.allows(st.lineno, "RTR004"):
+                        findings.append(sf.make(
+                            "RTR004", st.lineno, p.qual,
+                            f"device array {hit[0]!r} is closure-"
+                            f"captured by jit-traced '{info.qual}' — "
+                            f"pass it as an argument so rebinds don't "
+                            f"re-trace"))
+            p = p.parent
+
+    # ------------------------ RTR002 ---------------------------------
+    def _check_hot_jits(self, sf, infos, findings):
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            wrapper = _is_jit_call(node)
+            if wrapper is None:
+                continue
+            encl = self._enclosing(sf, infos, node)
+            if encl is None:
+                continue  # module/class scope: fine
+            ok = False
+            p = encl
+            while p is not None:
+                name = getattr(p.node, "name", "")
+                if name in HOT_JIT_ALLOWED or name.startswith("make") \
+                        or name.startswith("_make"):
+                    ok = True
+                    break
+                p = p.parent
+            if not ok and not sf.allows(node.lineno, "RTR002"):
+                findings.append(sf.make(
+                    "RTR002", node.lineno, encl.qual,
+                    f"'{wrapper}' constructed inside '{encl.qual}' — "
+                    f"compiled programs must be built once in "
+                    f"__init__/_build/make_* factories, not on the "
+                    f"per-query/per-superstep path"))
+
+    def _enclosing(self, sf, infos, node) -> Optional[_FnInfo]:
+        best = None
+        for info in infos.values():
+            n = info.node
+            if isinstance(n, ast.Lambda):
+                continue
+            if n.lineno <= node.lineno <= (n.end_lineno or n.lineno):
+                if best is None or n.lineno > best.node.lineno:
+                    if any(sub is node for sub in ast.walk(n)):
+                        best = info
+        return best
+
+    # ------------------------ RTR003 ---------------------------------
+    def _check_static_args(self, sf, findings):
+        # jit calls with a static spec, and the local names they bind
+        static_of: Dict[str, List[int]] = {}   # bound name -> positions
+        static_names_of: Dict[str, Set[str]] = {}
+        scope_of: Dict[str, str] = {}
+
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            v = node.value
+            if not isinstance(v, ast.Call) or _is_jit_call(v) != "jit":
+                continue
+            spec_nums: List[int] = []
+            spec_names: Set[str] = set()
+            for kw in v.keywords:
+                if kw.arg not in ("static_argnums", "static_argnames"):
+                    continue
+                val = kw.value
+                items = (val.elts if isinstance(val, (ast.Tuple, ast.List))
+                         else [val])
+                for it in items:
+                    if isinstance(it, ast.Constant) and \
+                            isinstance(it.value, int):
+                        spec_nums.append(it.value)
+                    elif isinstance(it, ast.Constant) and \
+                            isinstance(it.value, str):
+                        spec_names.add(it.value)
+                    elif not sf.allows(node.lineno, "RTR003"):
+                        findings.append(sf.make(
+                            "RTR003", node.lineno, "<module>",
+                            f"{kw.arg} must be an int/str (tuple) "
+                            f"literal; a computed spec defeats the "
+                            f"static check"))
+            if not spec_nums and not spec_names:
+                continue
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    static_of[t.id] = spec_nums
+                    static_names_of[t.id] = spec_names
+                    scope_of[t.id] = "<module>"
+
+        if not static_of:
+            return
+
+        def is_arrayish(e) -> bool:
+            if isinstance(e, (ast.List, ast.Dict, ast.Set)):
+                return True
+            if isinstance(e, ast.Call):
+                ch = attr_chain(e.func)
+                return bool(ch) and ch[-1] in ARRAY_CTORS
+            return False
+
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if not isinstance(fn, ast.Name) or fn.id not in static_of:
+                continue
+            for pos in static_of[fn.id]:
+                if pos < len(node.args) and is_arrayish(node.args[pos]) \
+                        and not sf.allows(node.lineno, "RTR003"):
+                    findings.append(sf.make(
+                        "RTR003", node.lineno, scope_of[fn.id],
+                        f"array/container value passed in static "
+                        f"position {pos} of jitted {fn.id!r} — "
+                        f"unhashable, or a re-trace per value"))
+            for kw in node.keywords:
+                if kw.arg in static_names_of.get(fn.id, ()) and \
+                        is_arrayish(kw.value) and \
+                        not sf.allows(node.lineno, "RTR003"):
+                    findings.append(sf.make(
+                        "RTR003", node.lineno, scope_of[fn.id],
+                        f"array/container value passed for static "
+                        f"argument {kw.arg!r} of jitted {fn.id!r}"))

@@ -193,7 +193,6 @@ def degree_centrality() -> GasKernel:
         max_supersteps=1, update_bits=32, message_bits=32)
 
 
-import jax  # noqa: E402  (used inside sssp closures)
 
 ALGORITHMS = {
     "bfs": bfs,

@@ -28,9 +28,8 @@ distributed termination is the all-reduced "no shard sent updates" bit.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -215,7 +214,7 @@ class Engine:
         )
 
     # ------------------------------------------------------------------
-    def _deliver_gravfm(self, data: _GravfmData, payload, active):
+    def _deliver_gravfm(self, data: _GravfmData, payload, active):  # analysis: traced
         """Broadcast updates; receiver-side scatter + gather-combine."""
         k, P, Vm = self.kernel, self._P, self._Vm
         payload_flat = payload.reshape(P * Vm)
@@ -269,7 +268,7 @@ class Engine:
         n_remote_msgs = jnp.sum((act & data.lane_remote).astype(jnp.int32))
         return acc, got, carry, {"n_msgs": n_msgs, "n_remote": n_remote_msgs}
 
-    def _deliver_gravf(self, data: _GravfData, payload, active):
+    def _deliver_gravf(self, data: _GravfData, payload, active):  # analysis: traced
         """Source-side scatter, unicast exchange (paper Fig. 4 left)."""
         k, P, Vm = self.kernel, self._P, self._Vm
         pe = jnp.broadcast_to(payload[:, None, :], (P, P, Vm))

@@ -135,12 +135,6 @@ PARTITIONERS: Dict[str, Callable[..., np.ndarray]] = {
 # PartitionedGraph
 # ---------------------------------------------------------------------------
 
-def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
-    out = np.full((n,) + x.shape[1:], fill, x.dtype)
-    out[: x.shape[0]] = x
-    return out
-
-
 @dataclasses.dataclass(frozen=True)
 class PartitionedGraph:
     """Static per-shard device layout. Leading axis = shard (the paper's

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import ref
 from .edge_gather import segment_combine_pallas, _identity_for

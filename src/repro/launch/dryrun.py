@@ -32,7 +32,7 @@ from ..models import lm as LM
 from ..train.loop import make_train_step
 from ..train.optimizer import AdamWConfig, adamw_init
 from .mesh import make_graph_mesh, make_production_mesh
-from .roofline import model_flops, parse_collectives, roofline
+from .roofline import parse_collectives, roofline
 
 HBM_PER_CHIP = 16e9  # v5e
 

@@ -13,7 +13,6 @@ n_FPGA): 256- or 512-way vertex sharding.
 from __future__ import annotations
 
 import jax
-import numpy as np
 from jax.sharding import Mesh
 
 __all__ = ["make_production_mesh", "make_graph_mesh", "make_local_mesh",

@@ -17,9 +17,8 @@ Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
 """
 from __future__ import annotations
 
-import dataclasses
 import re
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 __all__ = ["HW", "parse_collectives", "roofline", "model_flops"]
 

@@ -10,15 +10,12 @@ flash-decoding split; see sharding.py). Recurrent archs carry O(1) state.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import encdec as ED
-from ..models import layers as L
 from ..models import lm as LM
 
 __all__ = ["make_serve_fns", "place_prefill_cache", "greedy_generate"]

@@ -240,7 +240,7 @@ class ContinuousScheduler:
         self._park_charge = park_charge
         self._park_release = park_release
         self._classes: Dict[QueryClass, _ClassRun] = {}
-        self._lock = threading.RLock()
+        self._lock = threading.RLock()  # lock: scheduler
 
     # ---------------- admission ---------------------------------------
     def _predict_depth(self, qclass: QueryClass) -> float:

@@ -128,7 +128,7 @@ class MetricsRegistry:
     def __init__(self, *, enabled: bool = True, max_series: int = 256):
         self.enabled = enabled
         self.max_series = max_series        # per metric family
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()  # lock: metrics
         self._families: "Dict[str, _Family]" = {}
         self._collectors: List[Callable[["MetricsRegistry"], None]] = []
         self.series_dropped = 0             # label sets refused by the cap
@@ -340,9 +340,9 @@ def feed_service_snapshot(reg: MetricsRegistry, snap: Dict[str, Any],
             continue
         base = key[len("store_"):]
         if base in store_counter_keys or base == "refault_upload_ms":
-            reg.set_counter(f"gravfm_{key}_total", float(val))
+            reg.set_counter(f"gravfm_store_{base}_total", float(val))
         else:
-            reg.set_gauge(f"gravfm_{key}", float(val))
+            reg.set_gauge(f"gravfm_store_{base}", float(val))
     for tenant, t in (snap.get("tenants") or {}).items():
         for field in ("submitted", "completed", "shed", "messages",
                       "result_cache_hits", "deadline_misses"):
@@ -441,7 +441,7 @@ class Watchdog:
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
         self.config = cfg
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()  # lock: watchdog
         self._active: Dict[Tuple[str, str], Alert] = {}
         self._history: List[Alert] = []
         self._samples: List[Tuple[float, Dict[str, float]]] = []

@@ -157,7 +157,7 @@ class PlanCache:
         # thread reaping an idle class) while another thread dispatches;
         # ordering is store lock -> this lock -> stats lock, never the
         # reverse, so it cannot deadlock with either
-        self._sync_lock = threading.Lock()
+        self._sync_lock = threading.Lock()  # lock: plans_sync
         self._engines: Dict[Tuple[str, int, str, str, int, str, str],
                             Engine] = {}
         # bytes each engine reported to the store's budget (so a

@@ -214,7 +214,7 @@ class GraphQueryService:
         # Leaf lock: _store_result is called from the scheduler thread
         # while it holds the continuous scheduler's lock, so the cache
         # must never share the service lock (ABBA deadlock with submit).
-        self._rc_lock = threading.Lock()
+        self._rc_lock = threading.Lock()  # lock: rcache
         # superseded versions' cached results can never match a lookup
         # again (new arrivals bind the new version) — purge them instead
         # of letting dead entries squeeze live ones out of the LRU
@@ -233,12 +233,12 @@ class GraphQueryService:
         self._roofline_platform = (roofline_platform or platform
                                    or perfmodel.PAPER_PLATFORM)
         self.stats.set_roofline_projector(self._project_teps)
-        self._lock = threading.RLock()
-        self._wake = threading.Condition(self._lock)
+        self._lock = threading.RLock()  # lock: server
+        self._wake = threading.Condition(self._lock)  # lock: server
         # Serializes plan lookup + execution: PlanCache is not internally
         # locked (its contract is "callers serialize dispatch"), and a
         # full-batch submit() can race the scheduler thread's poll().
-        self._dispatch_lock = threading.Lock()
+        self._dispatch_lock = threading.Lock()  # lock: dispatch
         self._thread: Optional[threading.Thread] = None
         self._running = False
 

@@ -70,7 +70,7 @@ class ServiceStats:
     ewma_alpha: float = 0.2
 
     def __post_init__(self):
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()  # lock: stats
         self._latencies_ms = collections.deque(maxlen=self.latency_window)
         # queue-wait (submit -> lane/batch admission) window: the SLO
         # watchdog's queue_wait_p95 rule reads these percentiles

@@ -95,7 +95,7 @@ class TraceBus:
         assert capacity >= 1
         self.capacity = capacity
         self.enabled = enabled
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()  # lock: trace
         self._events: "collections.deque[TraceEvent]" = collections.deque(
             maxlen=capacity)
         self.emitted = 0        # total ever emitted (ring may have dropped)

@@ -21,7 +21,6 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -198,7 +198,7 @@ class GraphStore:
         self.versioned = versioned
         self.defaults = dict(num_shards=num_shards, method=method,
                              pad_multiple=pad_multiple)
-        self._lock = threading.RLock()
+        self._lock = threading.RLock()  # lock: store
         self._versions: Dict[Tuple[str, int], _Version] = {}
         self._latest: Dict[str, int] = {}
         self._clock = 0
@@ -297,7 +297,7 @@ class GraphStore:
             entry = _Version(graph_id=graph_id, version=ver, graph=graph,
                              num_shards=num_shards, method=method,
                              pad_multiple=pad_multiple,
-                             cond=threading.Condition(self._lock))
+                             cond=threading.Condition(self._lock))  # lock: store
             self._versions[(graph_id, ver)] = entry
             self._latest[graph_id] = ver
             self.publishes += 1
@@ -829,8 +829,12 @@ class GraphStore:
             self.discards += 1
         self._emit("evict", graph_id=entry.graph_id,
                    version=entry.version)
+        # evict listeners intentionally fire under the store lock: they
+        # only invalidate plan/result caches keyed by (graph, version)
+        # and must observe the same atomic snapshot as the discard
+        # itself (registering docs require lock-aware, non-blocking fns)
         for fn in self._evict_listeners:
-            fn(entry.graph_id, entry.version)
+            fn(entry.graph_id, entry.version)  # analysis: allow(LCK004)
 
     def _retire_superseded_locked(self, entry: _Version) -> None:
         """A drained superseded version: discard its layout (both tiers)

@@ -82,7 +82,7 @@ class TenantRegistry:
     """Thread-safe tenant policy table + per-tenant token buckets."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()  # lock: tenancy
         self._policies: Dict[str, TenantPolicy] = {}
         self._buckets: Dict[str, TokenBucket] = {}
 

@@ -1,0 +1,678 @@
+"""Static-analysis suite tests (repro.analysis).
+
+Three layers:
+
+1. Per-rule fixtures — a known-bad snippet makes the rule fire, a
+   known-good variant stays silent (including ``# analysis: allow``).
+2. Infrastructure — fingerprint stability, baseline round-trip, the
+   CLI exit-code contract.
+3. The real tree — ``run_check`` over this repository is clean with an
+   empty baseline, and seeded violations in a scratch copy of the tree
+   are caught (the checker demonstrably protects the invariants it
+   claims to).
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Baseline, DeadCodePass, LockPass, RetracePass,
+                            TaxonomyPass, run_check)
+from repro.analysis.cli import main as cli_main
+from repro.analysis.findings import SourceFile, fingerprint_of
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def src(tmp_path, text, rel="mod.py"):
+    text = textwrap.dedent(text)
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text, encoding="utf-8")
+    return SourceFile(p, rel, text)
+
+
+def rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline fixtures
+# ---------------------------------------------------------------------------
+
+LOCK_PREAMBLE = """
+import threading
+
+class Store:
+    def __init__(self):
+        self._lock = threading.RLock()  # lock: store
+
+class Stats:
+    def __init__(self):
+        self._lock = threading.Lock()  # lock: stats
+"""
+
+
+class TestLockRules:
+    def test_order_inversion_fires(self, tmp_path):
+        sf = src(tmp_path, LOCK_PREAMBLE + """
+    def bad(self, store):
+        with self._lock:
+            with store._lock:
+                pass
+""")
+        fs = LockPass().run([sf])
+        assert "LCK001" in rules(fs)
+        assert any("stats" in f.message and "store" in f.message
+                   for f in fs if f.rule == "LCK001")
+
+    def test_correct_order_is_clean(self, tmp_path):
+        sf = src(tmp_path, LOCK_PREAMBLE + """
+    def good(self, store):
+        pass
+
+class Service:
+    def __init__(self):
+        self._lock = threading.RLock()  # lock: server
+
+    def ok(self, store):
+        with self._lock:
+            with store._lock:
+                pass
+""")
+        assert LockPass().run([sf]) == []
+
+    def test_self_deadlock_nonreentrant(self, tmp_path):
+        sf = src(tmp_path, LOCK_PREAMBLE + """
+    def bad(self):
+        with self._lock:
+            with self._lock:
+                pass
+""")
+        fs = LockPass().run([sf])
+        assert any(f.rule == "LCK001" and "non-reentrant" in f.message
+                   for f in fs)
+
+    def test_leaf_lock_across_outbound_call(self, tmp_path):
+        sf = src(tmp_path, LOCK_PREAMBLE + """
+    def bad(self):
+        with self._lock:
+            open("/tmp/x")
+""")
+        fs = LockPass().run([sf])
+        assert rules(fs) == ["LCK002"]
+
+    def test_leaf_outcall_allow_annotation(self, tmp_path):
+        sf = src(tmp_path, LOCK_PREAMBLE + """
+    def fine(self):
+        with self._lock:
+            open("/tmp/x")  # analysis: allow(LCK002)
+""")
+        assert LockPass().run([sf]) == []
+
+    def test_blocking_under_forbidding_lock(self, tmp_path):
+        sf = src(tmp_path, LOCK_PREAMBLE + """
+    def bad(self, fut):
+        with self._lock:
+            fut.result()
+""")
+        fs = LockPass().run([sf])
+        assert "LCK003" in rules(fs)
+
+    def test_condition_wait_on_own_lock_exempt(self, tmp_path):
+        sf = src(tmp_path, """
+import threading
+
+class Server:
+    def __init__(self):
+        self._lock = threading.RLock()  # lock: server
+        self._wake = threading.Condition(self._lock)  # lock: server
+
+    def waits(self):
+        with self._wake:
+            self._wake.wait(0.1)
+""")
+        assert LockPass().run([sf]) == []
+
+    def test_callback_under_store_lock(self, tmp_path):
+        sf = src(tmp_path, """
+import threading
+
+class Store:
+    def __init__(self):
+        self._lock = threading.RLock()  # lock: store
+        self._evict_listeners = []
+
+    def bad(self):
+        with self._lock:
+            for fn in self._evict_listeners:
+                fn(1, 2)
+""")
+        fs = LockPass().run([sf])
+        assert "LCK004" in rules(fs)
+
+    def test_unregistered_lock_construction(self, tmp_path):
+        sf = src(tmp_path, """
+import threading
+
+class Thing:
+    def __init__(self):
+        self._lock = threading.Lock()
+""")
+        fs = LockPass().run([sf])
+        assert rules(fs) == ["LCK005"]
+
+    def test_unknown_domain_annotation(self, tmp_path):
+        sf = src(tmp_path, """
+import threading
+
+class Thing:
+    def __init__(self):
+        self._lock = threading.Lock()  # lock: nosuchdomain
+""")
+        fs = LockPass().run([sf])
+        assert rules(fs) == ["LCK005"]
+        assert "undeclared" in fs[0].message
+
+    def test_transitive_effect_anchored_at_site(self, tmp_path):
+        """A violation inside a helper reached from under a lock is
+        reported at the helper's line (one allow covers all callers)."""
+        sf = src(tmp_path, LOCK_PREAMBLE + """
+    def helper(self, fut):
+        fut.result()
+
+    def caller_a(self, fut):
+        with self._lock:
+            self.helper(fut)
+
+    def caller_b(self, fut):
+        with self._lock:
+            self.helper(fut)
+""")
+        fs = LockPass().run([sf])
+        lck3 = [f for f in fs if f.rule == "LCK003"]
+        assert lck3 and len({f.line for f in lck3}) == 1
+
+
+# ---------------------------------------------------------------------------
+# retrace-hazard fixtures
+# ---------------------------------------------------------------------------
+
+
+class TestRetraceRules:
+    def test_tracer_branch_fires(self, tmp_path):
+        sf = src(tmp_path, """
+import jax
+
+def step(x):
+    if x > 0:
+        return x
+    return -x
+
+run = jax.jit(step)
+""")
+        fs = RetracePass().run([sf])
+        assert "RTR001" in rules(fs)
+
+    def test_static_shape_branch_is_clean(self, tmp_path):
+        sf = src(tmp_path, """
+import jax
+
+def step(x):
+    if x.shape[0] > 4:
+        return x
+    return -x
+
+run = jax.jit(step)
+""")
+        assert [f for f in RetracePass().run([sf])
+                if f.rule == "RTR001"] == []
+
+    def test_none_check_is_clean(self, tmp_path):
+        sf = src(tmp_path, """
+import jax
+
+def step(x, y=None):
+    if y is None:
+        return x
+    return x + y
+
+run = jax.jit(step)
+""")
+        assert [f for f in RetracePass().run([sf])
+                if f.rule == "RTR001"] == []
+
+    def test_host_marker_suppresses(self, tmp_path):
+        sf = src(tmp_path, """
+import jax
+
+def step(x):  # analysis: host
+    if x > 0:
+        return x
+    return -x
+
+run = jax.jit(step)
+""")
+        assert [f for f in RetracePass().run([sf])
+                if f.rule == "RTR001"] == []
+
+    def test_traced_marker_forces_check(self, tmp_path):
+        sf = src(tmp_path, """
+def deliver(x):  # analysis: traced
+    while x < 3:
+        x = x + 1
+    return x
+""")
+        fs = RetracePass().run([sf])
+        assert "RTR001" in rules(fs)
+
+    def test_jit_in_hot_path_fires(self, tmp_path):
+        sf = src(tmp_path, """
+import jax
+
+class Stepper:
+    def step(self, fn, x):
+        return jax.jit(fn)(x)
+""")
+        fs = RetracePass().run([sf])
+        assert "RTR002" in rules(fs)
+
+    def test_jit_in_factory_is_clean(self, tmp_path):
+        sf = src(tmp_path, """
+import jax
+
+class Stepper:
+    def __init__(self, fn):
+        self._run = jax.jit(fn)
+
+    def _build(self, fn):
+        return jax.jit(fn)
+
+    def make_run(self, fn):
+        return jax.jit(fn)
+""")
+        assert [f for f in RetracePass().run([sf])
+                if f.rule == "RTR002"] == []
+
+    def test_array_valued_static_arg(self, tmp_path):
+        sf = src(tmp_path, """
+import jax
+import jax.numpy as jnp
+
+def f(x, cfg):
+    return x
+
+run = jax.jit(f, static_argnums=(1,))
+
+def call(x):
+    return run(x, jnp.zeros(4))
+""")
+        fs = RetracePass().run([sf])
+        assert "RTR003" in rules(fs)
+
+    def test_nonliteral_static_spec(self, tmp_path):
+        sf = src(tmp_path, """
+import jax
+
+def f(x):
+    return x
+
+run = jax.jit(f, static_argnums=[[1]])
+""")
+        fs = RetracePass().run([sf])
+        assert "RTR003" in rules(fs)
+
+    def test_closure_captured_device_array(self, tmp_path):
+        sf = src(tmp_path, """
+import jax
+import jax.numpy as jnp
+
+def build():
+    table = jnp.arange(8)
+
+    def step(x):
+        return x + table
+
+    return jax.jit(step)
+""")
+        fs = RetracePass().run([sf])
+        assert "RTR004" in rules(fs)
+
+    def test_numpy_host_constant_closure_clean(self, tmp_path):
+        sf = src(tmp_path, """
+import jax
+import numpy as np
+
+def build():
+    table = np.arange(8)
+
+    def step(x):
+        return x + table
+
+    return jax.jit(step)
+""")
+        assert [f for f in RetracePass().run([sf])
+                if f.rule == "RTR004"] == []
+
+
+# ---------------------------------------------------------------------------
+# taxonomy fixtures
+# ---------------------------------------------------------------------------
+
+README_FIXTURE = """
+## Observability
+
+Event taxonomy:
+
+| kind | emitted by | meaning |
+|---|---|---|
+| `submit` | server | arrived |
+| `retire` | scheduler | resolved |
+
+## Metrics
+
+Metric-name taxonomy:
+
+| family | type | labels | source |
+|---|---|---|---|
+| `gravfm_queries_{submitted,completed}_total` | counter | — | stats |
+| `gravfm_qps` | gauge | — | stats |
+| `gravfm_store_<k>_total` | counter | — | store |
+
+## Next
+"""
+
+KINDS = {"submit", "retire"}
+
+
+class TestTaxonomyRules:
+    def make(self, tmp_path, body):
+        return src(tmp_path, body)
+
+    def test_unknown_trace_kind(self, tmp_path):
+        sf = self.make(tmp_path, """
+def f(bus):
+    bus.emit("gone", q=1)
+""")
+        fs = TaxonomyPass(event_kinds=KINDS,
+                          readme_text=README_FIXTURE).run([sf])
+        assert "TAX001" in rules(fs)
+
+    def test_known_kind_clean(self, tmp_path):
+        sf = self.make(tmp_path, """
+def f(bus):
+    bus.emit("submit", q=1)
+""")
+        fs = TaxonomyPass(event_kinds=KINDS,
+                          readme_text=README_FIXTURE).run([sf])
+        assert "TAX001" not in rules(fs)
+
+    def test_malformed_metric_name(self, tmp_path):
+        sf = self.make(tmp_path, """
+def f(reg):
+    reg.inc("gravfm_Bad-Name_total")
+""")
+        fs = TaxonomyPass(event_kinds=KINDS,
+                          readme_text=README_FIXTURE).run([sf])
+        assert "TAX002" in rules(fs)
+
+    def test_counter_without_total_suffix(self, tmp_path):
+        sf = self.make(tmp_path, """
+def f(reg):
+    reg.inc("gravfm_queries_submitted")
+""")
+        fs = TaxonomyPass(event_kinds=KINDS,
+                          readme_text=README_FIXTURE).run([sf])
+        assert "TAX003" in rules(fs)
+
+    def test_kind_conflict(self, tmp_path):
+        sf = self.make(tmp_path, """
+def f(reg):
+    reg.inc("gravfm_qps_x_total")
+    reg.set_gauge("gravfm_qps_x_total")
+""")
+        fs = TaxonomyPass(event_kinds=KINDS,
+                          readme_text=README_FIXTURE).run([sf])
+        assert "TAX004" in rules(fs)
+
+    def test_undocumented_family(self, tmp_path):
+        sf = self.make(tmp_path, """
+def f(reg):
+    reg.set_gauge("gravfm_mystery_depth")
+""")
+        fs = TaxonomyPass(event_kinds=KINDS,
+                          readme_text=README_FIXTURE).run([sf])
+        assert "TAX005" in rules(fs)
+
+    def test_fstring_family_resolves_against_wildcard_row(self, tmp_path):
+        sf = self.make(tmp_path, """
+def f(reg, snap):
+    for key, val in snap.items():
+        reg.set_counter(f"gravfm_store_{key}_total", val)
+""")
+        fs = TaxonomyPass(event_kinds=KINDS,
+                          readme_text=README_FIXTURE).run([sf])
+        assert fs == []
+
+    def test_loop_literal_fstring_expands(self, tmp_path):
+        sf = self.make(tmp_path, """
+def f(reg, t):
+    for field in ("submitted", "completed"):
+        reg.set_counter(f"gravfm_queries_{field}_total", t[field])
+""")
+        fs = TaxonomyPass(event_kinds=KINDS,
+                          readme_text=README_FIXTURE).run([sf])
+        assert fs == []
+
+    def test_undocumented_event_kind(self, tmp_path):
+        sf = src(tmp_path, """
+EVENT_KINDS = frozenset({"submit", "retire", "newkind"})
+""", rel="service/trace.py")
+        fs = TaxonomyPass(readme_text=README_FIXTURE).run([sf])
+        assert "TAX006" in rules(fs)
+        assert any("newkind" in f.message for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# dead-code fixtures
+# ---------------------------------------------------------------------------
+
+
+class TestDeadCode:
+    def test_unused_import_and_def(self, tmp_path):
+        sf = src(tmp_path, """
+import os
+import json
+
+def _helper():
+    return 1
+
+def used():
+    return json.dumps({})
+""")
+        fs = DeadCodePass().run([sf])
+        assert rules(fs) == ["DC001", "DC002"]
+        assert all(f.severity == "info" for f in fs)
+
+    def test_quoted_annotation_counts_as_use(self, tmp_path):
+        sf = src(tmp_path, """
+from typing import Dict
+
+def f(x) -> "Dict[str, int]":
+    return {}
+""")
+        assert DeadCodePass().run([sf]) == []
+
+    def test_all_export_counts_as_use(self, tmp_path):
+        sf = src(tmp_path, """
+import os
+
+__all__ = ["os"]
+""")
+        assert DeadCodePass().run([sf]) == []
+
+
+# ---------------------------------------------------------------------------
+# fingerprints, baseline, CLI
+# ---------------------------------------------------------------------------
+
+
+class TestInfra:
+    def test_fingerprint_ignores_line_number(self):
+        a = fingerprint_of("LCK001", "m.py", "f", "with self._lock:")
+        b = fingerprint_of("LCK001", "m.py", "f", "  with self._lock:  ")
+        assert a == b and len(a) == 16
+
+    def test_baseline_round_trip(self, tmp_path):
+        sf = src(tmp_path, LOCK_PREAMBLE + """
+    def bad(self):
+        with self._lock:
+            open("/tmp/x")
+""")
+        fs = LockPass().run([sf])
+        assert fs
+        path = tmp_path / "baseline.json"
+        Baseline().save(path, fs)
+        loaded = Baseline.load(path)
+        assert all(f in loaded for f in fs)
+        data = json.loads(path.read_text())
+        assert set(data) == {"fingerprints"}
+
+    def test_cli_gates_on_new_findings(self, tmp_path):
+        root = tmp_path / "proj"
+        (root / "src" / "repro").mkdir(parents=True)
+        (root / "src" / "repro" / "service").mkdir()
+        bad = textwrap.dedent("""
+            import threading
+
+            class S:
+                def __init__(self):
+                    self._lock = threading.Lock()  # lock: stats
+
+                def bad(self):
+                    with self._lock:
+                        open("/tmp/x")
+        """)
+        (root / "src" / "repro" / "service" / "stats.py").write_text(bad)
+        rc = cli_main(["check", "--root", str(root)])
+        assert rc == 1
+        # baselining the findings makes the same tree pass
+        rc = cli_main(["check", "--root", str(root),
+                       "--write-baseline", str(tmp_path / "b.json")])
+        assert rc == 0
+        rc = cli_main(["check", "--root", str(root),
+                       "--baseline", str(tmp_path / "b.json")])
+        assert rc == 0
+
+    def test_cli_json_report(self, tmp_path, capsys):
+        root = tmp_path / "proj"
+        (root / "src" / "repro").mkdir(parents=True)
+        out = tmp_path / "report.json"
+        rc = cli_main(["check", "--root", str(root), "--json",
+                       "--json-out", str(out)])
+        assert rc == 0
+        payload = json.loads(out.read_text())
+        assert payload["ok"] is True
+        assert set(payload) == {"ok", "new", "baselined", "info",
+                                "passes"}
+        assert json.loads(capsys.readouterr().out)["ok"] is True
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+# ---------------------------------------------------------------------------
+
+
+class TestRepoTree:
+    def test_repo_is_clean_with_empty_baseline(self):
+        report = run_check(REPO)
+        msgs = [f.render() for f in report["new"]]
+        assert report["ok"], "\n".join(msgs)
+        assert report["info"] == [], "\n".join(
+            f.render() for f in report["info"])
+
+    def test_module_invocation_exits_zero(self):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "check", "--root",
+             str(REPO), "--baseline",
+             str(REPO / "analysis-baseline.json")],
+            cwd=REPO, capture_output=True, text=True,
+            env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    @pytest.fixture()
+    def scratch(self, tmp_path):
+        """A scratch copy of the real tree the tests can vandalise."""
+        root = tmp_path / "scratch"
+        (root / "src").mkdir(parents=True)
+        shutil.copytree(REPO / "src" / "repro", root / "src" / "repro")
+        shutil.copy(REPO / "README.md", root / "README.md")
+        return root
+
+    def test_scratch_copy_is_clean(self, scratch):
+        assert run_check(scratch)["ok"]
+
+    def test_seeded_lock_inversion_is_caught(self, scratch):
+        server = scratch / "src" / "repro" / "service" / "server.py"
+        text = server.read_text()
+        # a method that takes the store lock and then the server lock —
+        # a textbook inversion of the declared hierarchy
+        text += textwrap.dedent("""
+
+        def _seeded_inversion(svc):
+            with svc.store._lock:
+                with svc._lock:
+                    pass
+        """)
+        server.write_text(text)
+        report = run_check(scratch)
+        assert not report["ok"]
+        assert any(f.rule == "LCK001" and "server" in f.message
+                   for f in report["new"])
+
+    def test_seeded_tracer_branch_is_caught(self, scratch):
+        stepper = scratch / "src" / "repro" / "core" / "stepper.py"
+        text = stepper.read_text()
+        text += textwrap.dedent("""
+
+        def _seeded_hazard(x):  # analysis: traced
+            if x > 0:
+                return x
+            return -x
+        """)
+        stepper.write_text(text)
+        report = run_check(scratch)
+        assert not report["ok"]
+        assert any(f.rule == "RTR001" for f in report["new"])
+
+    def test_seeded_unknown_kind_is_caught(self, scratch):
+        registry = scratch / "src" / "repro" / "store" / "registry.py"
+        text = registry.read_text()
+        text += textwrap.dedent("""
+
+        def _seeded_emit(bus):
+            bus.emit("not_a_kind", graph_id=0)
+        """)
+        registry.write_text(text)
+        report = run_check(scratch)
+        assert not report["ok"]
+        assert any(f.rule == "TAX001" and "not_a_kind" in f.message
+                   for f in report["new"])
+
+    def test_seeded_undocumented_metric_is_caught(self, scratch):
+        metrics = scratch / "src" / "repro" / "service" / "metrics.py"
+        text = metrics.read_text()
+        text += textwrap.dedent("""
+
+        def _seeded_metric(reg):
+            reg.set_gauge("gravfm_totally_new_gauge", 1.0)
+        """)
+        metrics.write_text(text)
+        report = run_check(scratch)
+        assert not report["ok"]
+        assert any(f.rule == "TAX005" for f in report["new"])
