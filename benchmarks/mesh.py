@@ -1,0 +1,225 @@
+"""Mesh serving with overlapped exchange collectives vs the roofline.
+
+GraVF-M's evaluation claim (§6) is that the generated system reaches
+94% of the §5 model's projected limit — which is only attainable when
+network transfer overlaps local compute (eq. 9's ``min`` implicitly
+assumes every resource runs concurrently). This benchmark stands the
+claim up on a real 4-device mesh (subprocess with
+``--xla_force_host_platform_device_count=4``, the SNIPPETS.md idiom,
+plus the XLA latency-hiding flags for GPU) and measures the pipelined
+exchange schedule end to end on the combined-exchange R-MAT workload:
+
+  * **bit-identity**: the overlapped schedule's BFS/SSSP results equal
+    the synchronous schedule's exactly (states, supersteps, messages);
+  * **zero steady-state re-traces**: repeated runs — and toggling
+    ``overlap`` per run — re-trace nothing once both schedules are warm;
+  * **throughput**: steady-state TEPS under the overlapped schedule vs
+    synchronous on the same engine (the act-stream elision plus the
+    window pipeline must actually pay, not just not regress);
+  * **roofline**: the §6 methodology applied to the overlap claim —
+    profile the synchronous schedule's phase split (exchange wall E,
+    local-compute wall A), project the overlapped superstep floor
+    ``max(E, A)`` via :func:`perfmodel.overlapped_projection`, and
+    compare the measured overlapped superstep wall against it.
+
+``GRAVFM_BENCH_CI=1`` turns the comparisons into gates:
+    bit-identical results, zero steady-state re-traces
+    overlapped TEPS >= 1.15x synchronous (combined-exchange R-MAT BFS)
+    measured/projected overlapped-pipeline efficiency >= 0.7
+
+The run always writes ``bench-mesh.json`` (or ``$GRAVFM_MESH_OUT``);
+the CI workflow uploads it and appends the ``BENCH_mesh.json``
+trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit
+
+_SCRIPT = r"""
+import os
+flags = ["--xla_force_host_platform_device_count=4"]
+if os.environ.get("GRAVFM_MESH_GPU"):
+    # latency-hiding scheduler flags (SNIPPETS.md idiom): let XLA issue
+    # the exchange collective asynchronously on its own stream
+    flags += ["--xla_gpu_enable_async_collectives=true",
+              "--xla_gpu_enable_latency_hiding_scheduler=true",
+              "--xla_gpu_enable_highest_priority_async_stream=true"]
+os.environ["XLA_FLAGS"] = " ".join(flags)
+import json, time
+import numpy as np
+import jax.numpy as jnp
+from repro.core import graph as G, partition as PT, algorithms as ALG
+from repro.core.engine_shardmap import ShardEngine
+from repro.launch.mesh import make_serving_mesh
+
+SCALE, EDGE_FACTOR, P, W = %(scale)d, %(edge_factor)d, 4, 8
+ITERS = %(iters)d
+g = G.rmat(SCALE, EDGE_FACTOR, seed=7)
+pg = PT.partition_graph(g, P, method="greedy", pad_multiple=16)
+mesh = make_serving_mesh(P)
+# a high-out-degree root reaches the frontier's bulk and gives a deep,
+# message-heavy run (a leaf root can quiesce in one superstep)
+root = int(np.argmax(g.out_degrees()))
+
+out = {"num_vertices": g.num_vertices, "num_edges": g.num_edges,
+       "P": P, "W": W, "root": root, "iters": ITERS}
+
+# ---- bit-identity + steady-state retrace (run path), BFS and SSSP ----
+state = {}
+for kern in ("bfs", "sssp"):
+    eng = ShardEngine(ALG.bfs() if kern == "bfs" else ALG.sssp(), pg,
+                      mesh=mesh, exchange="combined", backend="ref")
+    for ov in (False, True):
+        r0 = eng.run(root=np.int32(root), overlap=ov)     # traces
+        warm = eng.traces
+        r1 = eng.run(root=np.int32(root), overlap=ov)     # steady state
+        state[(kern, ov)] = {k: np.asarray(v)
+                             for k, v in r1["state"].items()}
+        out["%%s_%%s" %% (kern, "ov" if ov else "sync")] = {
+            "supersteps": int(r1["supersteps"]),
+            "messages": int(r1["messages"]),
+            "wire_words": float(r1["comm"]["wire_words"]),
+            "retraced": eng.traces != warm,
+        }
+    # toggling back re-traces nothing either (both programs warm)
+    warm = eng.traces
+    eng.run(root=np.int32(root), overlap=False)
+    eng.run(root=np.int32(root), overlap=True)
+    out["%%s_toggle_retraced" %% kern] = eng.traces != warm
+out["identical"] = all(
+    np.array_equal(state[(k, False)][s], state[(k, True)][s])
+    for k in ("bfs", "sssp") for s in state[(k, False)])
+
+# ---- steady-state TEPS, overlapped vs synchronous (combined BFS) -----
+eng = ShardEngine(ALG.bfs(), pg, mesh=mesh, exchange="combined",
+                  backend="ref")
+teps = {}
+for ov in (False, True):
+    eng.run(root=np.int32(root), overlap=ov)              # warm
+    t0 = time.perf_counter()
+    msgs = 0
+    for _ in range(ITERS):
+        msgs += int(eng.run(root=np.int32(root), overlap=ov)["messages"])
+    wall = time.perf_counter() - t0
+    teps["ov" if ov else "sync"] = msgs / wall
+    out["teps_%%s" %% ("ov" if ov else "sync")] = msgs / wall
+out["teps_ratio"] = teps["ov"] / teps["sync"]
+
+# ---- roofline: profiled sync phase split -> overlapped projection ----
+# Drive the step-granular steppers over the same alive schedule: the
+# profiled synchronous stepper yields the exchange wall E and the
+# local-compute wall A per superstep; perfmodel.overlapped_projection
+# says the pipelined superstep floor is max(E, A); the measured
+# overlapped stepper wall is compared against that floor (§6 applied
+# to the overlap claim).
+roots = {"root": jnp.full((W,), np.int32(root))}
+st_sync = eng.make_stepper(W, overlap=False)
+st_ov = eng.make_stepper(W, overlap=True)
+
+def drive(st, profile, reps=3):
+    st.profile = profile
+    walls, phases = [], []
+    for _ in range(reps):
+        carry, act, steps = st.init(roots)
+        alive = np.asarray(act)
+        t0 = time.perf_counter()
+        n = 0
+        while alive.any():
+            carry, act, steps = st.step(carry, alive)
+            if profile and getattr(st, "last_phases", None):
+                phases.append(dict(st.last_phases))
+            alive = np.asarray(act)
+            n += 1
+        walls.append((time.perf_counter() - t0, n))
+    wall, n = min(walls)                 # best-of over jitter
+    return wall / n, n, phases
+
+per_step_sync_prof, depth, phases = drive(st_sync, True)
+E = float(np.median([p["exchange"] for p in phases]))
+A = float(np.median([p.get("scatter", 0.0) + p.get("combine", 0.0)
+                     + p.get("apply", 0.0) for p in phases]))
+per_step_ov, _, _ = drive(st_ov, False)
+per_step_sync, _, _ = drive(st_sync, False)
+out["depth"] = depth
+out["phase_exchange_s"] = E
+out["phase_compute_s"] = A
+out["superstep_sync_s"] = per_step_sync
+out["superstep_ov_s"] = per_step_ov
+print("MESH-JSON:" + json.dumps(out))
+"""
+
+
+def mesh():
+    ci = bool(os.environ.get("GRAVFM_BENCH_CI"))
+    scale, edge_factor, iters = (10, 64, 5)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = _SCRIPT % {"scale": scale, "edge_factor": edge_factor,
+                        "iters": iters}
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath(src)
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    if proc.returncode != 0:
+        raise RuntimeError("mesh subprocess failed:\n"
+                           + proc.stderr[-3000:])
+    line = next(ln for ln in proc.stdout.splitlines()
+                if ln.startswith("MESH-JSON:"))
+    meas = json.loads(line[len("MESH-JSON:"):])
+
+    from repro.core import perfmodel as pm
+    # projected overlapped superstep floor from the measured sync phase
+    # split (time domain), plus the rate-domain model gain for context
+    proj = pm.overlapped_projection(meas["phase_compute_s"],
+                                    meas["phase_exchange_s"])
+    overlap_eff = (proj["overlapped_s"] / meas["superstep_ov_s"]
+                   if meas["superstep_ov_s"] > 0 else 0.0)
+    wl = pm.Workload(meas["num_vertices"], meas["num_edges"])
+    lim = pm.limits(pm.PAPER_PLATFORM, pm.PAPER_ALGOS["bfs"], wl,
+                    n_nodes=meas["P"], exchange="combined")
+    model = pm.overlapped_limits(lim)
+
+    retraced = any(meas[k]["retraced"] for k in
+                   ("bfs_sync", "bfs_ov", "sssp_sync", "sssp_ov"))
+    retraced = (retraced or meas["bfs_toggle_retraced"]
+                or meas["sssp_toggle_retraced"])
+    emit("mesh/rmat%d_ef%d/teps" % (scale, edge_factor),
+         meas["superstep_ov_s"] * 1e6,
+         "sync=%.0f;ov=%.0f;ratio=%.2fx;identical=%s;retraced=%s"
+         % (meas["teps_sync"], meas["teps_ov"], meas["teps_ratio"],
+            meas["identical"], retraced))
+    emit("mesh/rmat%d_ef%d/overlap" % (scale, edge_factor),
+         meas["superstep_sync_s"] * 1e6,
+         "E=%.0fus;A=%.0fus;proj=%.0fus;meas_ov=%.0fus;eff=%.2f;"
+         "model_gain=%.2fx"
+         % (meas["phase_exchange_s"] * 1e6, meas["phase_compute_s"] * 1e6,
+            proj["overlapped_s"] * 1e6, meas["superstep_ov_s"] * 1e6,
+            overlap_eff, model["overlap_gain"]))
+
+    out_path = os.environ.get("GRAVFM_MESH_OUT", "bench-mesh.json")
+    with open(out_path, "w") as f:
+        json.dump({"measured": meas,
+                   "projected": {**proj, "model_overlap_gain":
+                                 model["overlap_gain"],
+                                 "T_serial": model["T_serial"],
+                                 "T_overlap": model["T_overlap"]},
+                   "overlap_efficiency": overlap_eff,
+                   "teps_ratio": meas["teps_ratio"]}, f, indent=2)
+
+    if ci:
+        assert meas["identical"], "overlapped result != synchronous"
+        assert not retraced, "steady state re-traced"
+        assert meas["teps_ratio"] >= 1.15, (
+            "overlapped TEPS only %.2fx of synchronous (< 1.15x)"
+            % meas["teps_ratio"])
+        assert overlap_eff >= 0.7, (
+            "measured overlapped superstep %.0fus vs projected floor "
+            "%.0fus: efficiency %.2f < 0.7"
+            % (meas["superstep_ov_s"] * 1e6, proj["overlapped_s"] * 1e6,
+               overlap_eff))

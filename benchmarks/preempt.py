@@ -27,6 +27,7 @@ import time
 import numpy as np
 
 from repro.service import GraphQueryService, QueryRequest
+from repro.service.stats import percentile
 
 from .common import emit
 from .continuous import _mixed_graph
@@ -78,11 +79,13 @@ def preempt():
         for f in bg:
             assert f.result().supersteps > 0
         snap = svc.stats_snapshot()
-        fg_lat_ms.sort()
-        p95 = fg_lat_ms[int(0.95 * (len(fg_lat_ms) - 1))]
+        # interpolated percentiles (the stats-module reference), not the
+        # nearest-rank index — at n=8 the old form reported the 6th of 8
+        # samples as "p95"
+        p95 = percentile(fg_lat_ms, 95)
         tag = "on" if preemption else "off"
         emit(f"preempt_{tag}_fg", p95 * 1e3,    # us column = p95
-             f"p50_ms={fg_lat_ms[len(fg_lat_ms) // 2]:.2f};"
+             f"p50_ms={percentile(fg_lat_ms, 50):.2f};"
              f"p95_ms={p95:.2f};"
              f"preemptions={snap['preemptions']};"
              f"restores={snap['lane_restores']};"
@@ -96,6 +99,35 @@ def preempt():
     off = measure(False)
     speedup = off["fg_p95_ms"] / max(on["fg_p95_ms"], 1e-9)
     emit("preempt_fg_p95_speedup", 0.0, f"x{speedup:.2f}")
+
+    # per-root depth prediction: interleave shallow core roots (~4
+    # supersteps) with deep tail roots (~tail supersteps) so both
+    # populations keep retiring into the same class EWMA. The flat
+    # per-class estimate settles on a blend that is wrong for both;
+    # the degree-decile buckets separate them (tail roots have
+    # out-degree 1, core roots ~deg), so the bucketed predictor is
+    # near-exact for each.
+    def depth_ab(depth_buckets: bool) -> float:
+        svc = GraphQueryService(num_shards=4, max_batch=slots,
+                                slots=slots, scheduling="continuous",
+                                result_cache_size=0,
+                                root_depth_buckets=depth_buckets)
+        svc.add_graph("mixed", g)
+        svc.warm("mixed", "bfs")
+        for i in range(n_fg):
+            for r in (int(fg_roots[i]), n_core + (i % 4)):
+                fut = svc.submit(QueryRequest(
+                    "mixed", "bfs", {"root": r}, deadline_ms=600_000))
+                while not fut.done():
+                    svc.poll()
+        return svc.stats_snapshot()["depth_pred_abs_err"]
+
+    err_b = depth_ab(True)
+    err_f = depth_ab(False)
+    depth_gain = err_f / max(err_b, 1e-9)
+    emit("preempt_depth_pred_abs_err", err_b,
+         f"bucketed={err_b:.2f};flat={err_f:.2f};"
+         f"improvement=x{depth_gain:.2f}")
 
     if ci:
         if on["preemptions"] < 1 or on["lane_restores"] < 1:
@@ -114,3 +146,8 @@ def preempt():
                 f"foreground p95 speedup x{speedup:.2f} < x3.0 "
                 f"(on={on['fg_p95_ms']:.2f}ms off={off['fg_p95_ms']:.2f}"
                 "ms) — preemption regression")
+        if depth_gain < 1.5:
+            raise SystemExit(
+                f"degree-decile depth buckets only improved "
+                f"depth_pred_abs_err x{depth_gain:.2f} (< x1.5): "
+                f"bucketed={err_b:.2f} flat={err_f:.2f}")

@@ -14,6 +14,7 @@ import time
 
 from . import common
 from . import continuous as CONT
+from . import mesh as MESH
 from . import paper_figures as PF
 from . import preempt as PRE
 from . import roofline_table as RT
@@ -39,6 +40,7 @@ ALL = {
     "service": SVC.service_throughput,
     "continuous": CONT.continuous_vs_bucketed,
     "tenancy": TEN.tenancy,
+    "mesh": MESH.mesh,
     "preempt": PRE.preempt,
     "traceov": TRC.trace_overhead,
     "traffic": TRF.traffic,

@@ -1,4 +1,4 @@
-"""Retrace-hazard pass (rules RTR001-RTR004).
+"""Retrace-hazard pass (rules RTR001-RTR005).
 
 The serving stack's perf gates all assume *zero steady-state
 re-traces*: compiled programs are built once (``__init__`` /
@@ -23,6 +23,15 @@ source patterns that silently break that contract:
   name bound in a *host* scope by an array constructor
   (``jnp.asarray``/``zeros``/``device_put``/...) — it should be a jit
   argument so residency changes don't re-trace.
+* **RTR005** unrolled collective pipeline: a Python ``for``/``while``
+  loop inside a traced function whose body issues a device collective
+  (``ppermute``/``all_to_all``/``all_gather``/``psum``/...). The loop
+  unrolls at trace time, baking the Python-int window (double-buffer)
+  index into every iteration — trace size grows with the window count
+  and changing it re-traces. The pipeline must be a ``lax.fori_loop``/
+  ``scan`` with the window and buffer-parity index in the loop carry
+  (building a static permutation *table* with a comprehension is fine;
+  issuing the collective per Python iteration is not).
 
 Traced scopes are discovered from seeds (arguments to ``jax.jit``,
 ``jax.vmap``, ``lax.while_loop``/``fori_loop``/``scan``/``switch``/
@@ -52,6 +61,8 @@ ARRAY_CTORS = {"asarray", "array", "zeros", "ones", "full", "arange",
                "ones_like", "full_like"}
 STATIC_ARRAY_ATTRS = {"shape", "ndim", "dtype", "size", "aval"}
 HOT_JIT_ALLOWED = {"__init__", "_build", "__post_init__"}
+COLLECTIVES = {"ppermute", "pshuffle", "all_to_all", "all_gather",
+               "psum", "pmax", "pmin", "pmean", "psum_scatter"}
 
 
 def _is_jit_call(call: ast.Call) -> Optional[str]:
@@ -282,7 +293,59 @@ class RetracePass:
                                                     ))])
 
         walk(body)
+        self._check_unrolled_collectives(sf, info, findings)
         self._check_closure_arrays(sf, info, infos, traced, findings)
+
+    # ------------------------ RTR005 ---------------------------------
+    def _check_unrolled_collectives(self, sf, info, findings):
+        """RTR005: device collectives issued from a Python loop inside
+        a traced function — an unrolled exchange pipeline whose window
+        / double-buffer index is a Python int instead of traced loop
+        carry."""
+
+        def first_collective(n) -> Optional[str]:
+            # nested defs are traced scopes of their own (fori_loop /
+            # scan bodies) — a collective there is the *fixed* pattern,
+            # and the def is checked separately anyway
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+                return None
+            if isinstance(n, ast.Call):
+                ch = attr_chain(n.func)
+                if ch and ch[-1] in COLLECTIVES:
+                    return ch[-1]
+            for child in ast.iter_child_nodes(n):
+                hit = first_collective(child)
+                if hit:
+                    return hit
+            return None
+
+        def loops_of(stmts):
+            for st in stmts:
+                if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.Lambda)):
+                    continue        # reported under the nested def
+                if isinstance(st, (ast.For, ast.While)):
+                    yield st
+                for field in ("body", "orelse", "finalbody"):
+                    sub = getattr(st, field, None)
+                    if sub:
+                        yield from loops_of(sub)
+
+        node = info.node
+        body = node.body if not isinstance(node, ast.Lambda) else []
+        for st in loops_of(body):
+            hit = first_collective(st)
+            if hit and not sf.allows(st.lineno, "RTR005"):
+                kind = "while" if isinstance(st, ast.While) else "for"
+                findings.append(sf.make(
+                    "RTR005", st.lineno, info.qual,
+                    f"collective '{hit}' issued from a Python '{kind}' "
+                    f"loop inside jit-traced '{info.qual}' — the "
+                    f"pipeline unrolls at trace time with the window/"
+                    f"double-buffer index baked in as a Python int; "
+                    f"use lax.fori_loop/scan with the index in the "
+                    f"loop carry"))
 
     def _check_closure_arrays(self, sf, info, infos, traced, findings):
         """RTR004: free names bound by array constructors in host

@@ -41,6 +41,36 @@ paper's architectural ideas become *schedulable*:
 
 All exchanges produce bit-identical states to ``engine.py`` (tested in a
 multi-device subprocess; see tests/test_engine_shardmap.py).
+
+Every exchange additionally has an **overlapped** (pipelined) schedule,
+selected per stepper/run with ``overlap=True``: the superstep is split
+into partition windows and the collective for window ``k+1`` is issued
+*before* the scatter/combine of window ``k`` runs, double-buffering the
+in-flight receive block inside the shard_map body (the window index is a
+``lax.fori_loop`` carry, never a Python int — see analysis rule RTR005).
+Concretely:
+
+  allgather/frontier — the one-shot ``all_gather`` is decomposed into P
+      ``ppermute`` hops accumulating into the same flat receive array the
+      gather would have produced; each arriving chunk is placed while the
+      next hop is already in flight, then ONE receiver-side consume runs
+      (bit-identical by construction: the flat array equals the gathered
+      one, and the reported wire words are unchanged).
+  ring — the hop for chunk ``k+1`` is issued before chunk ``k``'s bucket
+      consume instead of after it; consume/merge order is unchanged.
+  unicast/combined — the ``all_to_all`` payload is chunked into column
+      windows folded one behind the collective; per-window partials merge
+      with the ring schedule's lexicographic ``merge_carry`` (exact for
+      min/max combiners, the same construction the ring/unicast equality
+      test already proves). Kernels with ``got_from_identity`` skip the
+      activity (and sync-combined's per-slot got) streams entirely —
+      activity is recovered as ``recv != identity`` — so the overlapped
+      wire carries fewer collective launches than the synchronous one
+      while reporting the same words (the bytes the serial schedule
+      would move; stats stay comparable across schedules).
+
+Both schedules are traced once per (width, overlap) at warm; toggling
+``overlap`` per request re-traces nothing.
 """
 from __future__ import annotations
 
@@ -383,19 +413,43 @@ class ShardEngine:
         # Engine.traces for the counting trick.
         self.traces = 0
         self._run_cache: Dict[Any, Any] = {}
-        self._prog = self._make_program()
-        self._steppers: Dict[int, "ShardLaneStepper"] = {}
+        # one program per schedule; the overlapped variant is built
+        # lazily (its windowed folds require a min/max combiner) and
+        # both share this engine's device data and jit caches.
+        self._progs: Dict[bool, SuperstepProgram] = {
+            False: self._make_program(False)}
+        self._prog = self._progs[False]
+        self._steppers: Dict[Any, "ShardLaneStepper"] = {}
 
-    def _make_program(self) -> SuperstepProgram:
+    def _prog_for(self, overlap: bool) -> SuperstepProgram:
+        overlap = bool(overlap)
+        prog = self._progs.get(overlap)
+        if prog is None:
+            prog = self._progs[overlap] = self._make_program(overlap)
+        return prog
+
+    def _make_program(self, overlap: bool = False) -> SuperstepProgram:
         """Per-shard step-granular program (runs inside shard_map blocks;
         termination uses the §4.3 distributed activity bit)."""
+        if overlap and self.exchange in ("unicast", "combined") \
+                and self.kernel.combiner not in ("min", "max"):
+            raise ValueError(
+                "overlap=True windows the all_to_all receiver fold, which "
+                "is only exact for min/max combiners; kernel "
+                f"{self.kernel.name!r} combines with "
+                f"{self.kernel.combiner!r}")
         deliver = {
-            "allgather": self._deliver_allgather,
-            "ring": self._deliver_ring,
-            "frontier": self._deliver_frontier,
-            "unicast": self._deliver_unicast,
-            "combined": self._deliver_combined,
-        }[self.exchange]
+            ("allgather", False): self._deliver_allgather,
+            ("ring", False): self._deliver_ring,
+            ("frontier", False): self._deliver_frontier,
+            ("unicast", False): self._deliver_unicast,
+            ("combined", False): self._deliver_combined,
+            ("allgather", True): self._deliver_allgather_ov,
+            ("ring", True): self._deliver_ring_ov,
+            ("frontier", True): self._deliver_frontier_ov,
+            ("unicast", True): self._deliver_unicast_ov,
+            ("combined", True): self._deliver_combined_ov,
+        }[(self.exchange, bool(overlap))]
 
         def init_stats():
             return {"messages": jnp.int32(0), "words": jnp.float32(0.0)}
@@ -521,6 +575,56 @@ class ShardEngine:
         acc, got, carry, n_msgs = self._consume(d, pf, af)
         return acc, got, carry, {"n_msgs": n_msgs, "words": words}
 
+    def _combine2(self, a, b):  # analysis: traced
+        """Two-operand fold of the kernel's combiner monoid."""
+        k = self.kernel
+        if k.combiner == "add":
+            return a + b
+        return jnp.minimum(a, b) if k.combiner == "min" else jnp.maximum(a, b)
+
+    def _merge_carry(self, ckey, ccar, acc_q, car_q):  # analysis: traced
+        """Lexicographic fold of (key, carry) candidates — the two-level
+        winner select the ring, and the windowed overlapped folds, use to
+        keep SSSP's carried parent bit-identical to the one-shot fold."""
+        k = self.kernel
+        if k.combiner == "min":
+            better = acc_q < ckey
+        else:
+            better = acc_q > ckey
+        equal = acc_q == ckey
+        ccar = jnp.where(better, car_q,
+                         jnp.where(equal, jnp.minimum(ccar, car_q), ccar))
+        return self._combine2(ckey, acc_q), ccar
+
+    def _ring_bucket_consume(self, d, q, chunk_payload,  # analysis: traced
+                             chunk_active):
+        """Scatter+gather the edges whose SOURCE shard is q against the
+        chunk of q's updates currently held."""
+        k, m = self.kernel, self.meta
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+        b_src = d.rb_src_local[q]
+        vals = jnp.take(chunk_payload, b_src)
+        act = jnp.take(chunk_active, b_src) & d.rb_valid[q]
+        msg = k.scatter(vals, d.rb_w[q], d.rb_src_gid[q],
+                        d.rb_src_outdeg[q])
+        masked = jnp.where(act, msg, ident)
+        seg = d.rb_dst_local[q]
+        acc_q = kref.segment_combine(masked, seg, m.v_max, k.combiner)
+        gv = kref.segment_combine(
+            jnp.where(act, 1, 0).astype(jnp.int32), seg, m.v_max, "max")
+        car_q = None
+        if k.carry_dtype is not None:
+            cident = kops.identity_for("min", k.carry_dtype)
+            cvals = k.scatter_carry(vals, d.rb_w[q], d.rb_src_gid[q],
+                                    d.rb_src_outdeg[q])
+            acc_pad = jnp.concatenate(
+                [acc_q, jnp.full((1,), ident, acc_q.dtype)])
+            win = act & (masked == jnp.take(acc_pad,
+                                            jnp.minimum(seg, m.v_max)))
+            car_q = kref.segment_combine(
+                jnp.where(win, cvals, cident), seg, m.v_max, "min")
+        return acc_q, gv > 0, car_q, jnp.sum(act.astype(jnp.int32))
+
     def _deliver_ring(self, d, payload, active):  # analysis: traced
         """P-hop ppermute ring; each arriving chunk is consumed against the
         matching source-shard edge bucket while the next hop is in flight
@@ -531,48 +635,9 @@ class ShardEngine:
         cident = (kops.identity_for("min", k.carry_dtype)
                   if k.carry_dtype is not None else None)
         perm = [(i, (i + 1) % m.P) for i in range(m.P)]
-
-        def combine(a, b):
-            if k.combiner == "add":
-                return a + b
-            return jnp.minimum(a, b) if k.combiner == "min" else jnp.maximum(a, b)
-
-        def bucket_consume(q, chunk_payload, chunk_active):
-            """Scatter+gather the edges whose SOURCE shard is q against the
-            chunk of q's updates currently held."""
-            b_src = d.rb_src_local[q]
-            vals = jnp.take(chunk_payload, b_src)
-            act = jnp.take(chunk_active, b_src) & d.rb_valid[q]
-            msg = k.scatter(vals, d.rb_w[q], d.rb_src_gid[q],
-                            d.rb_src_outdeg[q])
-            masked = jnp.where(act, msg, ident)
-            seg = d.rb_dst_local[q]
-            acc_q = kref.segment_combine(masked, seg, m.v_max, k.combiner)
-            gv = kref.segment_combine(
-                jnp.where(act, 1, 0).astype(jnp.int32), seg, m.v_max, "max")
-            car_q = None
-            if k.carry_dtype is not None:
-                cvals = k.scatter_carry(vals, d.rb_w[q], d.rb_src_gid[q],
-                                        d.rb_src_outdeg[q])
-                acc_pad = jnp.concatenate(
-                    [acc_q, jnp.full((1,), ident, acc_q.dtype)])
-                win = act & (masked == jnp.take(acc_pad,
-                                                jnp.minimum(seg, m.v_max)))
-                car_q = kref.segment_combine(
-                    jnp.where(win, cvals, cident), seg, m.v_max, "min")
-            return acc_q, gv > 0, car_q, jnp.sum(act.astype(jnp.int32))
-
-        def merge_carry(ckey, ccar, acc_q, car_q):
-            """Lexicographic fold of (key, carry) candidates."""
-            if k.combiner == "min":
-                better = acc_q < ckey
-            else:
-                better = acc_q > ckey
-            equal = acc_q == ckey
-            ccar = jnp.where(better, car_q,
-                             jnp.where(equal, jnp.minimum(ccar, car_q), ccar))
-            ckey = combine(ckey, acc_q)
-            return ckey, ccar
+        bucket_consume = lambda q, p, a: self._ring_bucket_consume(d, q, p, a)  # noqa: E731
+        merge_carry = self._merge_carry
+        combine = self._combine2
 
         def body(i, st):
             acc, got, n_msgs, chunk_p, chunk_a, ccar = st
@@ -705,6 +770,302 @@ class ShardEngine:
         words = jnp.float32(2 * R * (m.P - 1))
         return acc, got, carry, {"n_msgs": n_msgs, "words": words}
 
+    # ---------------- overlapped (pipelined) exchanges ------------------
+    # Window count for the chunked all_to_all pipelines. Static (it fixes
+    # the traced loop bounds); the *index* of the in-flight window is a
+    # fori_loop carry — see RTR005.
+    OVERLAP_WINDOWS = 4
+
+    def _n_windows(self, extent: int) -> int:
+        return max(1, min(self.OVERLAP_WINDOWS, int(extent)))
+
+    def _deliver_allgather_ov(self, d, payload, active):  # analysis: traced
+        """Pipelined allgather: the broadcast decomposed into P ppermute
+        hops that accumulate into the SAME flat receive array all_gather
+        would produce, each chunk placed while the next hop is already in
+        flight; one receiver-side consume then runs, so states, message
+        counts and wire words are bit-identical to the one-shot gather."""
+        m = self.meta
+        me = jax.lax.axis_index(AXIS)
+        perm = [(i, (i + 1) % m.P) for i in range(m.P)]
+
+        def body(i, st):
+            upd, actf, cur_p, cur_a, nxt_p, nxt_a = st
+            # hop i+2's transport first: the in-flight buffer moves on
+            # while chunk i is being placed (double buffer)
+            new_p = jax.lax.ppermute(nxt_p, AXIS, perm)
+            new_a = jax.lax.ppermute(nxt_a, AXIS, perm)
+            q = (me - i) % m.P
+            upd = jax.lax.dynamic_update_slice(upd, cur_p, (q * m.v_max,))
+            actf = jax.lax.dynamic_update_slice(actf, cur_a, (q * m.v_max,))
+            return upd, actf, nxt_p, nxt_a, new_p, new_a
+
+        st = (jnp.zeros((m.P * m.v_max,), payload.dtype),
+              jnp.zeros((m.P * m.v_max,), jnp.bool_),
+              payload, active,
+              jax.lax.ppermute(payload, AXIS, perm),
+              jax.lax.ppermute(active, AXIS, perm))
+        upd, actf = jax.lax.fori_loop(0, m.P, body, st)[:2]
+        words = jnp.float32(m.v_max * (m.P - 1))
+        acc, got, carry, n_msgs = self._consume(d, upd, actf)
+        return acc, got, carry, {"n_msgs": n_msgs, "words": words}
+
+    def _deliver_frontier_ov(self, d, payload, active):  # analysis: traced
+        """Pipelined frontier: same capacity-bucket compaction as the
+        synchronous schedule, but the compact (id, payload, valid) buffer
+        rings around in P ppermute hops, each arriving chunk scatter-set
+        into the flat receive arrays while the next hop is in flight.
+        Slot owners are unique, so the set order cannot change a bit."""
+        k, m = self.kernel, self.meta
+        me = jax.lax.axis_index(AXIS)
+        n_act = jnp.sum(active.astype(jnp.int32))
+        n_max = jax.lax.pmax(n_act, AXIS)
+        caps = m.frontier_capacities
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+        perm = [(i, (i + 1) % m.P) for i in range(m.P)]
+
+        (idx,) = jnp.nonzero(active, size=m.v_max, fill_value=m.v_max)
+        drop = m.P * m.v_max  # out-of-bounds target -> dropped by scatter
+
+        def branch(cap):
+            def f(_):
+                ids = idx[:cap]                    # local active vertex ids
+                valid = ids < m.v_max
+                safe = jnp.minimum(ids, m.v_max - 1)
+                pay = jnp.take(payload, safe)
+                slots = me * m.v_max + safe
+
+                def body(i, st):
+                    pf, af, cs, cp, cv, ns, np_, nv = st
+                    ms = jax.lax.ppermute(ns, AXIS, perm)
+                    mp = jax.lax.ppermute(np_, AXIS, perm)
+                    mv = jax.lax.ppermute(nv, AXIS, perm)
+                    tgt = jnp.where(cv, cs, drop)
+                    pf = pf.at[tgt].set(cp, mode="drop")
+                    af = af.at[tgt].set(True, mode="drop")
+                    return pf, af, ns, np_, nv, ms, mp, mv
+
+                st = (jnp.full((m.P * m.v_max,), ident, pay.dtype),
+                      jnp.zeros((m.P * m.v_max,), jnp.bool_),
+                      slots, pay, valid,
+                      jax.lax.ppermute(slots, AXIS, perm),
+                      jax.lax.ppermute(pay, AXIS, perm),
+                      jax.lax.ppermute(valid, AXIS, perm))
+                pf, af = jax.lax.fori_loop(0, m.P, body, st)[:2]
+                # wire words actually moved: identical to the sync path
+                words = jnp.float32(cap * 2 * (m.P - 1))
+                return pf, af, words
+            return f
+
+        sel = jnp.searchsorted(jnp.asarray(caps), n_max)
+        sel = jnp.minimum(sel, len(caps) - 1)
+        pf, af, words = jax.lax.switch(sel, [branch(c) for c in caps],
+                                       operand=None)
+        acc, got, carry, n_msgs = self._consume(d, pf, af)
+        return acc, got, carry, {"n_msgs": n_msgs, "words": words}
+
+    def _deliver_ring_ov(self, d, payload, active):  # analysis: traced
+        """Double-buffered ring: hop k+1's ppermute is issued BEFORE chunk
+        k's bucket consume (the sync ring permutes after). Consume and
+        merge order are unchanged, so the fold is bit-identical."""
+        k, m = self.kernel, self.meta
+        me = jax.lax.axis_index(AXIS)
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+        cident = (kops.identity_for("min", k.carry_dtype)
+                  if k.carry_dtype is not None else None)
+        perm = [(i, (i + 1) % m.P) for i in range(m.P)]
+
+        def body(i, st):
+            acc, got, n_msgs, cur_p, cur_a, nxt_p, nxt_a, ccar = st
+            # issue hop i+2's transport before touching chunk i
+            new_p = jax.lax.ppermute(nxt_p, AXIS, perm)
+            new_a = jax.lax.ppermute(nxt_a, AXIS, perm)
+            q = (me - i) % m.P
+            acc_q, got_q, car_q, nm = self._ring_bucket_consume(
+                d, q, cur_p, cur_a)
+            if k.carry_dtype is not None:
+                acc, ccar = self._merge_carry(acc, ccar, acc_q, car_q)
+            else:
+                acc = self._combine2(acc, acc_q)
+            got = got | got_q
+            n_msgs = n_msgs + nm
+            return acc, got, n_msgs, nxt_p, nxt_a, new_p, new_a, ccar
+
+        acc0 = jnp.full((m.v_max,), ident, k.msg_dtype)
+        got0 = jnp.zeros((m.v_max,), bool)
+        ccar0 = (jnp.full((m.v_max,), cident, k.carry_dtype)
+                 if k.carry_dtype is not None else jnp.int32(0))
+        st = (acc0, got0, jnp.int32(0), payload, active,
+              jax.lax.ppermute(payload, AXIS, perm),
+              jax.lax.ppermute(active, AXIS, perm), ccar0)
+        st = jax.lax.fori_loop(0, m.P, body, st)
+        acc, got, n_msgs = st[0], st[1], st[2]
+        ccar = st[7]
+        carry = ccar if k.carry_dtype is not None else None
+        words = jnp.float32(m.v_max * (m.P - 1))
+        return acc, got, carry, {"n_msgs": n_msgs, "words": words}
+
+    def _window_pipeline(self, seg3, masked3, act3, c3,  # analysis: traced
+                         n_win, ident, cident):
+        """Chunked all_to_all pipeline shared by the overlapped unicast
+        and combined exchanges: the collective for column window k+1 is
+        issued while window k's receive block (the double buffer riding
+        the fori_loop carry) is folded into the accumulator. Per-window
+        partials merge lexicographically (``_merge_carry``), which is
+        exact for min/max combiners. ``act3 is None`` elides the activity
+        stream for got_from_identity kernels (activity is recovered as
+        ``recv != identity``); ``c3 is None`` elides the carry stream."""
+        k, m = self.kernel, self.meta
+        dummy = jnp.int32(0)
+
+        def a2a(x):
+            return jax.lax.all_to_all(x, AXIS, split_axis=0,
+                                      concat_axis=0, tiled=False)
+
+        def issue(wi):
+            wi = jnp.minimum(wi, n_win - 1)
+            bp = a2a(jax.lax.dynamic_index_in_dim(
+                masked3, wi, 1, keepdims=False))
+            ba = (a2a(jax.lax.dynamic_index_in_dim(
+                act3, wi, 1, keepdims=False))
+                if act3 is not None else dummy)
+            bc = (a2a(jax.lax.dynamic_index_in_dim(
+                c3, wi, 1, keepdims=False))
+                if c3 is not None else dummy)
+            return bp, ba, bc
+
+        def fold(wi, acc, got, ccar, bp, ba, bc):
+            seg_w = jax.lax.dynamic_index_in_dim(
+                seg3, wi, 1, keepdims=False).reshape(-1)
+            recv = bp.reshape(-1)
+            acc_w = kref.segment_combine(recv, seg_w, m.v_max, k.combiner)
+            if act3 is not None:
+                ract = ba.reshape(-1)
+                gv = kref.segment_combine(
+                    jnp.where(ract, 1, 0).astype(jnp.int32), seg_w,
+                    m.v_max, "max")
+                got = got | (gv > 0)
+            else:
+                ract = recv != ident
+            if c3 is not None:
+                acc_w_pad = jnp.concatenate(
+                    [acc_w, jnp.full((1,), ident, acc_w.dtype)])
+                win_w = ract & (recv == jnp.take(
+                    acc_w_pad, jnp.minimum(seg_w, m.v_max)))
+                car_w = kref.segment_combine(
+                    jnp.where(win_w, bc.reshape(-1), cident), seg_w,
+                    m.v_max, "min")
+                acc, ccar = self._merge_carry(acc, ccar, acc_w, car_w)
+            else:
+                acc = self._combine2(acc, acc_w)
+            return acc, got, ccar
+
+        def body(w, st):
+            acc, got, ccar, bp, ba, bc = st
+            nb = issue(w + 1)     # window w+1's collective in flight...
+            acc, got, ccar = fold(w, acc, got, ccar, bp, ba, bc)  # ...now
+            return (acc, got, ccar) + nb
+
+        acc0 = jnp.full((m.v_max,), ident, k.msg_dtype)
+        got0 = jnp.zeros((m.v_max,), bool)
+        ccar0 = (jnp.full((m.v_max,), cident, k.carry_dtype)
+                 if c3 is not None else dummy)
+        st = jax.lax.fori_loop(
+            0, n_win - 1, body, (acc0, got0, ccar0) + issue(jnp.int32(0)))
+        acc, got, ccar = fold(jnp.int32(n_win - 1), *st)
+        if act3 is None:
+            got = acc != ident
+        carry = ccar if c3 is not None else None
+        return acc, got, carry
+
+    def _window3(self, a, n_win, cw, fill):  # analysis: traced
+        """(P, E) -> (P, n_win, cw) column windows, identity-padded."""
+        m = self.meta
+        pad = n_win * cw - a.shape[-1]
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad)), constant_values=fill)
+        return a.reshape(m.P, n_win, cw)
+
+    def _deliver_unicast_ov(self, d, payload, active):  # analysis: traced
+        """Overlapped GraVF baseline: the per-pair message blocks cross
+        the wire in column windows, the collective for window k+1 in
+        flight while window k folds at the receiver."""
+        k, m = self.kernel, self.meta
+        vals = jnp.take(payload, d.pair_src_local.reshape(-1)).reshape(
+            d.pair_src_local.shape)
+        act = jnp.take(active, d.pair_src_local.reshape(-1)).reshape(
+            d.pair_src_local.shape) & d.pair_valid
+        msg = k.scatter(vals, d.pair_w, d.pair_src_gid, d.pair_src_outdeg)
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+        masked = jnp.where(act, msg, ident)
+        has_carry = k.carry_dtype is not None
+        cident = (kops.identity_for("min", k.carry_dtype)
+                  if has_carry else None)
+        n_win = self._n_windows(m.e_pair_max)
+        cw = -(-m.e_pair_max // n_win)
+        masked3 = self._window3(masked, n_win, cw, ident)
+        seg3 = self._window3(d.recv_dst_local, n_win, cw, m.v_max)
+        act3 = (None if k.got_from_identity
+                else self._window3(act, n_win, cw, False))
+        c3 = None
+        if has_carry:
+            cvals = k.scatter_carry(vals, d.pair_w, d.pair_src_gid,
+                                    d.pair_src_outdeg)
+            c3 = self._window3(jnp.where(act, cvals, cident), n_win, cw,
+                               cident)
+        acc, got, carry = self._window_pipeline(
+            seg3, masked3, act3, c3, n_win, ident, cident)
+        n_msgs = jnp.sum(act.astype(jnp.int32))
+        # reported wire: the bytes the serial schedule moves (see module
+        # docstring) — keeps stats comparable across schedules
+        words = jnp.float32(m.e_pair_max * (m.P - 1))
+        return acc, got, carry, {"n_msgs": n_msgs, "words": words}
+
+    def _deliver_combined_ov(self, d, payload, active):  # analysis: traced
+        """Overlapped combine-at-source: the per-(peer, rank) partial
+        blocks cross the wire in column windows behind the receiver fold;
+        the source-side segment-combine is the synchronous one."""
+        k, m = self.kernel, self.meta
+        R = m.comb_max
+        n_seg = m.P * (R + 1)
+        vals = jnp.take(payload, d.comb_src_local)
+        act = jnp.take(active, d.comb_src_local) & d.comb_valid
+        msg = k.scatter(vals, d.comb_w, d.comb_src_gid, d.comb_src_outdeg)
+        ident = kops.identity_for(k.combiner, k.msg_dtype)
+        masked = jnp.where(act, msg, ident)
+        accs = self._comb_combine(masked, d, k.combiner)       # (n_seg,)
+        send = accs.reshape(m.P, R + 1)[:, :R]                 # (P, R)
+        has_carry = k.carry_dtype is not None
+        cident = (kops.identity_for("min", k.carry_dtype)
+                  if has_carry else None)
+        n_win = self._n_windows(R)
+        cw = -(-R // n_win) if R else 0
+        masked3 = self._window3(send, n_win, cw, ident)
+        seg3 = self._window3(d.comb_recv_dst_local, n_win, cw, m.v_max)
+        act3 = None
+        if not k.got_from_identity:
+            send_act = self._comb_combine(
+                jnp.where(act, 1, 0).astype(jnp.int32), d, "max"
+            ).reshape(m.P, R + 1)[:, :R] > 0
+            act3 = self._window3(send_act, n_win, cw, False)
+        c3 = None
+        if has_carry:
+            cvals = k.scatter_carry(vals, d.comb_w, d.comb_src_gid,
+                                    d.comb_src_outdeg)
+            accs_pad = jnp.concatenate(
+                [accs, jnp.full((1,), ident, accs.dtype)])
+            win = act & (masked == jnp.take(
+                accs_pad, jnp.minimum(d.comb_seg, n_seg)))
+            csend = self._comb_combine(
+                jnp.where(win, cvals, cident), d, "min"
+            ).reshape(m.P, R + 1)[:, :R]
+            c3 = self._window3(csend, n_win, cw, cident)
+        acc, got, carry = self._window_pipeline(
+            seg3, masked3, act3, c3, n_win, ident, cident)
+        n_msgs = jnp.sum(act.astype(jnp.int32))
+        words = jnp.float32(2 * R * (m.P - 1))
+        return acc, got, carry, {"n_msgs": n_msgs, "words": words}
+
     # ---------------- superstep + loop ---------------------------------
     def _shard_step(self, d: ShardData, payload, active, state, superstep):
         """One superstep as a plain function (kept for the dry-run /
@@ -714,11 +1075,12 @@ class ShardEngine:
         return (c.state, c.payload, c.active, c.stats["messages"],
                 c.stats["words"])
 
-    def _make_run(self, cap: int, qkeys: tuple = ()):
-        ck = ("single", cap, qkeys)
+    def _make_run(self, cap: int, qkeys: tuple = (),
+                  overlap: bool = False):
+        ck = ("single", cap, qkeys, bool(overlap))
         if ck in self._run_cache:
             return self._run_cache[ck]
-        prog = self._prog
+        prog = self._prog_for(overlap)
 
         def shard_fn(d: ShardData, qkw):
             self.traces += 1  # trace-time side effect (see Engine.traces)
@@ -744,15 +1106,16 @@ class ShardEngine:
         self._run_cache[ck] = fn
         return fn
 
-    def _make_run_batch(self, cap: int, qkeys: tuple):
+    def _make_run_batch(self, cap: int, qkeys: tuple,
+                        overlap: bool = False):
         """Query-batched shard_map program: the per-superstep exchange is
         shared by all B queries (one collective moves the (B, ·) payload);
         finished queries are frozen lane-wise so state/stats stay
         bit-identical to B sequential runs."""
-        ck = ("batch", cap, qkeys)
+        ck = ("batch", cap, qkeys, bool(overlap))
         if ck in self._run_cache:
             return self._run_cache[ck]
-        prog = self._prog
+        prog = self._prog_for(overlap)
 
         def shard_fn(d: ShardData, qkw):
             self.traces += 1  # trace-time side effect
@@ -805,10 +1168,13 @@ class ShardEngine:
                 "exchange": self.exchange,
                 "scheme": f"shard_{self.exchange}"}
 
-    def run(self, max_supersteps: Optional[int] = None, **query_kwargs):
+    def run(self, max_supersteps: Optional[int] = None,
+            overlap: bool = False, **query_kwargs):
         """Single query (an :class:`~.engine.EngineResult`; also indexable
         like the historical result dict). ``query_kwargs`` (e.g.
-        ``root=7``) are traced scalars, matching ``Engine.run``."""
+        ``root=7``) are traced scalars, matching ``Engine.run``.
+        ``overlap=True`` runs the pipelined exchange schedule
+        (bit-identical results; see the module docstring)."""
         unknown = set(query_kwargs) - set(self.kernel.query_params)
         if unknown:
             raise ValueError(
@@ -817,7 +1183,7 @@ class ShardEngine:
                 f"{sorted(unknown)}")
         cap = (max_supersteps or self.kernel.max_supersteps or 100_000)
         qkw = {kk: jnp.asarray(v) for kk, v in query_kwargs.items()}
-        fn = self._make_run(cap, tuple(sorted(qkw)))
+        fn = self._make_run(cap, tuple(sorted(qkw)), overlap)
         state, s, msgs, words = fn(self._data, qkw)
         from .engine import EngineResult, collect
         state_np = jax.tree.map(np.asarray, state)
@@ -831,7 +1197,7 @@ class ShardEngine:
         )
 
     def run_batch(self, max_supersteps: Optional[int] = None,
-                  **query_arrays):
+                  overlap: bool = False, **query_arrays):
         """Batched multi-query run (see ``Engine.run_batch``). Returns a
         list of per-query result dicts; ``exchange_words`` is reported for
         the whole batch on each entry (the queries share the wire)."""
@@ -846,7 +1212,7 @@ class ShardEngine:
         cap = (max_supersteps or self.kernel.max_supersteps or 100_000)
         qkw = {kk: jnp.atleast_1d(jnp.asarray(v))
                for kk, v in query_arrays.items()}
-        fn = self._make_run_batch(cap, tuple(sorted(qkw)))
+        fn = self._make_run_batch(cap, tuple(sorted(qkw)), overlap)
         state, sq, msgs, words = fn(self._data, qkw)
         from .engine import EngineResult, collect
         state_np = jax.tree.map(np.asarray, state)   # leaves (P, B, ...)
@@ -904,17 +1270,22 @@ class ShardEngine:
         return time.perf_counter() - t0
 
     # ---------------- step-granular entry point ------------------------
-    def make_stepper(self, width: int) -> "ShardLaneStepper":
+    def make_stepper(self, width: int,
+                     overlap: bool = False) -> "ShardLaneStepper":
         """Host-drivable ``width``-lane slot array over the explicit
         collectives (see ``Engine.make_stepper``): one jitted shard_map
-        call per superstep, with admit/retire between supersteps."""
+        call per superstep, with admit/retire between supersteps.
+        Steppers are cached per (width, overlap) — both schedules share
+        this engine's device data, so toggling ``overlap`` per request
+        hits an already-traced plan (zero steady-state re-traces)."""
         if self._data is None:
             raise ValueError("make_stepper needs device data; this engine "
                              "was built meta-only (dry-run)")
-        st = self._steppers.get(width)
+        key = (width, bool(overlap))
+        st = self._steppers.get(key)
         if st is None:
-            st = ShardLaneStepper(self, width)
-            self._steppers[width] = st
+            st = ShardLaneStepper(self, width, overlap=bool(overlap))
+            self._steppers[key] = st
         return st
 
     def lane_result(self, carry_host, lane: int):
@@ -958,11 +1329,15 @@ class ShardLaneStepper(LaneStepperBase):
     reused forever: steady-state admit/step/retire re-traces nothing.
     """
 
-    def __init__(self, eng: ShardEngine, width: int):
+    def __init__(self, eng: ShardEngine, width: int,
+                 overlap: bool = False):
         self.eng = eng
         self.width = width
+        self.overlap = bool(overlap)
+        self._prog = eng._prog_for(self.overlap)
         self._fns = None  # (init, admit, step) jitted shard_map programs
         self._restore = None   # built with the other programs
+        self._exchange_serial_p = None  # profile-only serial reference
         self._probe = jax.jit(self._probe_of)
 
         def fetch_lane_fn(carry, lane):
@@ -985,7 +1360,7 @@ class ShardLaneStepper(LaneStepperBase):
                 jnp.sum(carry.stats["words"]))
 
     def _build(self, qkw):
-        eng, prog = self.eng, self.eng._prog
+        eng, prog = self.eng, self._prog
         data_spec = jax.tree.map(lambda _: P(AXIS), eng._data,
                                  is_leaf=lambda x: x is None)
         qspec = {k: P() for k in qkw}
@@ -1082,6 +1457,24 @@ class ShardLaneStepper(LaneStepperBase):
                                         carry_spec, lane_spec),
                               out_specs=carry_spec)
 
+        # overlapped steppers keep a serial-schedule exchange reference
+        # for the phase profiler: timing it on the same carry (output
+        # unused — the schedules are bit-identical) yields the
+        # total-exchange-time denominator of overlap_efficiency. Only
+        # ever dispatched in profile mode, off the serving hot path.
+        if self.overlap:
+            sprog = eng._prog_for(False)
+
+            def exchange_serial_fn(d, carry):
+                eng.traces += 1
+                d, c = strip(d), strip(carry)
+                return readd(jax.vmap(
+                    lambda cc: sprog.step_exchange(d, cc))(c))
+
+            self._exchange_serial_p = jax.jit(_shard_map(
+                exchange_serial_fn, mesh=eng.mesh,
+                in_specs=(data_spec, carry_spec), out_specs=carry_spec))
+
         # fuse the lane probe into the same dispatch (see LaneStepper)
         def with_probe(sm):
             def f(*args):
@@ -1119,6 +1512,13 @@ class ShardLaneStepper(LaneStepperBase):
         the fused program, bit-identical results)."""
         d, alive_dev = self.eng._data, jnp.asarray(alive)
         phases = {}
+        if self._exchange_serial_p is not None:
+            # total-exchange-time reference: the serial schedule on the
+            # same carry (bit-identical output, discarded)
+            t = time.perf_counter()
+            ser = self._exchange_serial_p(d, carry)
+            jax.block_until_ready(ser)
+            phases["exchange_serial"] = time.perf_counter() - t
         t = time.perf_counter()
         mid = self._exchange_p(d, carry)
         jax.block_until_ready(mid)

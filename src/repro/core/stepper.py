@@ -42,7 +42,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, NamedTuple, Optional
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -442,6 +443,10 @@ class LaneMeta:
     credit_s: float = 0.0
     parks: int = 0
     seq: int = 0
+    # depth-prediction bucket label ("d<decile>" of the root's degree,
+    # or None): which per-bucket depth EWMA predicted_depth came from —
+    # retirement scores the observation back into the same bucket
+    depth_bucket: Optional[str] = None
 
     def effective_deadline(self) -> float:
         """Scalar urgency (smaller = more urgent): the deadline minus
@@ -500,12 +505,17 @@ class LaneTable:
     """
 
     def __init__(self, stepper, width: int, query_params, *,
-                 trace=None, label: Optional[str] = None):
+                 trace=None, label: Optional[str] = None,
+                 devices: Tuple[str, ...] = ()):
         self.stepper = stepper
         self.width = width
         self.query_params = tuple(query_params)
         self.trace = trace
         self.label = label
+        # mesh device attribution for superstep events (shard steppers
+        # dispatch to every device of their 1-D graph mesh; () for
+        # single-device tables keeps those events unchanged)
+        self.devices = tuple(devices)
         self.meta: List[Optional[LaneMeta]] = [None] * width
         self.carry = None
         self.act: Optional[np.ndarray] = None    # (W,) lane-alive probe
@@ -596,7 +606,7 @@ class LaneTable:
             self.carry, self.act, self.steps = self.stepper.admit(
                 self.carry, self._qkw, fresh)
 
-    def step(self, alive: np.ndarray) -> None:
+    def step(self, alive: np.ndarray) -> None:  # analysis: host
         if self.trace is None:
             self.carry, self.act, self.steps = self.stepper.step(
                 self.carry, alive)
@@ -619,6 +629,10 @@ class LaneTable:
             # wall split rides the event (Perfetto args pane / L_* term
             # comparison against perfmodel.phase_projection)
             extra["phase"] = dict(ph)
+        if self.devices:
+            # per-device attribution: the mesh devices this dispatch
+            # fanned out to (single-device tables omit the column)
+            extra["devices"] = list(self.devices)
         self.trace.emit("superstep", klass=self.label,
                         ts=t0, dur_s=time.perf_counter() - t0,
                         lanes=lanes, n_alive=len(lanes),

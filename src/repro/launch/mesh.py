@@ -16,7 +16,7 @@ import jax
 from jax.sharding import Mesh
 
 __all__ = ["make_production_mesh", "make_graph_mesh", "make_local_mesh",
-           "compat_make_mesh"]
+           "make_serving_mesh", "compat_make_mesh"]
 
 
 def compat_make_mesh(shape, axes) -> Mesh:
@@ -46,3 +46,23 @@ def make_local_mesh(axes=("graph",)) -> Mesh:
     """Whatever devices exist locally (tests / reduced runs)."""
     n = len(jax.devices())
     return compat_make_mesh((n,), axes)
+
+
+def make_serving_mesh(num_shards: int) -> Mesh:
+    """The service's explicit 1-D graph mesh: ``num_shards`` devices on
+    the ``"graph"`` axis, one partition per device. Requires at least
+    ``num_shards`` visible devices (real accelerators, or host-platform
+    devices via ``--xla_force_host_platform_device_count=N`` set before
+    jax's first backend init) — shard classes are a multi-device
+    feature, and failing loudly here beats shard_map's late error."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    have = len(jax.devices())
+    if have < num_shards:
+        raise RuntimeError(
+            f"serving mesh wants {num_shards} devices on the 'graph' "
+            f"axis but only {have} are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_shards} "
+            "before importing jax (or run on a platform with enough "
+            "devices)")
+    return compat_make_mesh((num_shards,), ("graph",))

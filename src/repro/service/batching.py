@@ -66,6 +66,7 @@ class QueryRequest:
     tenant: str = "default"
     priority: int = 0
     exchange: str = ""   # shard exchange schedule ("" = service default)
+    overlap: bool = False  # pipelined exchange schedule (shard classes)
     qid: int = dataclasses.field(default_factory=lambda: next(_qid_counter))
     arrival_s: float = dataclasses.field(default_factory=time.perf_counter)
 
@@ -88,13 +89,20 @@ class QueryClass:
     backend: str
     version: int = 0
     exchange: str = ""   # "" = single-host Engine; else a ShardEngine mode
+    # overlapped (pipelined) exchange schedule: a plan dimension like
+    # ``exchange`` — overlapped and synchronous requests trace distinct
+    # steppers but share one engine (and its device-resident graph), so
+    # the toggle is free at steady state. Meaningful only for shard
+    # classes (``exchange`` set); normalized off otherwise.
+    overlap: bool = False
 
     @classmethod
     def of(cls, req: QueryRequest, num_shards: int,
            backend: str, version: int = 0,
-           exchange: str = "") -> "QueryClass":
+           exchange: str = "", overlap: bool = False) -> "QueryClass":
+        ex = req.exchange or exchange
         return cls(req.graph_id, req.kernel, req.mode, num_shards, backend,
-                   version, req.exchange or exchange)
+                   version, ex, bool((req.overlap or overlap) and ex))
 
 
 class Batcher:

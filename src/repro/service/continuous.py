@@ -75,11 +75,17 @@ __all__ = ["ContinuousScheduler", "ParkedQueue", "class_key"]
 
 
 def class_key(qclass: QueryClass) -> str:
-    """Stable string key for per-class cost-model stats."""
+    """Stable string key for per-class cost-model stats. Overlapped
+    shard classes get a ``~ov`` suffix: the pipelined schedule has a
+    different superstep cost structure (exchange off the critical
+    path), so sharing EWMAs/roofline accumulators with the synchronous
+    schedule would blur both."""
     base = (f"{qclass.graph_id}@v{qclass.version}/"
             f"{qclass.kernel}/{qclass.mode}")
     if getattr(qclass, "exchange", ""):
         base += f"+{qclass.exchange}"
+        if getattr(qclass, "overlap", False):
+            base += "~ov"
     return base
 
 
@@ -161,8 +167,15 @@ class _ClassRun:
         self.splan = splan
         self.cap = cap
         self.lease = lease                      # GraphLease or None
+        # per-device attribution for shard classes: the mesh devices
+        # every superstep dispatch runs on (() for single-device plans)
+        mesh = getattr(splan.engine, "mesh", None)
+        self.devices: tuple = (
+            tuple(str(d) for d in mesh.devices.flat)
+            if mesh is not None else ())
         self.table = LaneTable(splan.stepper, slots, splan.query_params,
-                               trace=trace, label=label)
+                               trace=trace, label=label,
+                               devices=self.devices)
         self.queues: "Dict[str, collections.deque]" = {}
         self.passes: Dict[str, float] = {}      # stride-scheduling state
         self.parked = parked
@@ -212,6 +225,8 @@ class ContinuousScheduler:
                  preempt_margin_s: float = 0.05,
                  park_charge: Callable[[int], bool] = None,
                  park_release: Callable[[int], None] = None,
+                 depth_bucket_of: Callable[
+                     [QueryClass, QueryRequest], Optional[str]] = None,
                  trace=None, metrics=None, profile: bool = False):
         assert slots >= 1
         self.slots = slots
@@ -239,14 +254,25 @@ class ContinuousScheduler:
         self._acquire = acquire or (lambda qclass: None)
         self._park_charge = park_charge
         self._park_release = park_release
+        # optional (qclass, request) -> depth-bucket label (e.g. the
+        # root's degree decile, "d0".."d9"); sharpens the admission
+        # predictor's depth EWMA per bucket. None = class-wide EWMA.
+        self._depth_bucket_of = depth_bucket_of
         self._classes: Dict[QueryClass, _ClassRun] = {}
         self._lock = threading.RLock()  # lock: scheduler
 
     # ---------------- admission ---------------------------------------
-    def _predict_depth(self, qclass: QueryClass) -> float:
+    def _predict_depth(self, qclass: QueryClass,
+                       bucket: Optional[str] = None) -> float:
         if self.stats is None:
             return 0.0
-        _, depth = self.stats.class_cost_model(class_key(qclass))
+        if bucket:
+            _, depth = self.stats.class_cost_model(class_key(qclass),
+                                                   bucket=bucket)
+        else:
+            # plain call keeps duck-typed stats without the bucket
+            # keyword working (no bucket to pass anyway)
+            _, depth = self.stats.class_cost_model(class_key(qclass))
         return float(depth) if depth is not None else 0.0
 
     def _depth_residual(self, qclass: QueryClass) -> float:
@@ -296,13 +322,16 @@ class ContinuousScheduler:
                 floor = min(active) if active else 0.0
                 cr.passes[req.tenant] = max(
                     cr.passes.get(req.tenant, 0.0), floor)
+            bucket = (self._depth_bucket_of(qclass, req)
+                      if self._depth_bucket_of is not None else None)
             meta = LaneMeta(
                 payload=(req, fut), qkw=dict(req.query_kwargs),
                 tenant=req.tenant,
                 priority=int(getattr(req, "priority", 0)),
                 deadline_s=req.deadline_s,
-                predicted_depth=self._predict_depth(qclass),
-                seq=int(getattr(req, "qid", 0)))
+                predicted_depth=self._predict_depth(qclass, bucket),
+                seq=int(getattr(req, "qid", 0)),
+                depth_bucket=bucket)
             q.append(meta)
             self._emit("queue", qid=meta.seq, tenant=req.tenant,
                        klass=class_key(qclass), priority=meta.priority,
@@ -448,18 +477,37 @@ class ContinuousScheduler:
                 # control on, shed the class forever) AND inflate
                 # busy_time_s, understating qps_busy/TEPS for the run
                 self.stats.record_compile(wall)
-        if self.metrics is not None and eng.traces == traces0:
-            # profiled mode: per-class phase histograms (compile walls
-            # excluded for the same reason as above)
+        if eng.traces == traces0:
+            ck = class_key(qclass)
+            # profiled mode: per-class phase histograms + exchange
+            # overlap accounting (compile walls excluded for the same
+            # reason as above)
             phases = getattr(cr.splan.stepper, "last_phases", None)
             if phases:
-                ck = class_key(qclass)
-                for phase, secs in phases.items():
-                    self.metrics.observe(
-                        "gravfm_superstep_phase_seconds", secs,
-                        help="Measured superstep wall split by phase "
-                             "(profiled mode)",
-                        **{"class": ck, "phase": phase})
+                if self.stats is not None and "exchange" in phases:
+                    # exposed = the serving schedule's exchange wall;
+                    # total = the serial-reference wall (profiled
+                    # overlapped steppers time both; synchronous ones
+                    # have no reference, so exposed == total -> 1.0)
+                    self.stats.record_exchange_overlap(
+                        ck, phases["exchange"],
+                        phases.get("exchange_serial", phases["exchange"]))
+                if self.metrics is not None:
+                    for phase, secs in phases.items():
+                        self.metrics.observe(
+                            "gravfm_superstep_phase_seconds", secs,
+                            help="Measured superstep wall split by phase "
+                                 "(profiled mode)",
+                            **{"class": ck, "phase": phase})
+            if self.metrics is not None and cr.devices:
+                # per-device attribution: every mesh device ran this
+                # superstep's shard_map dispatch
+                for dev in cr.devices:
+                    self.metrics.inc(
+                        "gravfm_device_supersteps_total", 1,
+                        help="Supersteps dispatched per mesh device "
+                             "(shard classes)",
+                        **{"class": ck, "device": dev})
         return retired
 
     # ---------------- queue selection ----------------------------------
@@ -721,8 +769,9 @@ class ContinuousScheduler:
                     class_key=class_key(qclass),
                     wire_words=float((getattr(res, "comm", None) or {})
                                      .get("wire_words", 0.0)))
-                self.stats.record_query_depth(class_key(qclass),
-                                              res.supersteps)
+                self.stats.record_query_depth(
+                    class_key(qclass), res.supersteps,
+                    bucket=getattr(meta, "depth_bucket", None))
                 if meta.predicted_depth > 0:
                     self.stats.record_depth_error(
                         class_key(qclass),

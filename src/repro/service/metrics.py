@@ -368,6 +368,13 @@ def feed_service_snapshot(reg: MetricsRegistry, snap: Dict[str, Any],
                         **{"class": ck})
         reg.set_gauge("gravfm_class_words_per_message",
                       r["words_per_message"], **{"class": ck})
+        if r.get("overlap_efficiency") is not None:
+            # exposed/total exchange wall (profiled shard classes):
+            # 1.0 = synchronous, -> 0 = exchange fully hidden
+            reg.set_gauge("gravfm_overlap_efficiency",
+                          float(r["overlap_efficiency"]),
+                          help="Exposed / total exchange time per class",
+                          **{"class": ck})
 
 
 # ---------------------------------------------------------------------------

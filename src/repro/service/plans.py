@@ -70,6 +70,11 @@ class PlanKey:
     exchange: str = ""   # "" = single-host Engine; else ShardEngine mode
                          # ("allgather"|"ring"|"frontier"|"unicast"|
                          #  "combined") over a num_shards-device mesh
+    overlap: bool = False  # pipelined exchange schedule (shard classes):
+                           # a stepper/plan dimension only — overlapped
+                           # and synchronous plans share one engine (the
+                           # engine cache key omits it), so toggling
+                           # costs one extra trace at warm, zero after
 
 
 class CompiledPlan:
@@ -91,17 +96,20 @@ class CompiledPlan:
         results in input order. ``max_supersteps`` is traced, so varying
         it costs no re-trace."""
         self.executions += 1
+        # overlap=True only ever reaches a ShardEngine: the key is
+        # normalized (overlap implies exchange) before the cache lookup
+        ov = {"overlap": True} if self.key.overlap else {}
         if self.key.batch_size == 1:
             scalars = {k: np.asarray(v).reshape(()) for k, v
                        in query_arrays.items()}
-            return [self.engine.run(max_supersteps, **scalars)]
+            return [self.engine.run(max_supersteps, **ov, **scalars)]
         for k, v in query_arrays.items():
             n = np.asarray(v).shape[0]
             if n != self.key.batch_size:
                 raise ValueError(
                     f"plan expects batch {self.key.batch_size}, got {n} "
                     f"for {k!r}")
-        return self.engine.run_batch(max_supersteps, **query_arrays)
+        return self.engine.run_batch(max_supersteps, **ov, **query_arrays)
 
     def warmup(self) -> "CompiledPlan":
         """Trace + compile now (first root of the graph) so the first real
@@ -200,13 +208,19 @@ class PlanCache:
     # ---------------- engines / plans ---------------------------------
     def resolve_key(self, key: PlanKey) -> PlanKey:
         """Pin ``version=0`` ("latest") to the store's current version so
-        cache entries are always keyed by a concrete published version."""
+        cache entries are always keyed by a concrete published version,
+        and normalize ``overlap`` off for non-shard classes (the plain
+        Engine has no exchange to pipeline)."""
+        if key.overlap and not key.exchange:
+            key = dataclasses.replace(key, overlap=False)
         if key.version:
             return key
         return dataclasses.replace(
             key, version=self.store.known_version(key.graph_id))
 
     def _engine_for(self, key: PlanKey, method: str) -> Engine:
+        # NOTE: ek deliberately omits key.overlap — both schedules of a
+        # class share one engine (and its device-resident graph arrays)
         ek = (key.graph_id, key.version, key.kernel, key.mode,
               key.num_shards, key.backend, key.exchange)
         eng = self._engines.get(ek)
@@ -218,8 +232,8 @@ class PlanCache:
                             version=key.version or None)
             if key.exchange:
                 from ..core.engine_shardmap import ShardEngine
-                from ..launch.mesh import compat_make_mesh
-                mesh = compat_make_mesh((key.num_shards,), ("graph",))
+                from ..launch.mesh import make_serving_mesh
+                mesh = make_serving_mesh(key.num_shards)
                 eng = ShardEngine(ALGORITHMS[key.kernel](), pg, mesh=mesh,
                                   exchange=key.exchange,
                                   backend=key.backend)
@@ -272,8 +286,12 @@ class PlanCache:
                 raise ValueError(
                     f"kernel {key.kernel!r} declares no query_params; "
                     "it cannot be continuously batched")
-            splan = StepperPlan(key, engine,
-                                engine.make_stepper(key.batch_size))
+            if key.exchange:
+                stepper = engine.make_stepper(key.batch_size,
+                                              overlap=key.overlap)
+            else:
+                stepper = engine.make_stepper(key.batch_size)
+            splan = StepperPlan(key, engine, stepper)
             self._steppers[key] = splan
         return splan
 

@@ -106,6 +106,8 @@ class GraphQueryService:
     def __init__(self, *, num_shards: int = 4, max_batch: int = 32,
                  backend: str = "ref", partition_method: str = "greedy",
                  exchange: str = "",
+                 overlap: bool = False,
+                 root_depth_buckets: bool = True,
                  slack_ms: float = 5.0,
                  scheduling: str = "bucketed",
                  slots: Optional[int] = None,
@@ -141,6 +143,18 @@ class GraphQueryService:
         # serve via a num_shards-device ShardEngine. A request's
         # ``exchange`` field overrides per query class.
         self.exchange = exchange
+        # default exchange pipelining: overlap the exchange collective
+        # with local scatter/combine (bit-identical; shard classes
+        # only). A request's ``overlap`` field opts in per query; both
+        # schedules of a class share one engine, so mixing them serves
+        # from the same device-resident graph with zero steady-state
+        # re-traces.
+        self.overlap = bool(overlap and exchange)
+        # per-root depth prediction: bucket the depth EWMA by the
+        # root's out-degree decile ("d0".."d9") so depth packing and
+        # victim selection see root-conditioned estimates
+        self.root_depth_buckets = root_depth_buckets
+        self._degree_deciles: Dict[Any, Any] = {}  # (gid, ver) -> (deg, cuts)
         self.scheduling = scheduling
         self.max_supersteps = max_supersteps
         self.result_cache_size = result_cache_size
@@ -199,6 +213,7 @@ class GraphQueryService:
                 depth_bucket_s=depth_bucket_s,
                 park_charge=self.store.reserve_parked,
                 park_release=self.store.release_parked,
+                depth_bucket_of=self._depth_bucket_of,
                 trace=self.trace, metrics=self.metrics,
                 profile=profile_phases)
         # Result cache PARTITIONED BY TENANT: each tenant gets its own
@@ -273,14 +288,19 @@ class GraphQueryService:
 
     def warm(self, graph_id: str, kernel: str, *, mode: str = "gravfm",
              batch_sizes: Optional[List[int]] = None,
-             exchange: Optional[str] = None) -> None:
+             exchange: Optional[str] = None,
+             overlap: Optional[bool] = None) -> None:
         """Pre-trace plans for a query class so first requests don't pay
         compile latency (steady-state serving then re-traces nothing).
         Defaults to EVERY bucket up to max_batch — deadline flushes
         dispatch partial batches, so intermediate buckets are hot paths
-        too."""
+        too. ``overlap`` warms that exchange schedule (default: the
+        service's); warm both to serve per-request toggling re-trace
+        free."""
         version = self.store.known_version(graph_id)
         exchange = self.exchange if exchange is None else exchange
+        overlap = bool((self.overlap if overlap is None else overlap)
+                       and exchange)
         kern = ALGORITHMS[kernel]() if kernel in ALGORITHMS else None
         if (self._continuous is not None and kern is not None
                 and kern.query_params):
@@ -288,7 +308,7 @@ class GraphQueryService:
             # per class; pre-trace its init/admit/step/probe programs
             splan = self._stepper_for(QueryClass(
                 graph_id, kernel, mode, self.num_shards, self.backend,
-                version, exchange))
+                version, exchange, overlap))
             qkw = {p: np.zeros((self._slots,), np.int32)
                    for p in splan.query_params}
             # profiled serving dispatches the phase programs instead of
@@ -315,7 +335,7 @@ class GraphQueryService:
         for b in sizes:
             self.plans.get_plan(
                 self._plan_key(graph_id, kernel, mode, b, version,
-                               exchange=exchange),
+                               exchange=exchange, overlap=overlap),
                 method=self.partition_method, warm=True)
         self.plans.sync_trace_counters()
 
@@ -347,7 +367,7 @@ class GraphQueryService:
         # already queued/in flight keeps draining on its bound version.
         version = self.store.known_version(req.graph_id)
         qclass = QueryClass.of(req, self.num_shards, self.backend, version,
-                               exchange=self.exchange)
+                               exchange=self.exchange, overlap=self.overlap)
         batchable = (bool(kernel.query_params) and self.max_batch > 1)
         self.stats.record_submit()
         self.stats.record_tenant(req.tenant, submitted=1)
@@ -404,7 +424,8 @@ class GraphQueryService:
             if lease.version != version:    # publish raced the checks
                 version = lease.version
                 qclass = QueryClass.of(req, self.num_shards, self.backend,
-                                       version, exchange=self.exchange)
+                                       version, exchange=self.exchange,
+                                       overlap=self.overlap)
             fut.add_done_callback(lambda _f: lease.release())
         # the class's graph/kernel/mode are now final (the lease rebind
         # above may have bumped the version) — remember them so the
@@ -536,6 +557,47 @@ class GraphQueryService:
         est_ms = step_ms * depth * waves
         return time.perf_counter() + est_ms / 1e3 > req.deadline_s
 
+    def _depth_bucket_of(self, qclass: QueryClass,
+                         req: QueryRequest) -> Optional[str]:
+        """Root-degree-decile label ("d0".."d9") for per-root depth
+        prediction: the query root's out-degree decile within its graph
+        version. High-degree roots reach the frontier's bulk in fewer
+        supersteps than leaf roots, so conditioning the depth EWMA on
+        the decile sharpens both depth packing and victim selection.
+        None (class-wide EWMA) for kernels without a root, unknown
+        graphs, or when disabled. Called under the scheduler lock;
+        host_graph takes the store lock below it (the declared
+        scheduler -> store order)."""
+        if not self.root_depth_buckets:
+            return None
+        root = req.query_kwargs.get("root")
+        if root is None:
+            return None
+        key = (qclass.graph_id, qclass.version)
+        entry = self._degree_deciles.get(key)
+        if entry is None:
+            try:
+                g = self.store.host_graph(qclass.graph_id,
+                                          qclass.version or None)
+            except (StoreError, KeyError, ValueError):
+                return None
+            deg = g.out_degrees()
+            # decile cut points over the degree distribution; a vertex's
+            # bucket is how many cuts its degree exceeds
+            cuts = np.quantile(deg, np.arange(1, 10) / 10.0)
+            # bounded: superseded versions' tables are dead weight
+            while len(self._degree_deciles) >= 64:
+                self._degree_deciles.pop(next(iter(self._degree_deciles)))
+            entry = self._degree_deciles[key] = (deg, cuts)
+        deg, cuts = entry
+        try:
+            r = int(np.asarray(root).item())
+        except (TypeError, ValueError):
+            return None
+        if not 0 <= r < deg.shape[0]:
+            return None
+        return f"d{int(np.searchsorted(cuts, deg[r], side='right'))}"
+
     def _acquire_class(self, qclass: QueryClass):
         """Pin ``qclass``'s graph version for the continuous scheduler —
         held from the class's first submit until its last lane retires.
@@ -550,7 +612,8 @@ class GraphQueryService:
             return self.plans.get_stepper(
                 self._plan_key(qclass.graph_id, qclass.kernel, qclass.mode,
                                self._slots, qclass.version,
-                               exchange=qclass.exchange),
+                               exchange=qclass.exchange,
+                               overlap=getattr(qclass, "overlap", False)),
                 method=self.partition_method)
 
     # ---------------- roofline projection ------------------------------
@@ -581,6 +644,10 @@ class GraphQueryService:
                     n_nodes=self.num_shards,
                     mode=qclass.mode,
                     exchange=qclass.exchange or None)
+                # overlapped-pipeline terms ride along: T_overlap is
+                # the ceiling the pipelined schedule serves against,
+                # T_serial the synchronous schedule's realistic limit
+                lim = {**lim, **perfmodel.overlapped_limits(lim)}
             except (StoreError, KeyError, ValueError):
                 lim = None
         self._limits_cache[ck] = lim
@@ -632,12 +699,14 @@ class GraphQueryService:
     # ---------------- dispatch ----------------------------------------
     def _plan_key(self, graph_id: str, kernel: str, mode: str,
                   batch_size: int, version: int = 0,
-                  exchange: Optional[str] = None) -> PlanKey:
+                  exchange: Optional[str] = None,
+                  overlap: Optional[bool] = None) -> PlanKey:
+        ex = self.exchange if exchange is None else exchange
+        ov = self.overlap if overlap is None else overlap
         return PlanKey(graph_id=graph_id, kernel=kernel, mode=mode,
                        num_shards=self.num_shards, batch_size=batch_size,
                        backend=self.backend, version=version,
-                       exchange=(self.exchange if exchange is None
-                                 else exchange))
+                       exchange=ex, overlap=bool(ov and ex))
 
     def _dispatch(self, qclass: QueryClass, items: List[Any]) -> None:
         """Execute one formed batch: pad to the plan bucket, run, resolve
@@ -867,7 +936,10 @@ class GraphQueryService:
             lim = self._project_limits(ck)
             if lim is None:
                 continue
-            for term in ("L_PE", "L_mem", "L_if", "L_net", "T_sys"):
+            for term in ("L_PE", "L_mem", "L_if", "L_net", "T_sys",
+                         "T_serial", "T_overlap"):
+                if term not in lim or not np.isfinite(lim[term]):
+                    continue
                 reg.set_gauge(
                     "gravfm_model_limit_teps", float(lim[term]),
                     help="Perfmodel §5 limit terms (TEPS) per class",

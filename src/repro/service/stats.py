@@ -82,7 +82,13 @@ class ServiceStats:
         self._tenant_lat: Dict[str, collections.deque] = {}
         # per query-class key: EWMA of one superstep's wall time (ms) and
         # of supersteps-per-query — the service's cost model for deciding
-        # whether a deadline is still feasible given the backlog.
+        # whether a deadline is still feasible given the backlog. The
+        # depth table additionally holds per-root-degree-decile sub-keys
+        # ("<class>|d<decile>"): roots in different degree deciles have
+        # systematically different BFS/SSSP depths, so bucketing the
+        # EWMA sharpens depth packing and victim selection (PR 5
+        # follow-on). Lookups fall back to the plain class key until the
+        # bucket has been observed.
         self._step_ms_ewma: Dict[str, float] = {}
         self._depth_ewma: Dict[str, float] = {}
         # EWMA of |observed - predicted| supersteps per class: the
@@ -108,7 +114,12 @@ class ServiceStats:
         if acc is None:
             acc = self._class_acc[class_key] = {
                 "messages": 0.0, "busy_s": 0.0, "completed": 0.0,
-                "wire_words": 0.0}
+                "wire_words": 0.0,
+                # exchange overlap accounting (profiled shard steppers):
+                # exposed = wall the exchange actually spent on the
+                # critical path under the serving schedule; total = the
+                # same superstep's serial-reference exchange wall
+                "exposed_exchange_s": 0.0, "total_exchange_s": 0.0}
         return acc
 
     def record_batch(self, n_queries: int, n_pad: int, wall_s: float,
@@ -237,9 +248,16 @@ class ServiceStats:
                 self._ewma(self._step_ms_ewma, class_key,
                            wall_s * 1e3 / n_steps)
 
-    def record_query_depth(self, class_key: str, supersteps: int) -> None:
+    def record_query_depth(self, class_key: str, supersteps: int,
+                           bucket: Optional[str] = None) -> None:
+        """Observed supersteps for one retired query. ``bucket`` (e.g.
+        ``"d7"`` for a root in the 7th degree decile) additionally feeds
+        the per-bucket depth EWMA the admission predictor prefers."""
         with self._lock:
             self._ewma(self._depth_ewma, class_key, float(supersteps))
+            if bucket:
+                self._ewma(self._depth_ewma, f"{class_key}|{bucket}",
+                           float(supersteps))
 
     def record_depth_error(self, class_key: str, abs_err: float) -> None:
         """|observed - predicted| supersteps for one retired lane."""
@@ -252,12 +270,19 @@ class ServiceStats:
         with self._lock:
             return self._depth_err_ewma.get(class_key)
 
-    def class_cost_model(self, class_key: str):
+    def class_cost_model(self, class_key: str,
+                         bucket: Optional[str] = None):
         """(EWMA superstep wall ms, EWMA supersteps per query); either is
-        None until observed — admission control then admits everything."""
+        None until observed — admission control then admits everything.
+        When ``bucket`` is given the depth estimate prefers the
+        root-degree-decile sub-key, falling back to the class-wide EWMA
+        until that bucket has retired a query."""
         with self._lock:
-            return (self._step_ms_ewma.get(class_key),
-                    self._depth_ewma.get(class_key))
+            depth = (self._depth_ewma.get(f"{class_key}|{bucket}")
+                     if bucket else None)
+            if depth is None:
+                depth = self._depth_ewma.get(class_key)
+            return (self._step_ms_ewma.get(class_key), depth)
 
     # ---- preemption -----------------------------------------------------
     def record_preempt(self, wall_s: float) -> None:
@@ -296,6 +321,18 @@ class ServiceStats:
                 acc["messages"] += messages
                 acc["completed"] += 1
                 acc["wire_words"] += wire_words
+
+    def record_exchange_overlap(self, class_key: str, exposed_s: float,
+                                total_s: float) -> None:
+        """One profiled superstep's exchange walls: ``exposed_s`` is
+        what the serving schedule actually paid on the critical path,
+        ``total_s`` the serial-reference exchange wall for the same
+        superstep. Synchronous schedules record exposed == total; the
+        ratio surfaces as per-class ``overlap_efficiency``."""
+        with self._lock:
+            acc = self._class_acc_of(class_key)
+            acc["exposed_exchange_s"] += float(exposed_s)
+            acc["total_exchange_s"] += float(total_s)
 
     def record_deadline_miss(self, n: int = 1) -> None:
         """A query completed AFTER its deadline (counted where the
@@ -341,6 +378,13 @@ class ServiceStats:
                 "words_per_message": (ww / a["messages"]
                                       if a["messages"] > 0 else 0.0),
             }
+            te = a.get("total_exchange_s", 0.0)
+            # exposed/total exchange wall: 1.0 = fully synchronous (the
+            # exchange is entirely on the critical path), -> 0 = fully
+            # hidden behind local compute. None until a profiled
+            # superstep has fed the accumulators.
+            out[ck]["overlap_efficiency"] = (
+                a.get("exposed_exchange_s", 0.0) / te if te > 0 else None)
         return out
 
     # ------------------------------------------------------------------

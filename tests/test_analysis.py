@@ -359,6 +359,67 @@ def build():
         assert [f for f in RetracePass().run([sf])
                 if f.rule == "RTR004"] == []
 
+    def test_unrolled_collective_pipeline_fires(self, tmp_path):
+        # the double-buffer window index as a Python int: the ppermute
+        # pipeline unrolls at trace time
+        sf = src(tmp_path, """
+import jax
+
+def deliver(buf, perm):  # analysis: traced
+    acc = buf
+    for k in range(4):
+        buf = jax.lax.ppermute(buf, "graph", perm)
+        acc = acc + buf
+    return acc
+""")
+        fs = RetracePass().run([sf])
+        assert "RTR005" in rules(fs)
+
+    def test_fori_loop_pipeline_is_clean(self, tmp_path):
+        # the fixed pattern: window index in the fori_loop carry, the
+        # permutation *table* built with a comprehension
+        sf = src(tmp_path, """
+import jax
+
+def deliver(buf, P):  # analysis: traced
+    perm = [(i, (i + 1) % P) for i in range(P)]
+
+    def body(k, st):
+        acc, cur = st
+        nxt = jax.lax.ppermute(cur, "graph", perm)
+        return (acc + nxt, nxt)
+
+    return jax.lax.fori_loop(0, P, body, (buf, buf))
+""")
+        assert [f for f in RetracePass().run([sf])
+                if f.rule == "RTR005"] == []
+
+    def test_host_loop_collective_is_clean(self, tmp_path):
+        # a host function looping over jitted collective programs is
+        # not a traced scope — dispatch loops are fine
+        sf = src(tmp_path, """
+import jax
+
+def pump(progs, buf):
+    for p in progs:
+        buf = p(buf)
+    return buf
+""")
+        assert [f for f in RetracePass().run([sf])
+                if f.rule == "RTR005"] == []
+
+    def test_unrolled_collective_allow_comment(self, tmp_path):
+        sf = src(tmp_path, """
+import jax
+
+def deliver(buf, perm):  # analysis: traced
+    for k in range(2):  # analysis: allow(RTR005)
+        buf = jax.lax.ppermute(buf, "graph", perm)
+    return buf
+""")
+        assert [f for f in RetracePass().run([sf])
+                if f.rule == "RTR005"] == []
+
 
 # ---------------------------------------------------------------------------
 # taxonomy fixtures
@@ -649,6 +710,25 @@ class TestRepoTree:
         report = run_check(scratch)
         assert not report["ok"]
         assert any(f.rule == "RTR001" for f in report["new"])
+
+    def test_seeded_unrolled_collective_is_caught(self, scratch):
+        engine = (scratch / "src" / "repro" / "core"
+                  / "engine_shardmap.py")
+        text = engine.read_text()
+        # a pipelined deliver whose double-buffer window index is a
+        # Python int — the exact hazard the overlapped schedules must
+        # avoid (their window index lives in the fori_loop carry)
+        text += textwrap.dedent("""
+
+        def _seeded_pipeline(buf, perm):  # analysis: traced
+            for win in range(4):
+                buf = jax.lax.ppermute(buf, "graph", perm)
+            return buf
+        """)
+        engine.write_text(text)
+        report = run_check(scratch)
+        assert not report["ok"]
+        assert any(f.rule == "RTR005" for f in report["new"])
 
     def test_seeded_unknown_kind_is_caught(self, scratch):
         registry = scratch / "src" / "repro" / "store" / "registry.py"

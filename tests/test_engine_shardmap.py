@@ -138,3 +138,82 @@ def test_shardmap_engine_multidevice():
                           capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "SHARDMAP-SUBPROCESS-OK" in proc.stdout
+
+
+_OVERLAP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, {src!r})
+import numpy as np
+from repro.core import graph as G, partition as PT, algorithms as ALG
+from repro.core.engine import Engine
+from repro.core.engine_shardmap import ShardEngine
+from repro.launch.mesh import compat_make_mesh
+
+mesh = compat_make_mesh((8,), ("graph",))
+# weighted so SSSP exercises the lexicographic (dist, parent) carry
+# through the windowed pipeline's per-window merge
+gw = G.uniform(300, 6.0, seed=3, weighted=True).symmetrized()
+pg = PT.partition_graph(gw, 8, method="greedy", pad_multiple=16)
+
+for name, kern in (("bfs", ALG.bfs(0)), ("sssp", ALG.sssp(0))):
+    ref = Engine(kern, pg, mode="gravfm", backend="ref").run()
+    for exch in ("allgather", "ring", "frontier", "unicast", "combined"):
+        se = ShardEngine(kern, pg, mesh=mesh, exchange=exch,
+                         backend="ref")
+        sync = se.run()
+        ov = se.run(overlap=True)
+        warm = se.traces
+        # steady state AND per-run toggling re-trace nothing: both
+        # programs share the engine's device graph
+        se.run(overlap=True); se.run(); se.run(overlap=True)
+        assert se.traces == warm, (name, exch, "re-traced")
+        for s in sync["state"]:
+            a, b = np.asarray(sync["state"][s]), np.asarray(ov["state"][s])
+            assert np.array_equal(a, b, equal_nan=True), (name, exch, s)
+            assert np.array_equal(
+                b, np.asarray(ref.state[s]), equal_nan=True), (name, exch, s)
+        assert ov["supersteps"] == sync["supersteps"] == ref.supersteps, (
+            name, exch)
+        assert ov["messages"] == sync["messages"] == ref.messages, (
+            name, exch)
+
+# service level: per-request overlap toggling at steady state re-traces
+# nothing once both plans are warm
+from repro.service import GraphQueryService, QueryRequest
+svc = GraphQueryService(num_shards=4, exchange="combined",
+                        scheduling="continuous", slots=4)
+svc.add_graph("g", gw)
+svc.warm("g", "bfs")
+svc.warm("g", "bfs", overlap=True)
+t0 = svc.stats_snapshot()["plan_traces"]
+base = None
+for i in range(8):
+    req = QueryRequest("g", "bfs", {{"root": (i // 2) % 3}},
+                       deadline_ms=1e9, overlap=(i % 2 == 1))
+    fut = svc.submit(req)
+    svc.flush()
+    res = fut.result()
+    if i % 2 == 0:
+        base = res
+    else:
+        assert np.array_equal(res.state["parent"], base.state["parent"])
+        assert res.supersteps == base.supersteps
+assert svc.stats_snapshot()["plan_traces"] == t0, "service re-traced"
+print("SHARDMAP-OVERLAP-OK")
+"""
+
+
+@pytest.mark.slow
+def test_shardmap_overlap_multidevice():
+    """Pipelined (overlapped) exchange schedules: bit-identical to the
+    synchronous schedules and the global-array engine for all five
+    exchanges x {BFS, SSSP}, with zero re-traces when toggling overlap
+    per run — and per request through the serving stack."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = _OVERLAP_SCRIPT.format(src=os.path.abspath(src))
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDMAP-OVERLAP-OK" in proc.stdout
